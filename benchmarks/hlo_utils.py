@@ -1,0 +1,291 @@
+"""Trip-count-aware accounting of FLOPs and collective bytes from HLO text.
+
+Why not `compiled.cost_analysis()`: XLA's HLO cost analysis counts each
+while-loop *body once*, but every model here wraps its depth (and
+microbatches, and KV chunks) in `lax.scan` — so raw cost numbers are off by
+the product of trip counts (measured ~1000x for deep scanned models).  This
+module parses the post-SPMD HLO, builds the computation call graph, and
+multiplies while bodies by their trip count, read from the loop's
+`backend_config={"known_trip_count":{"n":...}}` (with the condition
+computation's comparison constant as fallback).
+
+Accounted per computation, then propagated through the call graph:
+  - dot FLOPs: 2 * prod(output dims) * prod(lhs contracting dim sizes),
+    looking operand shapes up in a per-module symbol table (post-SPMD HLO
+    does not annotate operand shapes inline).  Elementwise VPU flops are
+    excluded (noted in EXPERIMENTS.md §Roofline — matmuls dominate).
+  - collective bytes: all-reduce / all-gather / reduce-scatter /
+    all-to-all / collective-permute; max(output, operand) bytes.
+
+Post-partitioning shapes are per-device, so totals are per-chip.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+__all__ = ["analyze_hlo", "parse_collectives", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->")
+_LINE_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+# First " op(" occurrence in the RHS is the opcode: tuple result shapes
+# (with /*index=N*/ comments) never contain "word(" sequences.
+_OPCODE_RE = re.compile(r"\s([\w\-]+)\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"?(\d+)"?\}')
+
+
+def _split_op_line(line: str):
+    """-> (result_name, result_shape_str, opcode, full_line) or None."""
+    m = _LINE_RE.match(line)
+    if not m:
+        return None
+    name, rhs = m.groups()
+    om = _OPCODE_RE.search(" " + rhs)
+    if not om:
+        return None
+    shape_str = rhs[: max(om.start() - 1, 0)]
+    return name, shape_str, om.group(1), line.strip()
+
+
+def _prod(xs):
+    n = 1
+    for x in xs:
+        n *= x
+    return n
+
+
+def _shape_dims(shape_str: str):
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        yield dtype, [int(d) for d in dims.split(",") if d]
+
+
+def _shape_bytes(s: str) -> int:
+    return sum(DTYPE_BYTES[dt] * _prod(d) for dt, d in _shape_dims(s))
+
+
+@dataclass
+class _Comp:
+    name: str
+    dot_flops: float = 0.0
+    coll: dict = field(default_factory=lambda: defaultdict(float))
+    calls: list = field(default_factory=list)  # (kind, callee, cond, trips)
+    cond_const: int = 1
+    mem_bytes: float = 0.0      # top-level op traffic (out + operands)
+
+
+# Ops that move no HBM traffic themselves (or whose traffic is accounted by
+# their called computation: while/conditional).  `copy` is excluded because
+# the CPU backend's loop double-buffering inserts full-buffer copies every
+# iteration that the TPU pipeline elides/aliases (measured ~50x traffic
+# inflation on deep scanned models; EXPERIMENTS.md §Roofline method notes).
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "after-all", "add-dependency", "domain",
+    "partition-id", "replica-id", "copy",
+}
+
+
+def _split_computations(text: str):
+    comps: dict[str, tuple[str, list[str]]] = {}
+    cur: list[str] | None = None
+    name = None
+    entry = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _HEADER_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                name = m.group(2)
+                if m.group(1):
+                    entry = name
+                cur = []
+                comps[name] = (m.group(3), cur)
+        else:
+            if line.strip() == "}":
+                cur = None
+            else:
+                cur.append(line)
+    return comps, entry
+
+
+_PARAM_RE = re.compile(r"%?([\w\.\-]+)\s*:\s*([\w\[\],\{\} ()]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _parse_comp(name: str, header_params: str, lines: list[str],
+                inplace_comps: frozenset = frozenset()) -> _Comp:
+    comp = _Comp(name)
+    symbols: dict[str, str] = {}
+    for pm in _PARAM_RE.finditer(header_params):
+        symbols[pm.group(1)] = pm.group(2)
+    ops = []
+    for line in lines:
+        parsed = _split_op_line(line)
+        if parsed is None:
+            continue
+        res_name, res_shape, op, s = parsed
+        symbols[res_name] = res_shape
+        ops.append((res_name, res_shape, op, s))
+    max_const = 1
+    for res_name, res_shape, op, s in ops:
+        cm = re.search(r"constant\((\d+)\)", s)
+        if cm:
+            max_const = max(max_const, int(cm.group(1)))
+        if op == "dot":
+            out_elems = sum(_prod(d) for _, d in _shape_dims(res_shape))
+            args = s[s.index("(") + 1 :].split(")")[0]
+            operands = [a.strip().lstrip("%") for a in args.split(",")]
+            lhs_shape = symbols.get(operands[0], "") if operands else ""
+            lhs_dims_list = list(_shape_dims(lhs_shape))
+            lhs_dims = lhs_dims_list[0][1] if lhs_dims_list else []
+            contract = 1
+            dm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", s)
+            if dm and dm.group(1):
+                for i in dm.group(1).split(","):
+                    idx = int(i)
+                    if idx < len(lhs_dims):
+                        contract *= lhs_dims[idx]
+            comp.dot_flops += 2.0 * out_elems * contract
+        elif op == "convolution":
+            out_elems = sum(_prod(d) for _, d in _shape_dims(res_shape))
+            comp.dot_flops += 2.0 * out_elems
+        base = op
+        for suffix in ("-start", "-done"):
+            if base.endswith(suffix):
+                base = base[: -len(suffix)]
+        if base in _COLLECTIVES and not op.endswith("-done"):
+            out_b = _shape_bytes(res_shape)
+            in_b = 0
+            if base == "reduce-scatter":
+                args = s[s.index("(") + 1 :].split(")")[0]
+                for a in args.split(","):
+                    in_b += _shape_bytes(symbols.get(a.strip().lstrip("%"), ""))
+            comp.coll[base] += max(out_b, in_b)
+        # HBM traffic estimate: post-fusion top-level ops are the kernel
+        # boundaries — each reads its operands and writes its result.
+        # Slicing ops touch only the slice, not the (in-place) big buffer.
+        if base not in _NO_TRAFFIC and not op.endswith("-done"):
+            ops_args = []
+            if "(" in s:
+                args = s[s.index("(") + 1 :].split(")")[0]
+                ops_args = [a.strip().lstrip("%") for a in args.split(",")]
+            callee_m = _CALLS_RE.search(s) if op == "fusion" else None
+            callee = callee_m.group(1) if callee_m else None
+            if op == "dynamic-update-slice" and len(ops_args) > 1:
+                upd = symbols.get(ops_args[1], "")
+                comp.mem_bytes += 2 * _shape_bytes(upd)
+            elif op in ("dynamic-slice", "slice"):
+                comp.mem_bytes += 2 * _shape_bytes(res_shape)
+            elif callee is not None and callee in inplace_comps:
+                # Fusions containing dynamic-(update-)slice touch only the
+                # slice of their big buffer (aliased / gathered lazily on
+                # TPU): bill the output and the operands that are not the
+                # sliced buffer itself.
+                out_b = _shape_bytes(res_shape)
+                comp.mem_bytes += out_b
+                for a in ops_args:
+                    ab = _shape_bytes(symbols.get(a, ""))
+                    if ab <= out_b:
+                        comp.mem_bytes += ab
+            else:
+                traffic = _shape_bytes(res_shape)
+                for a in ops_args:
+                    traffic += _shape_bytes(symbols.get(a, ""))
+                comp.mem_bytes += traffic
+        if op == "while":
+            body = re.search(r"body=%?([\w\.\-]+)", s)
+            cond = re.search(r"condition=%?([\w\.\-]+)", s)
+            tm = _TRIP_RE.search(s)
+            trips = int(tm.group(1)) if tm else None
+            if body:
+                comp.calls.append(
+                    ("__while__", body.group(1), cond.group(1) if cond else None, trips)
+                )
+        else:
+            for cm2 in _CALLS_RE.finditer(s):
+                comp.calls.append(("__call__", cm2.group(1), None, 1))
+            bm = _BRANCHES_RE.search(s)
+            if bm:
+                for callee in re.split(r",\s*", bm.group(1)):
+                    callee = callee.strip().lstrip("%")
+                    if callee:
+                        comp.calls.append(("__call__", callee, None, 1))
+    comp.cond_const = max_const
+    return comp
+
+
+def analyze_hlo(text: str) -> dict:
+    raw, entry = _split_computations(text)
+    inplace = frozenset(
+        n for n, (_, ls) in raw.items()
+        if any("dynamic-update-slice" in l or "dynamic-slice" in l
+               or " slice(" in l for l in ls)
+    )
+    comps = {n: _parse_comp(n, hp, ls, inplace) for n, (hp, ls) in raw.items()}
+    if entry is None and comps:
+        entry = list(comps)[-1]
+
+    memo: dict[str, tuple[float, dict, float]] = {}
+    trips_seen: list[int] = []
+
+    def visit(name: str, stack=()):
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return 0.0, {}, 0.0
+        comp = comps[name]
+        flops = comp.dot_flops
+        coll = defaultdict(float, comp.coll)
+        mem = comp.mem_bytes
+        for kind, callee, cond, trips in comp.calls:
+            cf, cc, cm = visit(callee, stack + (name,))
+            mult = 1
+            if kind == "__while__":
+                if trips is not None:
+                    mult = trips
+                elif cond and cond in comps:
+                    mult = comps[cond].cond_const
+                trips_seen.append(mult)
+            flops += cf * mult
+            for k, v in cc.items():
+                coll[k] += v * mult
+            # Memory traffic: recurse only through control flow — fusion /
+            # call computations are single kernels whose traffic is already
+            # accounted at the call site.
+            if kind == "__while__":
+                mem += cm * mult
+        memo[name] = (flops, dict(coll), mem)
+        return memo[name]
+
+    flops, coll, mem = visit(entry) if entry else (0.0, {}, 0.0)
+    coll = dict(coll)
+    coll["total"] = sum(v for k, v in coll.items() if k in _COLLECTIVES)
+    return {
+        "flops": flops,
+        "collectives": coll,
+        "hbm_bytes": mem,
+        "while_trip_counts": trips_seen,
+    }
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Collective bytes with while-trip multiplication (see analyze_hlo)."""
+    out = analyze_hlo(hlo_text)["collectives"]
+    out.setdefault("total", 0.0)
+    return out

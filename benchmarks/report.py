@@ -1,0 +1,157 @@
+"""Render EXPERIMENTS.md tables from benchmark artifacts.
+
+Fills the `<!-- *_TABLE -->` placeholders in EXPERIMENTS.md in place:
+    python -m benchmarks.report
+Idempotent: each placeholder's content is regenerated between marker lines.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.roofline import ARTIFACTS, analyze, load_cells
+
+ROOT = Path(__file__).resolve().parents[1]
+EXPERIMENTS = ROOT / "EXPERIMENTS.md"
+
+ALGOS = ("fastkmeans++", "rejection", "kmeans++", "afkmc2", "uniform")
+
+
+def seeding_speed_table() -> str:
+    path = ARTIFACTS / "seeding_results.json"
+    if not path.exists():
+        return "_(seeding benchmark not yet run)_"
+    results = json.loads(path.read_text())
+    out = []
+    for res in results:
+        ks = res["ks"]
+        base = res["algos"]["fastkmeans++"]["seconds"]
+        bget = lambda k: base.get(str(k), base.get(k))
+        out.append(f"**{res['dataset']}** (n={res['n']:,}, d={res['d']}) — "
+                   "absolute seconds, then ratio to FASTK-MEANS++:\n")
+        out.append("| algorithm |" + "".join(f" k={k} |" for k in ks))
+        out.append("|---|" + "---|" * len(ks))
+        for algo in ALGOS:
+            if algo == "uniform":
+                continue
+            sec = res["algos"][algo]["seconds"]
+            get = lambda k: sec.get(str(k), sec.get(k))
+            out.append(f"| {algo} (s) |" + "".join(
+                f" {get(k):.2f} |" for k in ks))
+        for algo in ALGOS:
+            if algo == "uniform":
+                continue
+            sec = res["algos"][algo]["seconds"]
+            get = lambda k: sec.get(str(k), sec.get(k))
+            out.append(f"| {algo} (×fast) |" + "".join(
+                f" {get(k)/max(bget(k),1e-9):.2f}x |" for k in ks))
+        out.append("")
+    return "\n".join(out)
+
+
+def seeding_quality_table() -> str:
+    path = ARTIFACTS / "seeding_results.json"
+    if not path.exists():
+        return "_(seeding benchmark not yet run)_"
+    results = json.loads(path.read_text())
+    out = []
+    for res in results:
+        ks = res["ks"]
+        out.append(f"**{res['dataset']}** seeding cost (mean over trials):\n")
+        out.append("| algorithm |" + "".join(f" k={k} |" for k in ks))
+        out.append("|---|" + "---|" * len(ks))
+        for algo in ALGOS:
+            c = res["algos"][algo]["cost"]
+            get = lambda k: c.get(str(k), c.get(k))
+            out.append(f"| {algo} |" + "".join(f" {get(k):.4g} |" for k in ks))
+        out.append("")
+        out.append(f"variance over trials:\n")
+        out.append("| algorithm |" + "".join(f" k={k} |" for k in ks))
+        out.append("|---|" + "---|" * len(ks))
+        for algo in ALGOS:
+            v = res["algos"][algo]["var"]
+            get = lambda k: v.get(str(k), v.get(k))
+            out.append(f"| {algo} |" + "".join(f" {get(k):.3g} |" for k in ks))
+        rej = res["algos"]["rejection"].get("trials_per_center", {})
+        if rej:
+            get = lambda k: rej.get(str(k), rej.get(k))
+            out.append("")
+            out.append("| rejection trials/center |" + "".join(
+                f" {get(k):.1f} |" for k in ks))
+        out.append("")
+    return "\n".join(out)
+
+
+def dryrun_table(mesh: str) -> str:
+    out = ["| arch | shape | status | compile(s) | temp GiB/dev | "
+           "args GiB/dev | HLO flops/dev | coll B/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for rec in load_cells(mesh):
+        if rec.get("status") == "OK":
+            mem = rec.get("memory_analysis", {})
+            out.append(
+                f"| {rec['arch']} | {rec['shape']} | OK | "
+                f"{rec.get('compile_seconds', 0):.1f} | "
+                f"{mem.get('temp_size_in_bytes', 0)/2**30:.1f} | "
+                f"{mem.get('argument_size_in_bytes', 0)/2**30:.2f} | "
+                f"{rec.get('hlo_flops', 0):.2e} | "
+                f"{rec.get('collectives', {}).get('total', 0):.2e} |"
+            )
+        else:
+            why = rec.get("reason", "")[:48]
+            out.append(f"| {rec['arch']} | {rec['shape']} | "
+                       f"{rec.get('status')} | — | — | — | — | {why} |")
+    return "\n".join(out)
+
+
+def roofline_table(mesh: str = "pod") -> str:
+    out = ["| arch | shape | t_comp(s) | t_mem(s) | t_coll(s) | bound | "
+           "useful | roofline |",
+           "|---|---|---|---|---|---|---|---|"]
+    for rec in load_cells(mesh):
+        a = analyze(rec)
+        if a is None:
+            continue
+        out.append(
+            f"| {a['arch']} | {a['shape']} | {a['t_compute']:.3f} | "
+            f"{a['t_memory']:.3f} | {a['t_collective']:.3f} | "
+            f"{a['bottleneck']} | {a['useful_ratio']:.3f} | "
+            f"{100*a['roofline_fraction']:.1f}% |"
+        )
+    return "\n".join(out)
+
+
+MARKERS = {
+    "SEEDING_SPEED_TABLE": seeding_speed_table,
+    "SEEDING_QUALITY_TABLE": seeding_quality_table,
+    "DRYRUN_TABLE": lambda: dryrun_table("pod") + "\n\n(multipod table: same "
+    "cells at 512 chips — see artifacts; per-device numbers halve for "
+    "DP-dominant cells.)",
+    "ROOFLINE_TABLE": roofline_table,
+}
+
+
+def main():
+    text = EXPERIMENTS.read_text()
+    for marker, fn in MARKERS.items():
+        tag = f"<!-- {marker} -->"
+        end_tag = f"<!-- /{marker} -->"
+        content = f"{tag}\n{fn()}\n{end_tag}"
+        if end_tag in text:
+            import re
+
+            text = re.sub(
+                re.escape(tag) + r".*?" + re.escape(end_tag),
+                content.replace("\\", "\\\\"),
+                text,
+                flags=re.S,
+            )
+        else:
+            text = text.replace(tag, content)
+    EXPERIMENTS.write_text(text)
+    print("EXPERIMENTS.md tables refreshed")
+
+
+if __name__ == "__main__":
+    main()

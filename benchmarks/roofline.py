@@ -1,0 +1,151 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, from `benchmarks/artifacts/*.json`:
+
+    compute term    = HLO_FLOPs_per_chip   / PEAK_FLOPS      (197 TF/s bf16)
+    memory term     = HBM_bytes_per_chip   / HBM_BW          (819 GB/s)
+    collective term = coll_bytes_per_chip  / ICI_BW          (50 GB/s/link)
+
+HLO quantities are the trip-count-corrected per-device totals from
+`hlo_utils.analyze_hlo` (see that module for why XLA's own cost analysis
+cannot be used directly).  MODEL_FLOPS uses the assignment's convention:
+6*N*D for training (N = active params, D = tokens), 2*N*D for
+prefill/decode; attention FLOPs are excluded by that convention, so
+long-context cells legitimately show MODEL/HLO < 1 even without waste.
+
+Usage: python -m benchmarks.roofline [--mesh pod] [--csv]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12       # TPU v5e bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
+
+
+def model_flops_per_device(arch: str, record: dict) -> float:
+    """Useful-FLOPs convention: 6*N_active*D train, 2*N_active*D inference."""
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config(arch)
+    shape = SHAPES[record["shape"]]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return total / record.get("num_devices", 256)
+
+
+def load_cells(mesh: str) -> list[dict]:
+    cells = []
+    for path in sorted(ARTIFACTS.glob(f"*__{mesh}.json")):
+        rec = json.loads(path.read_text())
+        cells.append(rec)
+    return cells
+
+
+def analyze(rec: dict) -> dict | None:
+    if rec.get("status") != "OK":
+        return None
+    flops = rec.get("hlo_flops", 0.0)
+    mem = rec.get("hbm_bytes", 0.0)
+    coll = rec.get("collectives", {}).get("total", 0.0)
+    t_c = flops / PEAK_FLOPS
+    t_m = mem / HBM_BW
+    t_x = coll / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec["arch"], rec)
+    step_time = max(t_c, t_m, t_x)  # no-overlap upper bound per step
+    mfu = (mf / PEAK_FLOPS) / step_time if step_time > 0 else 0.0
+    return {
+        **rec,
+        "t_compute": t_c,
+        "t_memory": t_m,
+        "t_collective": t_x,
+        "bottleneck": bottleneck,
+        "model_flops": mf,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "roofline_fraction": mfu,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod", choices=("pod", "multipod"))
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args(argv)
+
+    rows = []
+    for rec in load_cells(args.mesh):
+        a = analyze(rec)
+        if a is None:
+            rows.append((rec["arch"], rec["shape"], rec.get("status"),
+                         rec.get("reason", rec.get("error", ""))[:60]))
+            continue
+        rows.append(a)
+
+    if args.csv:
+        print("arch,shape,mesh,t_compute,t_memory,t_collective,bottleneck,"
+              "model_flops,hlo_flops,useful_ratio,roofline_fraction")
+        for r in rows:
+            if isinstance(r, dict):
+                print(f"{r['arch']},{r['shape']},{r['mesh']},"
+                      f"{r['t_compute']:.4e},{r['t_memory']:.4e},"
+                      f"{r['t_collective']:.4e},{r['bottleneck']},"
+                      f"{r['model_flops']:.4e},{r['hlo_flops']:.4e},"
+                      f"{r['useful_ratio']:.3f},{r['roofline_fraction']:.3f}")
+        return
+
+    hdr = (f"{'arch':24s} {'shape':12s} {'t_comp(s)':>10s} {'t_mem(s)':>10s} "
+           f"{'t_coll(s)':>10s} {'bound':>10s} {'useful':>7s} {'roofl%':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if isinstance(r, dict):
+            print(f"{r['arch']:24s} {r['shape']:12s} {r['t_compute']:10.4f} "
+                  f"{r['t_memory']:10.4f} {r['t_collective']:10.4f} "
+                  f"{r['bottleneck']:>10s} {r['useful_ratio']:7.3f} "
+                  f"{100*r['roofline_fraction']:6.1f}%")
+        else:
+            print(f"{r[0]:24s} {r[1]:12s} {r[2]}: {r[3]}")
+
+
+if __name__ == "__main__":
+    main()
+
+
+def reanalyze(mesh: str = "pod"):
+    """Refresh artifact JSONs from the saved .hlo.gz (no recompilation)."""
+    import gzip
+    import json as _json
+
+    from benchmarks.hlo_utils import analyze_hlo
+
+    n = 0
+    for path in sorted(ARTIFACTS.glob(f"*__{mesh}*.json")):
+        hlo_path = path.with_suffix("").with_suffix("")  # strip .json
+        hlo_path = Path(str(path)[: -len(".json")] + ".hlo.gz")
+        if not hlo_path.exists():
+            continue
+        rec = _json.loads(path.read_text())
+        if rec.get("status") != "OK":
+            continue
+        hlo = analyze_hlo(gzip.decompress(hlo_path.read_bytes()).decode())
+        rec.update(hlo_flops=hlo["flops"], hbm_bytes=hlo["hbm_bytes"],
+                   collectives=hlo["collectives"],
+                   while_trip_counts=hlo["while_trip_counts"])
+        path.write_text(_json.dumps(rec, indent=2))
+        n += 1
+    print(f"reanalyzed {n} artifacts for mesh={mesh}")

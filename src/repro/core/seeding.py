@@ -1,0 +1,339 @@
+"""Seeding algorithms: the paper's two (FastKMeans++, RejectionSampling) and
+the baselines it compares against (exact k-means++, AFK-MC^2, uniform).
+
+All functions share the signature
+    ``seed_fn(points, k, rng, **kwargs) -> SeedingResult``
+and are registered in ``SEEDERS`` so benchmarks/examples select them by name.
+
+These are the *faithful* CPU implementations used for the wall-clock
+reproduction of Tables 1-3 (the paper's own experiments ran on "a standard
+desktop computer").  The TPU-native vectorised seeder lives in
+`repro.core.device_seeding` and is cross-checked against these in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.lsh import MonotoneLSH
+from repro.core.multitree import MultiTreeSampler
+
+__all__ = [
+    "SeedingResult",
+    "kmeanspp",
+    "fast_kmeanspp",
+    "rejection_sampling",
+    "afkmc2",
+    "uniform_sampling",
+    "SEEDERS",
+    "clustering_cost",
+]
+
+
+@dataclasses.dataclass
+class SeedingResult:
+    centers: np.ndarray          # (k, d) chosen center coordinates.
+    indices: np.ndarray          # (k,) indices into the input point set.
+    seconds: float               # wall-clock seeding time.
+    num_candidates: int = 0      # rejection loop iterations (paper Lemma 5.3).
+    extras: dict = dataclasses.field(default_factory=dict)
+
+
+def clustering_cost(
+    points: np.ndarray, centers: np.ndarray, chunk: int = 65536
+) -> float:
+    """sum_x min_c ||x - c||^2, chunked BLAS (exact, float64)."""
+    pts = np.asarray(points, dtype=np.float64)
+    ctr = np.asarray(centers, dtype=np.float64)
+    c_sq = (ctr ** 2).sum(axis=1)
+    total = 0.0
+    for lo in range(0, len(pts), chunk):
+        x = pts[lo : lo + chunk]
+        d2 = (x ** 2).sum(axis=1)[:, None] - 2.0 * (x @ ctr.T) + c_sq[None, :]
+        total += float(np.maximum(d2.min(axis=1), 0.0).sum())
+    return total
+
+
+def _min_d2_update(points, pts_sq, center, d2):
+    """d2 <- min(d2, ||x - center||^2) for all points; one BLAS pass."""
+    cand = pts_sq - 2.0 * (points @ center) + center @ center
+    np.minimum(d2, cand, out=d2)
+    np.maximum(d2, 0.0, out=d2)
+
+
+def _estimate_scale(pts: np.ndarray, rng: np.random.Generator) -> float:
+    """Appendix-F quantisation scale (one grid unit) for *unquantised* input.
+
+    Mirrors `preprocess.quantize`: rough 20-center uniform solution cost =>
+    per-coordinate error budget sqrt(cost / (n d)) / 200.  Estimated on a
+    subsample for O(1) cost.
+    """
+    n, d = pts.shape
+    sub = pts if n <= 20000 else pts[rng.choice(n, 20000, replace=False)]
+    ctr = sub[rng.choice(len(sub), min(20, len(sub)), replace=False)]
+    c_sq = (ctr ** 2).sum(axis=1)
+    d2 = (sub ** 2).sum(axis=1)[:, None] - 2.0 * (sub @ ctr.T) + c_sq[None, :]
+    est = float(np.maximum(d2.min(axis=1), 0.0).mean())  # per-point cost
+    if est <= 0:
+        return 1.0
+    return float(np.sqrt(est / d) / 200.0)
+
+
+# ---------------------------------------------------------------------------
+# Baseline: exact k-means++ (Arthur & Vassilvitskii 2007).  Theta(ndk).
+# ---------------------------------------------------------------------------
+
+def kmeanspp(
+    points: np.ndarray, k: int, rng: np.random.Generator, **_
+) -> SeedingResult:
+    t0 = time.perf_counter()
+    pts = np.asarray(points, dtype=np.float64)
+    n = len(pts)
+    pts_sq = (pts ** 2).sum(axis=1)
+    chosen = np.empty(k, dtype=np.int64)
+    chosen[0] = rng.integers(n)
+    d2 = np.full(n, np.inf)
+    _min_d2_update(pts, pts_sq, pts[chosen[0]], d2)
+    for i in range(1, k):
+        total = d2.sum()
+        if total <= 0:  # fewer distinct points than k: fall back to uniform
+            chosen[i] = rng.integers(n)
+        else:
+            u = rng.uniform(0.0, total)
+            chosen[i] = int(np.searchsorted(np.cumsum(d2), u))
+        _min_d2_update(pts, pts_sq, pts[chosen[i]], d2)
+    return SeedingResult(
+        centers=pts[chosen].copy(),
+        indices=chosen,
+        seconds=time.perf_counter() - t0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Paper Algorithm 3: FASTK-MEANS++ (D^2 sampling in the multi-tree metric).
+# ---------------------------------------------------------------------------
+
+def fast_kmeanspp(
+    points: np.ndarray,
+    k: int,
+    rng: np.random.Generator,
+    *,
+    resolution: Optional[float] = None,
+    sampler: Optional[MultiTreeSampler] = None,
+    **_,
+) -> SeedingResult:
+    t0 = time.perf_counter()
+    pts = np.asarray(points, dtype=np.float64)
+    mt = sampler or MultiTreeSampler(pts, seed=int(rng.integers(2 ** 31)),
+                                     resolution=resolution)
+    chosen = np.empty(k, dtype=np.int64)
+    for i in range(k):
+        x = int(rng.integers(mt.n)) if i == 0 else mt.sample(rng)
+        chosen[i] = x
+        mt.open(x)
+    return SeedingResult(
+        centers=pts[chosen].copy(),
+        indices=chosen,
+        seconds=time.perf_counter() - t0,
+        num_candidates=k,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Paper Algorithm 4: REJECTIONSAMPLING (multi-tree proposal + LSH-corrected
+# acceptance => within c^2 of the true D^2 distribution).
+# ---------------------------------------------------------------------------
+
+def rejection_sampling(
+    points: np.ndarray,
+    k: int,
+    rng: np.random.Generator,
+    *,
+    c: float = 1.2,
+    lsh_r: Optional[float] = None,
+    num_tables: int = 15,
+    hashes_per_table: int = 1,
+    resolution: Optional[float] = None,
+    max_trials_factor: int = 4096,
+    batch: int = 512,
+    **_,
+) -> SeedingResult:
+    """Algorithm 4.  Accept candidate x with prob
+    ``dist(x, Query(x))^2 / (c^2 * MultiTreeDist(x, S)^2)``.
+
+    Batched speculative rejection (DESIGN.md §3): candidates are i.i.d. draws
+    from the *current* multi-tree D^2 distribution, so we draw a block of
+    `batch` candidates + uniforms at once, evaluate all acceptance tests
+    vectorised, and open the first accepted candidate — discarding the rest
+    of the block (their distribution would change after the open).  This
+    preserves the sequential distribution exactly while amortising sampling
+    and LSH-hashing costs over the block.
+
+    `max_trials_factor * k` bounds the total loop count as a safety net (the
+    expectation is O(c^2 d^2 k), Lemma 5.3).
+    """
+    t0 = time.perf_counter()
+    pts = np.asarray(points, dtype=np.float64)
+    n, d = pts.shape
+    mt = MultiTreeSampler(pts, seed=int(rng.integers(2 ** 31)),
+                          resolution=resolution)
+    if lsh_r is None:
+        # One scale with collision width 10 grid units (App. D.3).  When the
+        # input is already Appendix-F-quantised, `resolution` is that grid;
+        # otherwise estimate the equivalent scale the same way.
+        lsh_r = 10.0 * (resolution or _estimate_scale(pts, rng))
+    lsh = MonotoneLSH(
+        d,
+        r=lsh_r,
+        num_tables=num_tables,
+        hashes_per_table=hashes_per_table,
+        seed=int(rng.integers(2 ** 31)),
+        capacity=max(k, 16),
+    )
+    chosen = np.empty(k, dtype=np.int64)
+    c2 = float(c) ** 2
+    trials = 0
+    max_trials = max_trials_factor * k + 64
+
+    # First center: uniform, acceptance probability one (paper, Line 5 note).
+    x0 = int(rng.integers(n))
+    chosen[0] = x0
+    mt.open(x0)
+    lsh.insert(pts[x0])
+    trials += 1
+
+    opened = 1
+    chunk = 64  # LSH-evaluation granularity within a speculative batch
+    while opened < k and trials < max_trials:
+        # Draw a large block of i.i.d. candidates from the *current*
+        # distribution in one vectorised sweep, but evaluate the acceptance
+        # tests lazily in chunks so an early accept wastes no LSH work.
+        cand = mt.sample_batch(rng, batch)
+        us = rng.uniform(size=batch)
+        hit = -1
+        for lo in range(0, batch, chunk):
+            sl = slice(lo, lo + chunk)
+            _, d2_lsh = lsh.query_batch(pts[cand[sl]])
+            mtd2 = mt.weights[cand[sl]]
+            ok = mtd2 > 0.0
+            p_accept = np.where(ok, d2_lsh / np.maximum(c2 * mtd2, 1e-300), 0.0)
+            accepted = us[sl] < p_accept
+            if accepted.any():
+                hit = lo + int(np.argmax(accepted))
+                break
+        if hit < 0:
+            trials += batch
+            continue
+        trials += hit + 1
+        x = int(cand[hit])
+        chosen[opened] = x
+        opened += 1
+        mt.open(x)
+        lsh.insert(pts[x])
+    if opened < k:
+        # Safety net: finish with exact D^2 draws from the multi-tree weights
+        # (keeps the result well-defined on adversarial inputs).
+        while opened < k:
+            x = mt.sample(rng)
+            chosen[opened] = x
+            opened += 1
+            mt.open(x)
+            lsh.insert(pts[x])
+    return SeedingResult(
+        centers=pts[chosen].copy(),
+        indices=chosen,
+        seconds=time.perf_counter() - t0,
+        num_candidates=trials,
+        extras={"trials_per_center": trials / k},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Baseline: AFK-MC^2 (Bachem et al. 2016) — MCMC approximate D^2 seeding.
+# ---------------------------------------------------------------------------
+
+def afkmc2(
+    points: np.ndarray,
+    k: int,
+    rng: np.random.Generator,
+    *,
+    m: int = 200,
+    **_,
+) -> SeedingResult:
+    """Assumption-free k-MC^2 with chain length m (paper baseline, m=200).
+
+    Proposal q(x) = 0.5 * d(x, c1)^2 / sum + 0.5 / n; each of the k-1 rounds
+    runs an m-step Metropolis-Hastings chain.  Distances of the m candidates
+    to the current center set are one (m x |S|) BLAS call per round, so the
+    Omega(k^2) term is a matmul, not a Python loop.
+    """
+    t0 = time.perf_counter()
+    pts = np.asarray(points, dtype=np.float64)
+    n = len(pts)
+    pts_sq = (pts ** 2).sum(axis=1)
+    c0 = int(rng.integers(n))
+    d2_c0 = pts_sq - 2.0 * (pts @ pts[c0]) + pts[c0] @ pts[c0]
+    np.maximum(d2_c0, 0.0, out=d2_c0)
+    q = 0.5 * d2_c0 / max(d2_c0.sum(), 1e-300) + 0.5 / n
+    q /= q.sum()
+    chosen = np.empty(k, dtype=np.int64)
+    chosen[0] = c0
+    centers = np.empty((k, pts.shape[1]))
+    centers[0] = pts[c0]
+    centers_sq = np.empty(k)
+    centers_sq[0] = pts[c0] @ pts[c0]
+    for i in range(1, k):
+        cand = rng.choice(n, size=m, p=q)
+        cd2 = (
+            pts_sq[cand][:, None]
+            - 2.0 * (pts[cand] @ centers[:i].T)
+            + centers_sq[None, :i]
+        ).min(axis=1)
+        np.maximum(cd2, 0.0, out=cd2)
+        # Metropolis-Hastings over the chain.
+        x = cand[0]
+        dx = cd2[0]
+        qx = q[cand[0]]
+        us = rng.uniform(size=m)
+        for j in range(1, m):
+            y, dy, qy = cand[j], cd2[j], q[cand[j]]
+            if dx <= 0 or (dy * qx) > (dx * qy) * us[j]:
+                x, dx, qx = y, dy, qy
+        chosen[i] = x
+        centers[i] = pts[x]
+        centers_sq[i] = pts[x] @ pts[x]
+    return SeedingResult(
+        centers=centers.copy(),
+        indices=chosen,
+        seconds=time.perf_counter() - t0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Baseline: uniform seeding.
+# ---------------------------------------------------------------------------
+
+def uniform_sampling(
+    points: np.ndarray, k: int, rng: np.random.Generator, **_
+) -> SeedingResult:
+    t0 = time.perf_counter()
+    pts = np.asarray(points, dtype=np.float64)
+    idx = rng.choice(len(pts), size=k, replace=False)
+    return SeedingResult(
+        centers=pts[idx].copy(),
+        indices=idx,
+        seconds=time.perf_counter() - t0,
+    )
+
+
+SEEDERS: dict[str, Callable[..., SeedingResult]] = {
+    "kmeans++": kmeanspp,
+    "fastkmeans++": fast_kmeanspp,
+    "rejection": rejection_sampling,
+    "afkmc2": afkmc2,
+    "uniform": uniform_sampling,
+}

@@ -1,0 +1,157 @@
+"""Logical-axis sharding rules (MaxText-style) + constraint helpers.
+
+Model code annotates tensors with *logical* axis names (("batch", "seq",
+"embed"), ("expert", "mlp"), ...).  A rule table maps logical names to mesh
+axes; resolution checks divisibility against the actual mesh so the same
+model code lowers on a 1-device CPU (everything replicated), a 256-chip pod
+or a 512-chip multi-pod mesh without edits.
+
+Globals are set by the launch drivers via the `use_rules` / `use_mesh`
+context managers; inside plain CPU tests nothing is set and every constraint
+is a no-op.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "DEFAULT_RULES",
+    "use_rules",
+    "use_mesh",
+    "current_mesh",
+    "current_rules",
+    "resolve_spec",
+    "shard",
+    "sharding_for",
+]
+
+# Logical axis -> mesh axis (or tuple of mesh axes).  ``None`` = replicate.
+DEFAULT_RULES: dict[str, object] = {
+    "batch": ("pod", "data"),       # DP (pod axis folds into DP when present)
+    "seq": None,                    # sequence: replicated by default
+    "seq_kv": "model",              # long-context KV sharding (SP at decode)
+    "embed": None,                  # d_model: replicated (activations)
+    "heads": "model",               # TP over attention heads
+    "kv_heads": "model",
+    "mlp": "model",                 # TP over FFN hidden
+    "vocab": "model",               # TP over vocab (embed + logits)
+    "expert": "model",              # EP over experts
+    "dp_shard": ("pod", "data"),    # two-stage MoE dispatch shard axis
+    "kv_clusters": "model",         # cluster-KV codebook sharding
+    "expert_mlp": None,             # per-expert hidden stays local under EP
+    "kv_lora": None,
+    "layers": None,                 # scan axis, never sharded
+    "conv": None,
+    "state": None,
+}
+
+_local = threading.local()
+
+
+def current_rules() -> dict:
+    return getattr(_local, "rules", DEFAULT_RULES)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_local, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: dict):
+    prev = getattr(_local, "rules", None)
+    _local.rules = {**DEFAULT_RULES, **rules}
+    try:
+        yield
+    finally:
+        if prev is None:
+            del _local.rules
+        else:
+            _local.rules = prev
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    prev = getattr(_local, "mesh", None)
+    _local.mesh = mesh
+    try:
+        yield
+    finally:
+        if prev is None:
+            del _local.mesh
+        else:
+            _local.mesh = prev
+
+
+def _mesh_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= _mesh_size(mesh, a)
+        return n
+    return mesh.shape.get(axis, 1) if axis in mesh.axis_names else 1
+
+
+def resolve_spec(
+    axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Optional[Mesh] = None,
+    rules: Optional[dict] = None,
+) -> P:
+    """Logical axes + concrete shape -> PartitionSpec.
+
+    Drops assignments whose mesh axes do not exist or do not divide the
+    dimension (so e.g. kv_heads=1 stays replicated on a model=16 mesh).
+    """
+    mesh = mesh or current_mesh()
+    rules = rules or current_rules()
+    if mesh is None:
+        return P()
+    parts = []
+    used: set = set()
+    for dim, name in zip(shape, axes):
+        assignment = rules.get(name) if name else None
+        if assignment is None:
+            parts.append(None)
+            continue
+        cand = assignment if isinstance(assignment, (tuple, list)) else (assignment,)
+        cand = tuple(a for a in cand if a in mesh.axis_names and a not in used)
+        size = _mesh_size(mesh, cand)
+        if size <= 1 or dim % size != 0:
+            # Try a prefix of the axis tuple before giving up.
+            while cand and (dim % _mesh_size(mesh, cand) != 0):
+                cand = cand[:-1]
+            if not cand or _mesh_size(mesh, cand) <= 1:
+                parts.append(None)
+                continue
+        used.update(cand)
+        parts.append(cand if len(cand) > 1 else cand[0])
+    return P(*parts)
+
+
+def shard(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """Apply a logical-axis sharding constraint (no-op without a mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = resolve_spec(axes, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def sharding_for(
+    shape: Sequence[int],
+    axes: Sequence[Optional[str]],
+    mesh: Optional[Mesh] = None,
+    rules: Optional[dict] = None,
+) -> Optional[NamedSharding]:
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve_spec(axes, shape, mesh, rules))

@@ -1,0 +1,28 @@
+"""Pallas TPU kernels for the compute hot spots (see DESIGN.md §3).
+
+- `pairwise_argmin`  — nearest-center search (Lloyd / k-means++ / acceptance)
+- `d2_update`        — fused D^2 weight maintenance for one new center
+- `tree_sep_update`  — MULTITREEOPEN's per-tree weight sweep
+- `flash_attention`  — fused online-softmax attention (the memory-roofline
+                       lever for the dense train/prefill cells, §Perf)
+
+Each kernel has a `pl.pallas_call` + BlockSpec implementation, a jit'd
+wrapper, and a pure-jnp oracle in `ref.py`; tests sweep shapes and dtypes
+in interpret mode.
+"""
+
+from repro.kernels.ops import (
+    d2_update,
+    default_interpret,
+    pairwise_argmin,
+    split_codes_u64,
+    tree_sep_update,
+)
+
+__all__ = [
+    "d2_update",
+    "default_interpret",
+    "pairwise_argmin",
+    "split_codes_u64",
+    "tree_sep_update",
+]

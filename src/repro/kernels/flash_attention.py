@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: fused flash attention (forward).
+
+The §Roofline analysis shows the dense-train and prefill cells are
+memory-bound, dominated by the chunked-attention score traffic (the pure-JAX
+`_flash_attention` materialises (BQ, chunk) f32 score tensors in HBM between
+kernel boundaries).  This kernel keeps the whole online-softmax state in
+VMEM: per (batch*head, q-block) the running max/denominator/accumulator
+never leave the core, so HBM traffic drops to reading Q/K/V once and
+writing O once — the 2–4x t_mem lever identified in EXPERIMENTS.md
+§Roofline notes.
+
+Grid: (BH, S/BQ, S/BK), k-blocks minor.  The output block (indexed by
+(bh, qi) only) is revisited across k-blocks — the same accumulation pattern
+as `pairwise_argmin` — with m/l carried in two small side outputs.  Causal
+blocks entirely above the diagonal are skipped via `pl.when`.
+
+Tiling: BQ=BK=128 are MXU-aligned; with d<=256 the resident working set is
+q(BQ,d) + k/v(BK,d) + scores(BQ,BK) + acc(BQ,d) ~= 0.5 MB f32 << 16 MB VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG_INF = -1.0e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+            block_q: int, block_k: int, scale: float, causal: bool,
+            num_kb: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[0] = jnp.zeros_like(o_ref[0])
+        m_ref[0] = jnp.full_like(m_ref[0], _NEG_INF)
+        l_ref[0] = jnp.zeros_like(l_ref[0])
+
+    run = (qi * block_q + block_q - 1 >= ki * block_k) if causal else True
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (BQ, D)
+        k = k_ref[0].astype(jnp.float32)                  # (BK, D)
+        v = v_ref[0].astype(jnp.float32)                  # (BK, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                 # (BQ, BK)
+        if causal:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0
+            )
+            k_pos = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1
+            )
+            s = jnp.where(q_pos >= k_pos, s, _NEG_INF)
+
+        m_prev = m_ref[0]                                 # (BQ,)
+        l_prev = l_ref[0]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + p.sum(axis=1)
+        acc = o_ref[0].astype(jnp.float32) * alpha[:, None]
+        acc += jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        o_ref[0] = acc.astype(o_ref.dtype)
+        m_ref[0] = m_new
+        l_ref[0] = l_new
+
+    @pl.when(ki == num_kb - 1)
+    def _finalize():
+        l = l_ref[0]
+        o_ref[0] = (
+            o_ref[0].astype(jnp.float32)
+            / jnp.maximum(l, 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "block_k", "scale", "causal", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,          # (BH, S, D)
+    k: jax.Array,          # (BH, S, D)
+    v: jax.Array,          # (BH, S, D)
+    *,
+    scale: float,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    bh, s, d = q.shape
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    num_kb = s // block_k
+    grid = (bh, s // block_q, num_kb)
+    out, _, _ = pl.pallas_call(
+        functools.partial(
+            _kernel, block_q=block_q, block_k=block_k, scale=scale,
+            causal=causal, num_kb=num_kb,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_q), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, block_q), lambda b, i, j: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((bh, s), jnp.float32),
+            jax.ShapeDtypeStruct((bh, s), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out

@@ -1,0 +1,129 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Handle padding/unpadding to kernel block multiples and choose the execution
+mode: compiled Pallas on TPU, `interpret=True` elsewhere (the kernel body
+then runs as reference Python/XLA ops on CPU — bit-identical semantics, used
+by tests).  Every wrapper has a pure-jnp oracle in `ref.py`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.d2_update import d2_update_pallas
+from repro.kernels.pairwise_argmin import pairwise_argmin_pallas
+from repro.kernels.tree_sep_update import tree_sep_update_pallas
+
+__all__ = [
+    "pairwise_argmin",
+    "d2_update",
+    "tree_sep_update",
+    "default_interpret",
+]
+
+_PAD_DIST = 3.0e38  # padded centers sit "at infinity"
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(a: jax.Array, axis: int, multiple: int, value) -> jax.Array:
+    size = a.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def pairwise_argmin(
+    x: jax.Array,
+    c: jax.Array,
+    *,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """(min squared distance, argmin center index) per point.
+
+    Accepts any (n, d) x (k, d); pads internally.  f32 accumulation.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    n, k = x.shape[0], c.shape[0]
+    xp = _pad_to(x, 0, block_n, 0)
+    # Padded centers must never win the argmin: place them at "infinity"
+    # on a single coordinate (keeps x^2 + c^2 - 2xc finite in f32).
+    cp = _pad_to(c, 0, block_k, 0)
+    if cp.shape[0] != k:
+        mask = (jnp.arange(cp.shape[0]) >= k)[:, None]
+        cp = jnp.where(mask, jnp.full_like(cp, 1.0e17), cp)
+    d2, idx = pairwise_argmin_pallas(
+        xp, cp, block_n=block_n, block_k=block_k, interpret=interpret
+    )
+    return d2[:n], idx[:n]
+
+
+def d2_update(
+    x: jax.Array,
+    center: jax.Array,
+    w: jax.Array,
+    *,
+    block_n: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """w <- min(w, ||x - center||^2); any n, pads internally."""
+    if interpret is None:
+        interpret = default_interpret()
+    n = x.shape[0]
+    xp = _pad_to(x, 0, block_n, 0)
+    wp = _pad_to(w, 0, block_n, 0.0)
+    out = d2_update_pallas(xp, center, wp, block_n=block_n, interpret=interpret)
+    return out[:n]
+
+
+def tree_sep_update(
+    codes_lo: jax.Array,
+    codes_hi: jax.Array,
+    center_lo: jax.Array,
+    center_hi: jax.Array,
+    w: jax.Array,
+    *,
+    scale: float,
+    num_levels: int,
+    block_n: int = 1024,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One tree's open-center weight sweep; any n, pads internally.
+
+    Height padding (to a sublane multiple of 8) uses codes that can never
+    match (-1 vs -2), so padded heights contribute nothing to `sep`.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    h, n = codes_lo.shape
+    lo = _pad_to(_pad_to(codes_lo, 1, block_n, 0), 0, 8, -1)
+    hi = _pad_to(_pad_to(codes_hi, 1, block_n, 0), 0, 8, -1)
+    clo = _pad_to(center_lo, 0, 8, -2)
+    chi = _pad_to(center_hi, 0, 8, -2)
+    wp = _pad_to(w, 0, block_n, 0.0)
+    out = tree_sep_update_pallas(
+        lo, hi, clo, chi, wp,
+        scale=scale, num_levels=num_levels, block_n=block_n,
+        interpret=interpret,
+    )
+    return out[:n]
+
+
+def split_codes_u64(codes: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """uint64 cell codes -> two int32 planes (TPU-friendly)."""
+    lo = (codes & np.uint64(0xFFFFFFFF)).astype(np.int64).astype(np.int32)
+    hi = (codes >> np.uint64(32)).astype(np.int64).astype(np.int32)
+    return lo, hi

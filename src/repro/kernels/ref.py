@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each function mirrors the semantics of its kernel twin exactly (same
+accumulation dtype, same tie-breaking) so tests can `assert_allclose`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pairwise_argmin_ref", "d2_update_ref", "tree_sep_update_ref"]
+
+
+def pairwise_argmin_ref(x: jax.Array, c: jax.Array):
+    """argmin_c ||x - c||^2 per row of x.
+
+    Returns (min_d2 f32 (n,), argmin int32 (n,)).  f32 accumulation; ties
+    break to the smallest center index (jnp.argmin semantics).
+    """
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    x_sq = (x * x).sum(axis=1)
+    c_sq = (c * c).sum(axis=1)
+    d2 = x_sq[:, None] - 2.0 * (x @ c.T) + c_sq[None, :]
+    d2 = jnp.maximum(d2, 0.0)
+    idx = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    return jnp.min(d2, axis=1), idx
+
+
+def d2_update_ref(x: jax.Array, center: jax.Array, w: jax.Array):
+    """w <- min(w, ||x - center||^2): the D^2 maintenance step of k-means++."""
+    x = x.astype(jnp.float32)
+    center = center.astype(jnp.float32)
+    diff = x - center[None, :]
+    d2 = (diff * diff).sum(axis=1)
+    return jnp.minimum(w.astype(jnp.float32), d2)
+
+
+def tree_sep_update_ref(
+    codes_lo: jax.Array,     # (H, n) int32 — low 32 bits of cell codes
+    codes_hi: jax.Array,     # (H, n) int32 — high 32 bits
+    center_lo: jax.Array,    # (H,) int32
+    center_hi: jax.Array,    # (H,) int32
+    w: jax.Array,            # (n,) f32 — current MultiTreeDist(x, S)^2
+    *,
+    scale: float,            # 2 * sqrt(d) * max_dist
+    num_levels: int,         # H (heights incl. root)
+):
+    """One tree's MULTITREEOPEN weight sweep (DESIGN.md §3).
+
+    sep(y, x) = 1 (root) + #{h >= 1 : codes agree}; the closed-form tree
+    distance is scale * (2^(1-sep) - 2^(1-H)); w' = min(w, dist^2).
+    The code arrays carry heights 1..H-1 (the root is implicit).
+    """
+    eq = (codes_lo == center_lo[:, None]) & (codes_hi == center_hi[:, None])
+    sep = 1 + eq.sum(axis=0).astype(jnp.int32)
+    dist = scale * (jnp.exp2(1.0 - sep.astype(jnp.float32)) - 2.0 ** (1.0 - num_levels))
+    dist = jnp.maximum(dist, 0.0)
+    return jnp.minimum(w.astype(jnp.float32), dist * dist)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        scale: float, causal: bool = True):
+    """Exact attention oracle for the flash kernel.  (BH, S, D) layout."""
+    qf = q.astype(jnp.float32) * scale
+    s = jnp.einsum("bqd,bkd->bqk", qf, k.astype(jnp.float32))
+    if causal:
+        n = q.shape[1]
+        mask = jnp.arange(n)[:, None] >= jnp.arange(n)[None, :]
+        s = jnp.where(mask[None], s, -1.0e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))

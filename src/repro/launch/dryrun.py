@@ -1,0 +1,300 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver builds the right step function (train_step /
+prefill / decode), lowers it with abstract inputs (`input_specs` — no
+allocation), compiles it against the production mesh, and records
+  - `compiled.memory_analysis()`  (proves the program fits),
+  - `compiled.cost_analysis()`    (FLOPs / bytes for the roofline),
+  - collective bytes parsed from the post-SPMD HLO,
+into `benchmarks/artifacts/<arch>__<shape>__<mesh>.json`.
+
+The first two lines above force 512 host devices BEFORE any jax import —
+jax locks the device count at first init.  Never set that flag globally:
+smoke tests and benchmarks must see one device.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all [--mesh both] [--force]
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, SHAPES, cell_is_supported, get_config
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.distributed.sharding import sharding_for, use_mesh, use_rules
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models.params import abstract_params, param_shardings, zero_shardings
+from repro.models.model import (
+    make_batch_axes,
+    make_batch_specs,
+    make_cache_axes,
+    make_cache_specs,
+    param_specs,
+)
+from repro.training.train_step import make_train_step, train_state_specs
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts"
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    if shape.kind == "decode":
+        return {
+            "tokens": jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32),
+            "cache": make_cache_specs(cfg, shape.global_batch, shape.seq_len),
+        }
+    return make_batch_specs(cfg, shape)
+
+
+def _tree_shardings(spec_tree, axes_tree, mesh):
+    return jax.tree.map(
+        lambda s, a: sharding_for(s.shape, a, mesh),
+        spec_tree,
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """Returns (fn, example_args, in_shardings, out_shardings, donate)."""
+    specs = param_specs(cfg)
+    params_abs = abstract_params(specs, jnp.dtype(cfg.dtype))
+    # Big models keep weights DP-sharded (FSDP-style, gathered per layer)
+    # in every phase — a TP-only layout would put >4GB of bf16 weights on
+    # each chip before any activations.
+    if cfg.param_count() > 3.0e10:
+        psh = zero_shardings(specs, mesh)
+    else:
+        psh = param_shardings(specs, mesh)
+
+    if shape.kind == "train":
+        # Per-arch training memory policy (recorded in EXPERIMENTS.md):
+        #   microbatches — bounds per-microbatch activations;
+        #   fsdp          — params ZeRO-sharded over DP (weight-gathered on
+        #                   use), required once bf16 params exceed ~4GB/dev;
+        #   opt bf16      — halves moment HBM for the 398B hybrid.
+        mb = 8
+        fsdp = False
+        opt_dtype = jnp.float32
+        if cfg.d_model >= 8192:
+            mb, fsdp = 16, True
+        if cfg.param_count() > 3.0e10:
+            fsdp = True
+        if cfg.param_count() > 2.0e11:
+            opt_dtype = jnp.bfloat16
+        if cfg.d_model <= 2048 and not cfg.num_experts:
+            mb = 2
+        # Per-microbatch batch must stay divisible by the full DP extent,
+        # or activations silently lose DP sharding (16x redundant compute
+        # was measured when this was violated — EXPERIMENTS.md §Dry-run).
+        dp = 1
+        for ax in ("pod", "data"):
+            dp *= mesh.shape.get(ax, 1) if ax in mesh.axis_names else 1
+        while mb > 1 and (shape.global_batch // mb) % dp:
+            mb //= 2
+        tc = TrainConfig(microbatches=mb, remat="block")
+        opt_abs = train_state_specs(params_abs, opt_dtype)
+        zsh = zero_shardings(specs, mesh)   # ZeRO-1: moments DP-sharded
+        if fsdp:
+            psh = zsh                       # ZeRO-3-ish: weights DP-sharded
+        step = make_train_step(cfg, tc, grad_shardings=zsh)
+        osh = {
+            "m": zsh,
+            "v": jax.tree.map(lambda s: s, zsh),
+            "step": sharding_for((), (), mesh),
+        }
+        batch_abs = make_batch_specs(cfg, shape)
+        bsh = _tree_shardings(batch_abs, make_batch_axes(cfg, shape), mesh)
+        fn = step
+        args = (params_abs, opt_abs, batch_abs)
+        in_sh = (psh, osh, bsh)
+        out_sh = (psh, osh, None)
+        donate = (0, 1)
+    elif shape.kind == "prefill":
+        from repro.serving.prefill import prefill
+        from repro.models.transformer import layer_layout
+
+        batch_abs = make_batch_specs(cfg, shape)
+        bsh = _tree_shardings(batch_abs, make_batch_axes(cfg, shape), mesh)
+        if all(bt == "attn" for bt, _ in layer_layout(cfg).positions) and not cfg.first_k_dense:
+            fn = lambda p, b: prefill(p, cfg, b)
+        else:
+            # Hybrid/SSM prefill: lower the forward pass (logits only).
+            fn = lambda p, b: M.forward(p, cfg, b, remat="none")[0][:, -1, :]
+        args = (params_abs, batch_abs)
+        in_sh = (psh, bsh)
+        out_sh = None
+        donate = ()
+    else:  # decode
+        cache_abs = make_cache_specs(cfg, shape.global_batch, shape.seq_len)
+        csh = _tree_shardings(cache_abs, make_cache_axes(cfg), mesh)
+        csh["index"] = sharding_for((), (), mesh)
+        tok_abs = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+        tsh = sharding_for(tok_abs.shape, ("batch",), mesh)
+        fn = lambda p, t, c: M.decode_step(p, cfg, t, c)
+        args = (params_abs, tok_abs, cache_abs)
+        in_sh = (psh, tsh, csh)
+        out_sh = (None, csh)
+        donate = (2,)
+    return fn, args, in_sh, out_sh, donate
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, *, force=False,
+             variant: str = "base") -> dict:
+    from benchmarks.hlo_utils import analyze_hlo
+
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{mesh_name}"
+    if variant != "base":
+        tag += f"__{variant}"
+    out_path = ARTIFACTS / f"{tag}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = get_config(arch)
+    if variant == "opt":
+        # §Perf optimised configuration: hierarchical MoE dispatch +
+        # cluster-KV eligibility for long decode.
+        import dataclasses as _dc
+
+        changes = {}
+        if cfg.num_experts:
+            changes["moe_dispatch"] = "two_stage"
+        if cfg.default_block == "mamba" or cfg.attn_period > 1:
+            changes["mamba_lowp_scan"] = True
+        if cfg.has_attention and cfg.num_kv_heads and cfg.num_kv_heads < 16:
+            changes["attn_repeat_kv"] = True
+        if (shape_name in ("long_500k", "decode_32k")
+                and cfg.has_attention and not cfg.use_mla
+                and not cfg.is_encoder):
+            changes["cluster_kv"] = True
+        if changes:
+            cfg = _dc.replace(cfg, **changes)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_supported(cfg, shape)
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "variant": variant, "timestamp": time.time(),
+    }
+    if not ok:
+        record.update(status="SKIP", reason=why)
+        out_path.write_text(json.dumps(record, indent=2))
+        return record
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    try:
+        with use_mesh(mesh), use_rules({}):
+            fn, args, in_sh, out_sh, donate = build_cell(cfg, shape, mesh)
+            t0 = time.time()
+            jitted = jax.jit(
+                fn, in_shardings=in_sh, out_shardings=out_sh,
+                donate_argnums=donate,
+            )
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+
+        mem = {}
+        try:
+            ma = compiled.memory_analysis()
+            for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                if hasattr(ma, f):
+                    mem[f] = int(getattr(ma, f))
+            print(ma)
+        except Exception as e:  # pragma: no cover - backend specific
+            mem["error"] = str(e)
+        cost = {}
+        try:
+            ca = compiled.cost_analysis()
+            ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+            for key in ("flops", "bytes accessed", "transcendentals",
+                        "optimal_seconds"):
+                if key in ca:
+                    cost[key] = float(ca[key])
+            print({k: v for k, v in cost.items()})
+        except Exception as e:  # pragma: no cover
+            cost["error"] = str(e)
+        hlo_text = compiled.as_text()
+        hlo = analyze_hlo(hlo_text)
+        # Keep the (compressed) HLO so roofline methodology changes can
+        # re-analyze without recompiling 80 cells.
+        import gzip
+
+        (ARTIFACTS / f"{tag}.hlo.gz").write_bytes(
+            gzip.compress(hlo_text.encode())
+        )
+
+        record.update(
+            status="OK",
+            lower_seconds=round(t_lower, 2),
+            compile_seconds=round(t_compile, 2),
+            memory_analysis=mem,
+            cost_analysis=cost,             # raw XLA numbers (loop bodies x1)
+            hlo_flops=hlo["flops"],         # trip-count-corrected, per device
+            hbm_bytes=hlo["hbm_bytes"],     # kernel-boundary traffic estimate
+            collectives=hlo["collectives"],
+            while_trip_counts=hlo["while_trip_counts"],
+            num_devices=int(np.prod(list(mesh.shape.values()))),
+        )
+    except Exception:
+        record.update(status="FAIL", error=traceback.format_exc()[-4000:])
+    out_path.write_text(json.dumps(record, indent=2))
+    return record
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", choices=ARCH_IDS)
+    p.add_argument("--shape", choices=tuple(SHAPES))
+    p.add_argument("--mesh", choices=("pod", "multipod", "both"), default="pod")
+    p.add_argument("--variant", choices=("base", "opt"), default="base")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--force", action="store_true")
+    args = p.parse_args(argv)
+
+    archs = ARCH_IDS if (args.all or not args.arch) else (args.arch,)
+    shapes = tuple(SHAPES) if (args.all or not args.shape) else (args.shape,)
+    meshes = ("pod", "multipod") if args.mesh == "both" else (args.mesh,)
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh in meshes:
+                rec = run_cell(arch, shape, mesh, force=args.force,
+                               variant=args.variant)
+                line = f"{arch:24s} {shape:12s} {mesh:8s} {rec['status']:5s}"
+                if rec["status"] == "OK":
+                    fl = rec.get("hlo_flops", 0)
+                    cb = rec["collectives"].get("total", 0)
+                    tmp = rec["memory_analysis"].get("temp_size_in_bytes", 0)
+                    line += (f" compile={rec['compile_seconds']:7.1f}s"
+                             f" flops/dev={fl:.3e} coll_B/dev={cb:.3e}"
+                             f" temp={tmp/2**30:6.1f}GiB")
+                elif rec["status"] == "SKIP":
+                    line += f" ({rec['reason'][:60]})"
+                else:
+                    failures += 1
+                    line += " " + rec["error"].splitlines()[-1][:90]
+                print(line, flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,24 @@
+"""Production meshes.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.  Single pod: (data=16, model=16) = 256
+chips.  Multi-pod: (pod=2, data=16, model=16) = 512 chips — the "pod" axis
+carries the cross-pod (DCN-ish) data parallelism.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """A 1-device mesh with the production axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,59 @@
+"""Production training launcher.
+
+    python -m repro.launch.train --arch olmo-1b --steps 100 \
+        [--smoke] [--workdir DIR] [--microbatches N]
+
+`--smoke` swaps in the reduced same-family config (CPU-friendly); the full
+configs are intended for real accelerator meshes (see launch/dryrun.py for
+the sharding configuration that this launcher applies when a multi-device
+mesh is available).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config, reduce_for_smoke
+from repro.configs.base import TrainConfig
+from repro.training.trainer import Trainer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="olmo-1b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="none", choices=("none", "block", "dots"))
+    ap.add_argument("--workdir", default="/tmp/repro_train")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduce_for_smoke(cfg)
+    import dataclasses
+
+    if jax.device_count() == 1:
+        cfg = dataclasses.replace(cfg, dtype="float32", param_dtype="float32")
+    tc = TrainConfig(
+        learning_rate=args.lr, warmup_steps=10, total_steps=args.steps,
+        microbatches=args.microbatches, remat=args.remat,
+        checkpoint_every=max(args.steps // 4, 10),
+    )
+    trainer = Trainer(cfg, tc, workdir=f"{args.workdir}/{cfg.name}",
+                      batch=args.batch, seq_len=args.seq)
+    result = trainer.run(args.steps)
+    if result.losses:
+        print(f"{cfg.name}: {len(result.losses)} steps, "
+              f"loss {result.losses[0]:.3f} -> {result.losses[-1]:.3f}, "
+              f"stragglers={result.straggler_events}")
+
+
+if __name__ == "__main__":
+    main()

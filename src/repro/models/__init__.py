@@ -1,0 +1,29 @@
+"""Model stack: layers, attention (GQA/MLA), MoE, Mamba, RWKV-6, composition."""
+
+from repro.models.model import (
+    decode_step,
+    forward,
+    loss_fn,
+    make_batch_specs,
+    make_cache_specs,
+    param_specs,
+)
+from repro.models.params import (
+    ParamSpec,
+    abstract_params,
+    init_params,
+    param_shardings,
+)
+
+__all__ = [
+    "decode_step",
+    "forward",
+    "loss_fn",
+    "make_batch_specs",
+    "make_cache_specs",
+    "param_specs",
+    "ParamSpec",
+    "abstract_params",
+    "init_params",
+    "param_shardings",
+]

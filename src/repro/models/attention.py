@@ -1,0 +1,378 @@
+"""Attention blocks: GQA/MQA (+qk-norm, +qkv-bias) and MLA (DeepSeek-V2).
+
+Training/prefill attention is a pure-JAX flash-style computation: a
+`lax.scan` over KV chunks with an online-softmax accumulator, so peak
+activation memory is O(S * chunk) instead of O(S^2) — this is what keeps the
+32k-prefill dry-run inside HBM.  Decode is a single-query attention against
+a (possibly seq-sharded) KV cache; MLA decode uses the absorbed-weight
+formulation so the per-head K/V are never materialised.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import (
+    apply_head_norm,
+    apply_rope,
+    head_norm_specs,
+    rotary,
+)
+from repro.models.params import ParamSpec
+
+__all__ = [
+    "attn_specs",
+    "attn_forward",
+    "attn_decode",
+    "init_kv_cache_spec",
+]
+
+_NEG_INF = -1.0e30
+KV_CHUNK = 1024
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs.
+# ---------------------------------------------------------------------------
+
+def attn_specs(cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    if cfg.use_mla:
+        rope, nope, vdim = cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.v_head_dim
+        specs = {
+            "wq": ParamSpec((d, cfg.num_heads, nope + rope), ("embed", "heads", None)),
+            "w_dkv": ParamSpec((d, cfg.kv_lora_rank), ("embed", "kv_lora")),
+            "w_kr": ParamSpec((d, rope), ("embed", None)),
+            "w_uk": ParamSpec((cfg.kv_lora_rank, cfg.num_heads, nope), ("kv_lora", "heads", None)),
+            "w_uv": ParamSpec((cfg.kv_lora_rank, cfg.num_heads, vdim), ("kv_lora", "heads", None)),
+            "wo": ParamSpec((cfg.num_heads, vdim, d), ("heads", None, "embed")),
+            "kv_norm": {"scale": ParamSpec((cfg.kv_lora_rank,), (None,), init="ones")},
+        }
+        return specs
+    specs = {
+        "wq": ParamSpec((d, cfg.num_heads, hd), ("embed", "heads", None)),
+        "wk": ParamSpec((d, cfg.num_kv_heads, hd), ("embed", "kv_heads", None)),
+        "wv": ParamSpec((d, cfg.num_kv_heads, hd), ("embed", "kv_heads", None)),
+        "wo": ParamSpec((cfg.num_heads, hd, d), ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = ParamSpec((cfg.num_heads, hd), ("heads", None), init="zeros")
+        specs["bk"] = ParamSpec((cfg.num_kv_heads, hd), ("kv_heads", None), init="zeros")
+        specs["bv"] = ParamSpec((cfg.num_kv_heads, hd), ("kv_heads", None), init="zeros")
+    if cfg.qk_norm:
+        specs["q_norm"] = head_norm_specs(hd)
+        specs["k_norm"] = head_norm_specs(hd)
+    return specs
+
+
+def init_kv_cache_spec(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> dict:
+    """Per-layer KV cache leaves (stacked over layers by the caller)."""
+    if cfg.use_mla:
+        return {
+            "c_kv": jax.ShapeDtypeStruct((batch, max_seq, cfg.kv_lora_rank), dtype),
+            "k_rope": jax.ShapeDtypeStruct((batch, max_seq, cfg.qk_rope_dim), dtype),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct(
+            (batch, max_seq, cfg.num_kv_heads, cfg.head_dim), dtype
+        ),
+        "v": jax.ShapeDtypeStruct(
+            (batch, max_seq, cfg.num_kv_heads, cfg.head_dim), dtype
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention (training / prefill).
+# ---------------------------------------------------------------------------
+
+def _flash_attention(
+    q: jax.Array,            # (B, S, H, D)
+    k: jax.Array,            # (B, S, Hk, D)
+    v: jax.Array,            # (B, S, Hk, Dv)
+    *,
+    causal: bool,
+    prefix_len: int = 0,
+    chunk: int = KV_CHUNK,
+    scale: float,
+) -> jax.Array:
+    b, s, h, d = q.shape
+    hk = k.shape[2]
+    dv = v.shape[3]
+    g = h // hk
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    qg = q.reshape(b, s, hk, g, d).astype(jnp.float32) * scale
+    kc = k.reshape(b, nc, chunk, hk, d).astype(jnp.float32)
+    vc = v.reshape(b, nc, chunk, hk, dv).astype(jnp.float32)
+    q_pos = jnp.arange(s)
+
+    def step(carry, inputs):
+        m_prev, l_prev, acc = carry
+        kb, vb, c_idx = inputs
+        kv_pos = c_idx * chunk + jnp.arange(chunk)
+        scores = jnp.einsum("bqkgd,bskd->bqkgs", qg, kb)  # (B,S,Hk,G,chunk)
+        if causal:
+            mask = q_pos[:, None] >= kv_pos[None, :]
+            if prefix_len:
+                mask = mask | (
+                    (q_pos[:, None] < prefix_len) & (kv_pos[None, :] < prefix_len)
+                )
+            scores = jnp.where(mask[None, :, None, None, :], scores, _NEG_INF)
+        m_new = jnp.maximum(m_prev, scores.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bqkgs,bskv->bqkgv", p, vb)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, s, hk, g), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, s, hk, g), jnp.float32)
+    acc0 = jnp.zeros((b, s, hk, g, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step,
+        (m0, l0, acc0),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), jnp.arange(nc)),
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, s, h, dv)
+
+
+# ---------------------------------------------------------------------------
+# GQA / MLA forward (train & prefill).  Returns (y, cache_entries).
+# ---------------------------------------------------------------------------
+
+def attn_forward(
+    params: dict,
+    x: jax.Array,                   # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    positions: Optional[jax.Array] = None,
+    return_cache: bool = False,
+):
+    b, s, _ = x.shape
+    pos = positions if positions is not None else jnp.arange(s)[None, :]
+    if cfg.use_mla:
+        return _mla_forward(params, x, cfg, pos, return_cache)
+
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x, params["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if cfg.qk_norm:
+        q = apply_head_norm(params["q_norm"], q)
+        k = apply_head_norm(params["k_norm"], k)
+    sin, cos = rotary(pos, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    q = shard(q, ("batch", "seq", "heads", None))
+    if cfg.attn_repeat_kv and cfg.num_kv_heads < cfg.num_heads:
+        # Repeat KV to full query heads: the score tensors then carry the
+        # "heads" axis and shard over TP even when kv_heads < mesh width.
+        g = cfg.num_heads // cfg.num_kv_heads
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+        k = shard(k, ("batch", "seq", "heads", None))
+        v = shard(v, ("batch", "seq", "heads", None))
+    else:
+        k = shard(k, ("batch", "seq", "kv_heads", None))
+        v = shard(v, ("batch", "seq", "kv_heads", None))
+
+    out = _flash_attention(
+        q, k, v,
+        causal=cfg.causal,
+        prefix_len=cfg.prefix_len,
+        scale=1.0 / (cfg.head_dim ** 0.5),
+    ).astype(x.dtype)
+    y = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    cache = {"k": k, "v": v} if return_cache else None
+    return y, cache
+
+
+def _mla_forward(params, x, cfg, pos, return_cache):
+    from repro.models.layers import apply_norm as _  # noqa: F401 (doc link)
+
+    b, s, _ = x.shape
+    nope, rope, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    c_kv = x @ params["w_dkv"]                      # (B,S,R) latent
+    c_kv = _rms(c_kv, params["kv_norm"]["scale"])
+    k_rope = x @ params["w_kr"]                     # (B,S,rope), shared heads
+    sin, cos = rotary(pos, rope, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, sin, cos)
+    k_rope = apply_rope(k_rope[:, :, None, :], sin, cos)[:, :, 0, :]
+
+    k_nope = jnp.einsum("bsr,rhe->bshe", c_kv, params["w_uk"])
+    v = jnp.einsum("bsr,rhe->bshe", c_kv, params["w_uv"])
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :], (b, s, cfg.num_heads, rope))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    q_full = shard(q_full, ("batch", "seq", "heads", None))
+    k_full = shard(k_full, ("batch", "seq", "heads", None))
+    v = shard(v, ("batch", "seq", "heads", None))
+
+    out = _flash_attention(
+        q_full, k_full, v,
+        causal=cfg.causal,
+        prefix_len=cfg.prefix_len,
+        scale=1.0 / ((nope + rope) ** 0.5),
+    ).astype(x.dtype)
+    y = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    cache = {"c_kv": c_kv, "k_rope": k_rope} if return_cache else None
+    return y, cache
+
+
+def _rms(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt((x * x).mean(axis=-1, keepdims=True) + eps)
+    return (x * inv * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Decode: one new token against the KV cache.
+# ---------------------------------------------------------------------------
+
+def attn_decode(
+    params: dict,
+    x: jax.Array,                   # (B, 1, D)
+    cache: dict,                    # per-layer cache leaves
+    index: jax.Array,               # () int32 — current length
+    cfg: ModelConfig,
+):
+    """Returns (y, updated cache).  The new token's K/V are written at
+    `index`; scores over positions > index are masked."""
+    b = x.shape[0]
+    if cfg.use_mla:
+        return _mla_decode(params, x, cache, index, cfg)
+
+    pos = jnp.full((b, 1), index, jnp.int32)
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x, params["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if cfg.qk_norm:
+        q = apply_head_norm(params["q_norm"], q)
+        k = apply_head_norm(params["k_norm"], k)
+    sin, cos = rotary(pos, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, index, 0, 0)
+    )
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, index, 0, 0)
+    )
+    ck = shard(ck, ("batch", "seq_kv", "kv_heads", None))
+    cv = shard(cv, ("batch", "seq_kv", "kv_heads", None))
+
+    s_max = ck.shape[1]
+    h, hk = cfg.num_heads, cfg.num_kv_heads
+    g = h // hk
+    qg = q.reshape(b, hk, g, cfg.head_dim).astype(jnp.float32)
+    scores = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, ck.astype(jnp.float32)
+    ) / (cfg.head_dim ** 0.5)
+    valid = jnp.arange(s_max)[None, None, None, :] <= index
+    scores = jnp.where(valid, scores, _NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskv->bkgv", p, cv.astype(jnp.float32))
+    out = out.reshape(b, 1, h, cfg.head_dim).astype(x.dtype)
+    y = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    return y, {"k": ck, "v": cv}
+
+
+def attn_decode_clustered(
+    params: dict,
+    x: jax.Array,               # (B, 1, D)
+    cache: dict,                # cluster_attn cache leaves
+    index: jax.Array,
+    cfg: ModelConfig,
+):
+    """Decode against a clustered KV cache (paper-technique integration).
+
+    Two-level attention: q scores the k-means centroids (codebooks built by
+    the paper's seeder), gathers the top clusters' tokens exactly, plus an
+    exact recent ring that absorbs the new tokens.  GQA only (MLA latents
+    cluster the same way; left as an extension).
+    """
+    from repro.models import cluster_attn as CA
+
+    b = x.shape[0]
+    pos = jnp.full((b, 1), index, jnp.int32)
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x, params["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    if cfg.qk_norm:
+        q = apply_head_norm(params["q_norm"], q)
+        k = apply_head_norm(params["k_norm"], k)
+    sin, cos = rotary(pos, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+
+    ckv = CA.ClusterKVConfig(
+        num_clusters=cfg.cluster_kv_clusters, topc=cfg.cluster_kv_topc
+    )
+    out = CA.clustered_attention(
+        q[:, 0], cache, ckv, scale=1.0 / (cfg.head_dim ** 0.5)
+    )
+    cache = CA.append_recent(cache, k[:, 0], v[:, 0])
+    y = jnp.einsum("bhe,hed->bd", out.astype(x.dtype), params["wo"])
+    return y[:, None, :], cache
+
+
+def _mla_decode(params, x, cache, index, cfg):
+    """Absorbed-weight MLA decode: K/V per head are never materialised —
+    queries are mapped into the latent space (W_uk^T q) and output comes
+    from the attended latent (W_uv absorbed into wo's input)."""
+    b = x.shape[0]
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    pos = jnp.full((b, 1), index, jnp.int32)
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    sin, cos = rotary(pos, rope, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, sin, cos)
+
+    c_new = x @ params["w_dkv"]
+    c_new = _rms(c_new, params["kv_norm"]["scale"])
+    kr_new = x @ params["w_kr"]
+    kr_new = apply_rope(kr_new[:, :, None, :], sin, cos)[:, :, 0, :]
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, index, 0)
+    )
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, index, 0)
+    )
+    c_kv = shard(c_kv, ("batch", "seq_kv", "kv_lora"))
+    k_rope = shard(k_rope, ("batch", "seq_kv", None))
+
+    # Absorb W_uk into q: (B,1,H,nope) x (R,H,nope) -> (B,H,R).
+    q_lat = jnp.einsum("bshe,rhe->bhr", q_nope, params["w_uk"]).astype(jnp.float32)
+    scores = jnp.einsum("bhr,bsr->bhs", q_lat, c_kv.astype(jnp.float32))
+    scores += jnp.einsum(
+        "bshe,bte->bht", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32)
+    )
+    scores = scores / ((nope + rope) ** 0.5)
+    valid = jnp.arange(c_kv.shape[1])[None, None, :] <= index
+    scores = jnp.where(valid, scores, _NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    lat = jnp.einsum("bhs,bsr->bhr", p, c_kv.astype(jnp.float32))
+    out = jnp.einsum("bhr,rhe->bhe", lat, params["w_uv"].astype(jnp.float32))
+    y = jnp.einsum("bhe,hed->bd", out.astype(x.dtype), params["wo"])
+    return y[:, None, :], {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,116 @@
+"""Shared layers: norms, rotary embedding, dense MLP, embeddings."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.params import ParamSpec
+
+__all__ = [
+    "norm_specs", "apply_norm",
+    "mlp_specs", "apply_mlp",
+    "rotary", "apply_rope",
+    "embed_specs",
+]
+
+
+# ---------------------------------------------------------------------------
+# Norms.  olmo uses non-parametric LayerNorm (no scale/bias).
+# ---------------------------------------------------------------------------
+
+def norm_specs(cfg: ModelConfig) -> dict:
+    if cfg.norm == "layernorm_nonparam":
+        return {}
+    return {"scale": ParamSpec((cfg.d_model,), ("embed",), init="ones")}
+
+
+def apply_norm(params: dict, x: jax.Array, cfg: ModelConfig, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm.startswith("layernorm"):
+        x = x - x.mean(axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt((x * x).mean(axis=-1, keepdims=True) + eps)
+    x = x * inv
+    if "scale" in params:
+        x = x * params["scale"].astype(jnp.float32)
+    return x.astype(dt)
+
+
+def head_norm_specs(dim: int) -> dict:
+    return {"scale": ParamSpec((dim,), (None,), init="ones")}
+
+
+def apply_head_norm(params: dict, x: jax.Array, eps: float = 1e-6):
+    """RMS norm over the last (head) dim — qwen3's qk_norm."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt((x * x).mean(axis=-1, keepdims=True) + eps)
+    return (x * inv * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding.
+# ---------------------------------------------------------------------------
+
+def rotary(positions: jax.Array, dim: int, theta: float) -> tuple:
+    """(sin, cos) of shape (..., dim/2) for integer positions."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: (..., seq, heads, head_dim); sin/cos: (..., seq, dim/2)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    s = sin[..., None, :]
+    c = cos[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Dense (SwiGLU / GeGLU) MLP.
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    ff = d_ff or cfg.d_ff
+    return {
+        "wi_gate": ParamSpec((cfg.d_model, ff), ("embed", "mlp")),
+        "wi_up": ParamSpec((cfg.d_model, ff), ("embed", "mlp")),
+        "wo": ParamSpec((ff, cfg.d_model), ("mlp", "embed")),
+    }
+
+
+def _act(x, kind: str):
+    return jax.nn.gelu(x) if kind == "gelu" else jax.nn.silu(x)
+
+
+def apply_mlp(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    gate = x @ params["wi_gate"]
+    up = x @ params["wi_up"]
+    h = _act(gate, cfg.act) * up
+    h = shard(h, ("batch", "seq", "mlp"))
+    return h @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Embeddings.
+# ---------------------------------------------------------------------------
+
+def embed_specs(cfg: ModelConfig) -> dict:
+    specs = {}
+    if cfg.embedding_inputs:
+        fd = cfg.frontend_dim or cfg.d_model
+        specs["frontend_proj"] = ParamSpec((fd, cfg.d_model), (None, "embed"))
+    specs["tokens"] = ParamSpec(
+        (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), scale=0.02
+    )
+    if not cfg.tie_embeddings:
+        specs["head"] = ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return specs

@@ -1,0 +1,167 @@
+"""Mamba-1 block (Jamba's SSM layer): selective state-space scan.
+
+The selective scan materialises a (B, L, d_inner, d_state) tensor if done
+naively — ruinous at d_inner=16k.  We run a *chunked* scan: an outer
+`lax.scan` over sequence chunks carries the (B, d_inner, d_state) state and
+is wrapped in `jax.checkpoint`, so the backward pass stores only per-chunk
+boundary states and recomputes the inner steps (the standard TPU adaptation
+of the CUDA selective-scan kernel; DESIGN.md §3 hardware-adaptation notes).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.params import ParamSpec
+
+__all__ = ["mamba_specs", "mamba_forward", "mamba_decode", "mamba_state_spec"]
+
+CHUNK = 64
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.mamba_expand * cfg.d_model
+    dt_rank = max(1, cfg.d_model // 16)
+    return d_inner, dt_rank
+
+
+def mamba_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_inner, dt_rank = _dims(cfg)
+    n = cfg.mamba_d_state
+    return {
+        "in_proj": ParamSpec((d, 2 * d_inner), ("embed", "mlp")),
+        "conv_w": ParamSpec((cfg.mamba_d_conv, d_inner), ("conv", "mlp"), scale=0.5),
+        "conv_b": ParamSpec((d_inner,), ("mlp",), init="zeros"),
+        "x_proj": ParamSpec((d_inner, dt_rank + 2 * n), ("mlp", None)),
+        "dt_proj": ParamSpec((dt_rank, d_inner), (None, "mlp")),
+        "dt_bias": ParamSpec((d_inner,), ("mlp",), init="zeros"),
+        "a_log": ParamSpec((d_inner, n), ("mlp", "state"), init="ones"),
+        "d_skip": ParamSpec((d_inner,), ("mlp",), init="ones"),
+        "out_proj": ParamSpec((d_inner, d), ("mlp", "embed")),
+    }
+
+
+def mamba_state_spec(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d_inner, _ = _dims(cfg)
+    return {
+        "ssm": jax.ShapeDtypeStruct(
+            (batch, d_inner, cfg.mamba_d_state), jnp.float32
+        ),
+        "conv": jax.ShapeDtypeStruct(
+            (batch, cfg.mamba_d_conv - 1, d_inner), dtype
+        ),
+    }
+
+
+def _ssm_inputs(params, xz, cfg: ModelConfig):
+    """Shared front half: conv + projections.  xz: (B, L, 2*d_inner)."""
+    d_inner, dt_rank = _dims(cfg)
+    n = cfg.mamba_d_state
+    x, z = jnp.split(xz, 2, axis=-1)
+    return x, z, d_inner, dt_rank, n
+
+
+def _causal_conv(x, conv_w, conv_b, prev=None):
+    """Depthwise causal conv along seq.  x: (B, L, C); conv_w: (K, C)."""
+    k = conv_w.shape[0]
+    if prev is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = prev
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * conv_w[i][None, None, :] for i in range(k)
+    )
+    return out + conv_b, xp[:, -(k - 1):, :]
+
+
+def mamba_forward(params, x_in: jax.Array, cfg: ModelConfig):
+    """x_in: (B, L, D) -> (B, L, D).  Chunked selective scan."""
+    b, length, _ = x_in.shape
+    d_inner, dt_rank = _dims(cfg)
+    n = cfg.mamba_d_state
+    xz = x_in @ params["in_proj"]
+    x, z = jnp.split(xz, 2, axis=-1)
+    x, _ = _causal_conv(x, params["conv_w"], params["conv_b"])
+    x = jax.nn.silu(x)
+    x = shard(x, ("batch", "seq", "mlp"))
+
+    proj = x @ params["x_proj"]                                # (B,L,R+2N)
+    dt = jax.nn.softplus(
+        proj[..., :dt_rank] @ params["dt_proj"] + params["dt_bias"]
+    ).astype(jnp.float32)                                      # (B,L,d_inner)
+    bmat = proj[..., dt_rank : dt_rank + n].astype(jnp.float32)   # (B,L,N)
+    cmat = proj[..., dt_rank + n :].astype(jnp.float32)            # (B,L,N)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))          # (d_inner,N)
+
+    chunk = min(CHUNK, length)
+    assert length % chunk == 0, (length, chunk)
+    nc = length // chunk
+    # Scan-input storage dtype: f32 by default; bf16 under the §Perf
+    # `mamba_lowp_scan` knob (the recurrence math stays f32 below).
+    sdt = jnp.bfloat16 if cfg.mamba_lowp_scan else jnp.float32
+    xs = x.astype(sdt).reshape(b, nc, chunk, d_inner)
+    dts = dt.astype(sdt).reshape(b, nc, chunk, d_inner)
+    bs = bmat.astype(sdt).reshape(b, nc, chunk, n)
+    cs = cmat.astype(sdt).reshape(b, nc, chunk, n)
+
+    @jax.checkpoint
+    def chunk_step(h, inp):
+        xc, dtc, bc, cc = inp  # (B, chunk, ...)
+
+        def step(h, s_in):
+            xt, dtt, bt, ct = (t.astype(jnp.float32) for t in s_in)
+            decay = jnp.exp(dtt[:, :, None] * a[None])        # (B,d_inner,N)
+            h = decay * h + (dtt * xt)[:, :, None] * bt[:, None, :]
+            y = jnp.einsum("bdn,bn->bd", h, ct)
+            return h, y
+
+        h, ys = jax.lax.scan(
+            step, h,
+            (xc.swapaxes(0, 1), dtc.swapaxes(0, 1),
+             bc.swapaxes(0, 1), cc.swapaxes(0, 1)),
+        )
+        return h, ys.swapaxes(0, 1)                            # (B, chunk, d_inner)
+
+    h0 = jnp.zeros((b, d_inner, n), jnp.float32)
+    _, ys = jax.lax.scan(
+        chunk_step, h0,
+        (xs.swapaxes(0, 1), dts.swapaxes(0, 1),
+         bs.swapaxes(0, 1), cs.swapaxes(0, 1)),
+    )
+    y = ys.swapaxes(0, 1).reshape(b, length, d_inner)
+    y = y + x.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)
+    y = (y.astype(x_in.dtype)) * jax.nn.silu(z)
+    return y @ params["out_proj"]
+
+
+def mamba_decode(params, x_in: jax.Array, state: dict, cfg: ModelConfig):
+    """Single-token step.  x_in: (B, 1, D); state: {ssm, conv}."""
+    b = x_in.shape[0]
+    d_inner, dt_rank = _dims(cfg)
+    n = cfg.mamba_d_state
+    xz = x_in @ params["in_proj"]
+    x, z = jnp.split(xz, 2, axis=-1)
+    x, conv_state = _causal_conv(
+        x, params["conv_w"], params["conv_b"], prev=state["conv"]
+    )
+    x = jax.nn.silu(x)[:, 0]                                   # (B, d_inner)
+
+    proj = x @ params["x_proj"]
+    dt = jax.nn.softplus(
+        proj[..., :dt_rank] @ params["dt_proj"] + params["dt_bias"]
+    ).astype(jnp.float32)
+    bvec = proj[..., dt_rank : dt_rank + n].astype(jnp.float32)
+    cvec = proj[..., dt_rank + n :].astype(jnp.float32)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt[:, :, None] * a[None])
+    h = decay * state["ssm"] + (dt * x.astype(jnp.float32))[:, :, None] * bvec[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, cvec)
+    y = y + x.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)
+    y = y.astype(x_in.dtype) * jax.nn.silu(z[:, 0])
+    out = (y @ params["out_proj"])[:, None, :]
+    return out, {"ssm": h, "conv": conv_state}

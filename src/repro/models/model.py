@@ -1,0 +1,410 @@
+"""Full model: embeddings -> scanned layer groups -> final norm -> logits.
+
+Three entry points (all pure functions over a param pytree):
+  - `forward(params, cfg, batch)`           train/prefill; optionally returns
+                                            the KV/state cache for decode.
+  - `decode_step(params, cfg, tok, cache)`  one token for every sequence.
+  - `loss_fn(params, cfg, batch)`           next-token (or frame-label) CE.
+
+Inputs (`make_batch_specs` below defines the exact ShapeDtypeStructs):
+  LM        : {"tokens": (B, S) i32}
+  audio     : {"embeddings": (B, S, F) dtype, "labels": (B, S) i32}  (hubert)
+  vlm       : {"patches": (B, P, F) dtype, "tokens": (B, S-P) i32}   (paligemma)
+The audio/vision frontends are stubs per the assignment: `input_specs`
+provides precomputed frame/patch embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import shard
+from repro.models import transformer
+from repro.models.layers import apply_norm, embed_specs, norm_specs
+from repro.models.params import ParamSpec
+
+__all__ = [
+    "param_specs",
+    "forward",
+    "decode_step",
+    "loss_fn",
+    "make_batch_specs",
+    "make_cache_specs",
+    "num_text_tokens",
+]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Specs.
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig) -> dict:
+    layout = transformer.layer_layout(cfg)
+    specs: dict = {
+        "embed": embed_specs(cfg),
+        "final_norm": norm_specs(cfg),
+        "groups": {},
+    }
+    for p, (bt, moe) in enumerate(layout.positions):
+        specs["groups"][f"pos{p:02d}"] = transformer.stack_specs(
+            transformer.block_specs(cfg, bt, moe), layout.num_groups
+        )
+    for l in range(cfg.first_k_dense):
+        specs[f"dense{l}"] = transformer.block_specs(
+            cfg, cfg.block_type(l), False
+        )
+    return specs
+
+
+def make_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStructs for one global batch of this (arch, shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = _dtype(cfg)
+    if cfg.family == "audio":
+        fd = cfg.frontend_dim or cfg.d_model
+        return {
+            "embeddings": jax.ShapeDtypeStruct((b, s, fd), dt),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        fd = cfg.frontend_dim or cfg.d_model
+        p = min(cfg.prefix_len, s // 2) or s // 2
+        return {
+            "patches": jax.ShapeDtypeStruct((b, p, fd), dt),
+            "tokens": jax.ShapeDtypeStruct((b, s - p), jnp.int32),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+
+
+def make_cache_specs(
+    cfg: ModelConfig, batch: int, max_seq: int
+) -> dict:
+    """Decode cache tree: one stacked entry per layout position."""
+    layout = transformer.layer_layout(cfg)
+    dt = _dtype(cfg)
+    cache: dict = {"groups": {}, "index": jax.ShapeDtypeStruct((), jnp.int32)}
+    for p, (bt, _) in enumerate(layout.positions):
+        leaf = transformer.block_cache_spec(cfg, bt, batch, max_seq, dt)
+        cache["groups"][f"pos{p:02d}"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((layout.num_groups,) + s.shape, s.dtype),
+            leaf,
+        )
+    for l in range(cfg.first_k_dense):
+        cache[f"dense{l}"] = transformer.block_cache_spec(
+            cfg, cfg.block_type(l), batch, max_seq, dt
+        )
+    return cache
+
+
+def make_batch_axes(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Logical axes tree matching `make_batch_specs` (for in_shardings)."""
+    if cfg.family == "audio":
+        return {
+            "embeddings": ("batch", "seq", None),
+            "labels": ("batch", "seq"),
+        }
+    if cfg.family == "vlm":
+        return {
+            "patches": ("batch", None, None),
+            "tokens": ("batch", "seq"),
+        }
+    return {"tokens": ("batch", "seq")}
+
+
+def make_cache_axes(cfg: ModelConfig) -> dict:
+    """Logical axes tree matching `make_cache_specs` (for in_shardings)."""
+    layout = transformer.layer_layout(cfg)
+
+    def block_axes(bt: str) -> dict:
+        if bt == "attn":
+            if cfg.use_mla:
+                return {
+                    "c_kv": ("batch", "seq_kv", "kv_lora"),
+                    "k_rope": ("batch", "seq_kv", None),
+                }
+            if cfg.cluster_kv:
+                return {
+                    "centroids": ("batch", "kv_heads", "kv_clusters", None),
+                    "k_slots": ("batch", "kv_heads", "kv_clusters", None, None),
+                    "v_slots": ("batch", "kv_heads", "kv_clusters", None, None),
+                    "slot_valid": ("batch", "kv_heads", "kv_clusters", None),
+                    "k_recent": ("batch", None, "kv_heads", None),
+                    "v_recent": ("batch", None, "kv_heads", None),
+                    "recent_len": (),
+                }
+            return {
+                "k": ("batch", "seq_kv", "kv_heads", None),
+                "v": ("batch", "seq_kv", "kv_heads", None),
+            }
+        if bt == "mamba":
+            return {"ssm": ("batch", "mlp", "state"),
+                    "conv": ("batch", None, "mlp")}
+        return {
+            "wkv": ("batch", "heads", None, None),
+            "x_prev_time": ("batch", "embed"),
+            "x_prev_chan": ("batch", "embed"),
+        }
+
+    axes: dict = {"groups": {}, "index": ()}
+    for p, (bt, _) in enumerate(layout.positions):
+        axes["groups"][f"pos{p:02d}"] = jax.tree.map(
+            lambda a: ("layers",) + a,
+            block_axes(bt),
+            is_leaf=lambda a: isinstance(a, tuple),
+        )
+    for l in range(cfg.first_k_dense):
+        axes[f"dense{l}"] = block_axes(cfg.block_type(l))
+    return axes
+
+
+def num_text_tokens(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Tokens contributing to the LM loss (vlm: text suffix only)."""
+    if cfg.family == "vlm":
+        p = min(cfg.prefix_len, shape.seq_len // 2) or shape.seq_len // 2
+        return shape.global_batch * (shape.seq_len - p)
+    return shape.global_batch * shape.seq_len
+
+
+# ---------------------------------------------------------------------------
+# Embedding & head.
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg: ModelConfig, batch: dict) -> jax.Array:
+    emb = params["embed"]
+    if cfg.family == "audio":
+        x = batch["embeddings"].astype(_dtype(cfg)) @ emb["frontend_proj"]
+    elif cfg.family == "vlm":
+        patches = batch["patches"].astype(_dtype(cfg)) @ emb["frontend_proj"]
+        text = jnp.take(emb["tokens"], batch["tokens"], axis=0).astype(_dtype(cfg))
+        x = jnp.concatenate([patches, text], axis=1)
+    else:
+        x = jnp.take(emb["tokens"], batch["tokens"], axis=0).astype(_dtype(cfg))
+    return shard(x, ("batch", "seq", "embed"))
+
+
+def _logits(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    emb = params["embed"]
+    if cfg.tie_embeddings:
+        logits = x @ emb["tokens"].T.astype(x.dtype)
+    else:
+        logits = x @ emb["head"]
+    return shard(logits, ("batch", "seq", "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill).
+# ---------------------------------------------------------------------------
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    batch: dict,
+    *,
+    return_cache: bool = False,
+    remat: str = "block",
+    return_hidden: bool = False,
+):
+    """Returns (logits, aux_loss, caches_or_None); with `return_hidden`,
+    returns (final_hidden, aux_loss) and skips the unembedding."""
+    layout = transformer.layer_layout(cfg)
+    x = _embed_inputs(params, cfg, batch)
+    positions = jnp.arange(x.shape[1])[None, :]
+    aux_total = jnp.zeros((), jnp.float32)
+    caches: dict = {"groups": {}}
+
+    for l in range(cfg.first_k_dense):
+        x, c, aux = transformer.block_forward(
+            params[f"dense{l}"], x, cfg, cfg.block_type(l), False,
+            positions=positions, return_cache=return_cache,
+        )
+        aux_total += aux
+        if return_cache:
+            caches[f"dense{l}"] = c
+
+    def group_body(x, group_params):
+        # Barrier: keeps the FSDP weight all-gather *inside* the loop body
+        # (XLA otherwise rewrites gather(slice(stacked)) into
+        # slice(gather(stacked)) and hoists the full-model gather out).
+        group_params = jax.lax.optimization_barrier(group_params)
+        caches_g = {}
+        aux_g = jnp.zeros((), jnp.float32)
+        for p, (bt, moe) in enumerate(layout.positions):
+            x, c, aux = transformer.block_forward(
+                group_params[f"pos{p:02d}"], x, cfg, bt, moe,
+                positions=positions, return_cache=return_cache,
+            )
+            aux_g += aux
+            if return_cache:
+                caches_g[f"pos{p:02d}"] = c
+        x = shard(x, ("batch", "seq", "embed"))
+        return x, (aux_g, caches_g)
+
+    body = group_body
+    if remat == "block":
+        body = jax.checkpoint(
+            group_body,
+            policy=jax.checkpoint_policies.save_only_these_names(),
+        )
+    elif remat == "dots":
+        body = jax.checkpoint(
+            group_body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        )
+
+    x, (aux_g, caches_g) = jax.lax.scan(body, x, params["groups"])
+    aux_total += aux_g.sum()
+    if return_cache:
+        # scan stacks each position's cache across groups on axis 0.
+        caches["groups"] = caches_g
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    if return_hidden:
+        return x, aux_total
+    logits = _logits(params, cfg, x)
+    return logits, aux_total, (caches if return_cache else None)
+
+
+# ---------------------------------------------------------------------------
+# Decode.
+# ---------------------------------------------------------------------------
+
+def decode_step(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,          # (B,) int32 — the newest token per sequence
+    cache: dict,
+):
+    """One decode step for every sequence; returns (logits, new_cache)."""
+    index = cache["index"]
+    emb = params["embed"]
+    x = jnp.take(emb["tokens"], tokens[:, None], axis=0).astype(_dtype(cfg))
+    x = shard(x, ("batch", None, "embed"))
+
+    new_cache: dict = {"index": index + 1, "groups": {}}
+    for l in range(cfg.first_k_dense):
+        x, c = transformer.block_decode(
+            params[f"dense{l}"], x, cache[f"dense{l}"], index, cfg,
+            cfg.block_type(l), False,
+        )
+        new_cache[f"dense{l}"] = c
+
+    layout = transformer.layer_layout(cfg)
+
+    def group_body(x, scanned):
+        group_params, group_cache = scanned
+        group_params = jax.lax.optimization_barrier(group_params)
+        outs = {}
+        for p, (bt, moe) in enumerate(layout.positions):
+            x, c = transformer.block_decode(
+                group_params[f"pos{p:02d}"], x, group_cache[f"pos{p:02d}"],
+                index, cfg, bt, moe,
+            )
+            outs[f"pos{p:02d}"] = c
+        return x, outs
+
+    x, group_caches = jax.lax.scan(
+        group_body, x, (params["groups"], cache["groups"])
+    )
+    new_cache["groups"] = group_caches
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = _logits(params, cfg, x)[:, 0, :]
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Loss.
+# ---------------------------------------------------------------------------
+
+LOSS_CHUNK = 512
+
+
+def _targets_and_mask(cfg: ModelConfig, batch: dict, seq_len: int):
+    """Per-position target ids + validity mask aligned with hidden states.
+
+    Position t predicts target[t]; invalid positions (prefix patches, the
+    final position of causal LMs) carry target 0 and mask 0.
+    """
+    if cfg.family == "audio":
+        return batch["labels"], jnp.ones_like(batch["labels"], jnp.float32)
+    if cfg.family == "vlm":
+        text = batch["tokens"]
+        b = text.shape[0]
+        p = seq_len - text.shape[1]
+        targets = jnp.concatenate(
+            [jnp.zeros((b, p - 1), jnp.int32), text,
+             jnp.zeros((b, 1), jnp.int32)], axis=1,
+        )
+        mask = jnp.concatenate(
+            [jnp.zeros((b, p - 1), jnp.float32),
+             jnp.ones_like(text, jnp.float32),
+             jnp.zeros((b, 1), jnp.float32)], axis=1,
+        )
+        return targets, mask
+    toks = batch["tokens"]
+    targets = jnp.concatenate(
+        [toks[:, 1:], jnp.zeros_like(toks[:, :1])], axis=1
+    )
+    mask = jnp.concatenate(
+        [jnp.ones_like(toks[:, 1:], jnp.float32),
+         jnp.zeros((toks.shape[0], 1), jnp.float32)], axis=1,
+    )
+    return targets, mask
+
+
+def loss_fn(
+    params: dict,
+    cfg: ModelConfig,
+    batch: dict,
+    *,
+    z_loss: float = 1e-4,
+    remat: str = "block",
+):
+    """Mean next-token CE (+ z-loss + MoE aux).  Returns (loss, metrics).
+
+    The unembedding + CE runs *chunked over the sequence* (`LOSS_CHUNK`
+    positions at a time, chunk body checkpointed), so the (B, S, vocab)
+    logits tensor is never materialised — with 100k+ vocabularies this is
+    the difference between fitting in HBM and not.
+    """
+    hidden, aux = forward(params, cfg, batch, remat=remat, return_hidden=True)
+    b, s, d = hidden.shape
+    targets, mask = _targets_and_mask(cfg, batch, s)
+
+    chunk = min(LOSS_CHUNK, s)
+    if s % chunk:
+        chunk = s  # fall back to unchunked for odd lengths
+    nc = s // chunk
+    hs = hidden.reshape(b, nc, chunk, d).swapaxes(0, 1)
+    ts = targets.reshape(b, nc, chunk).swapaxes(0, 1)
+    ms = mask.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_ce(carry, inp):
+        h, t, m = inp
+        logits = _logits(params, cfg, h).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        ce_sum = ((logz - gold) * m).sum()
+        zl_sum = (jnp.square(logz) * m).sum()
+        c, zc = carry
+        return (c + ce_sum, zc + zl_sum), None
+
+    (ce_sum, zl_sum), _ = jax.lax.scan(
+        chunk_ce, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hs, ts, ms),
+    )
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = ce_sum / denom
+    zl = z_loss * zl_sum / denom
+    loss = ce + zl + aux
+    return loss, {"ce": ce, "z_loss": zl, "aux": aux}

@@ -1,0 +1,266 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch (EP-shardable).
+
+Dispatch follows the MegaBlocks/MaxText recipe adapted to pure XLA ops:
+top-k routing -> stable sort of (token, expert) assignments by expert ->
+in-group rank via one searchsorted -> scatter into a fixed (E, C, D) buffer
+(drops beyond capacity) -> per-expert GLU matmuls -> weighted scatter-add
+back.  The (E, C, D) buffer carries the logical "expert" axis, which the
+sharding rules map to the "model" mesh axis => expert parallelism; XLA SPMD
+inserts the all-to-alls at the buffer boundaries.
+
+Includes the paper-technique integration: `kmeans_router_init` seeds router
+rows with fast-k-means++ centroids of token embeddings so step-0 expert
+assignment is balanced (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import _act, mlp_specs, apply_mlp
+from repro.models.params import ParamSpec
+
+__all__ = ["moe_specs", "apply_moe", "kmeans_router_init"]
+
+
+EXPERT_PAD_MULTIPLE = 16  # physical experts padded to the TP mesh width
+
+
+def phys_experts(e: int) -> int:
+    """Physical expert count: padded up so EP divides the model axis."""
+    if e <= EXPERT_PAD_MULTIPLE:
+        return e
+    m = EXPERT_PAD_MULTIPLE
+    return ((e + m - 1) // m) * m
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d, e, ff = cfg.d_model, cfg.num_experts, cfg.expert_d_ff
+    ep = phys_experts(e)
+    specs = {
+        "router": ParamSpec((d, ep), ("embed", None), scale=0.02),
+        "wi_gate": ParamSpec((ep, d, ff), ("expert", "embed", "expert_mlp")),
+        "wi_up": ParamSpec((ep, d, ff), ("expert", "embed", "expert_mlp")),
+        "wo": ParamSpec((ep, ff, d), ("expert", "expert_mlp", "embed")),
+    }
+    if cfg.num_shared_experts:
+        specs["shared"] = mlp_specs(cfg, d_ff=cfg.num_shared_experts * ff)
+    return specs
+
+
+MOE_CHUNK_TOKENS = 65536  # dispatch window; bounds buffer/scatter temps
+
+
+def apply_moe(params: dict, x: jax.Array, cfg: ModelConfig):
+    """Returns (y, aux_load_balance_loss).
+
+    Token dispatch runs in windows of `MOE_CHUNK_TOKENS` (a checkpointed
+    `lax.scan`), bounding the (E, C, D) buffers and their scatter/gather
+    temporaries regardless of the global batch — the standard dispatch
+    microbatching used to keep MoE memory flat at scale.  Capacity applies
+    per window (noted in DESIGN.md; same capacity_factor semantics).
+    """
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    xf = shard(xf, ("batch", "embed"))
+    chunk = min(MOE_CHUNK_TOKENS, t)
+    if t % chunk:
+        chunk = t
+    nc = t // chunk
+    if nc == 1:
+        yf, aux = _moe_tokens(params, xf, cfg)
+        if cfg.num_shared_experts:
+            yf = yf + apply_mlp(params["shared"], x, cfg).reshape(t, d)
+        return yf.reshape(b, s, d), aux
+
+    xs = xf.reshape(nc, chunk, d)
+
+    @jax.checkpoint
+    def body(carry, xc):
+        yc, aux = _moe_tokens(params, xc, cfg)
+        return carry + aux, yc
+
+    aux, ys = jax.lax.scan(body, jnp.zeros((), jnp.float32), xs)
+    y = ys.reshape(b, s, d)
+    y = shard(y, ("batch", "seq", "embed"))
+    if cfg.num_shared_experts:
+        y = y + apply_mlp(params["shared"], x, cfg)
+    return y, aux / nc
+
+
+def _moe_tokens(params: dict, xf: jax.Array, cfg: ModelConfig):
+    if cfg.moe_dispatch == "two_stage":
+        return _moe_tokens_two_stage(params, xf, cfg)
+    return _moe_tokens_global(params, xf, cfg)
+
+
+def _dp_extent(t: int) -> int:
+    """Data-parallel shard count usable for two-stage dispatch."""
+    from repro.distributed.sharding import current_mesh
+
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    dp = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            dp *= mesh.shape[ax]
+    return dp if dp > 1 and t % dp == 0 else 1
+
+
+def _moe_tokens_two_stage(params: dict, xf: jax.Array, cfg: ModelConfig):
+    """Hierarchical dispatch (§Perf optimisation, DESIGN.md §4).
+
+    Stage 1 (local, zero comm): each DP shard routes and packs ITS tokens
+    into an (E, cap_local, D) buffer — the sort/scatter never crosses
+    shards, so SPMD emits no collectives for it.
+    Stage 2 (one reshard): the (dp, E, cap_local, D) buffer moves from
+    token-major to expert-major sharding — a single bounded all-to-all-like
+    reshard of exactly the routed activations — and the expert GLU runs
+    under EP.  The combine mirrors it.
+
+    Capacity is per shard (cap_total/dp), so drop behaviour matches the
+    global dispatch in distribution (same capacity_factor semantics).
+    """
+    t, d = xf.shape
+    e, k = cfg.num_experts, cfg.moe_top_k
+    ep = phys_experts(e)
+    dp = _dp_extent(t)
+    tl = t // dp
+    cap = int(np.ceil(tl * k / e * cfg.capacity_factor))
+    cap = max(8, min(-(-cap // 128) * 128 if cap > 128 else cap, tl))
+
+    xs = xf.reshape(dp, tl, d)
+    xs = shard(xs, ("dp_shard", None, "embed"))
+
+    def local_dispatch(x_loc):
+        logits = (x_loc @ params["router"]).astype(jnp.float32)
+        if ep > e:
+            logits = jnp.where(jnp.arange(ep)[None] >= e, -1.0e30, logits)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_vals, top_ids = jax.lax.top_k(probs, k)
+        weights = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+        density = jnp.zeros((ep,), jnp.float32).at[top_ids.reshape(-1)].add(1.0)
+        aux = e * jnp.sum(density / (tl * k) * probs.mean(0)) * cfg.router_aux_coeff
+        flat_e = top_ids.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(tl, dtype=jnp.int32), k)
+        flat_w = weights.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+        group_start = jnp.searchsorted(se, jnp.arange(ep, dtype=se.dtype))
+        rank = jnp.arange(tl * k, dtype=jnp.int32) - group_start[se].astype(jnp.int32)
+        keep = rank < cap
+        slot = jnp.where(keep, se.astype(jnp.int32) * cap + rank, ep * cap)
+        buf = jnp.zeros((ep * cap + 1, d), x_loc.dtype).at[slot].set(x_loc[st])
+        return buf[: ep * cap].reshape(ep, cap, d), (st, sw, keep, slot), aux
+
+    buf, combine_meta, aux = jax.vmap(local_dispatch)(xs)  # (dp, E, cap, D)
+    buf = shard(buf, ("dp_shard", "expert", None, "embed"))
+    # Stage 2: expert-major reshard — THE all-to-all.
+    buf_em = jnp.swapaxes(buf, 0, 1)                        # (E, dp, cap, D)
+    buf_em = shard(buf_em, ("expert", "dp_shard", None, "embed"))
+
+    gate = jnp.einsum("excd,edf->excf", buf_em, params["wi_gate"])
+    up = jnp.einsum("excd,edf->excf", buf_em, params["wi_up"])
+    h = _act(gate, cfg.act) * up
+    h = shard(h, ("expert", "dp_shard", None, "expert_mlp"))
+    out_em = jnp.einsum("excf,efd->excd", h, params["wo"])
+    out_em = shard(out_em, ("expert", "dp_shard", None, "embed"))
+    out = jnp.swapaxes(out_em, 0, 1)                        # (dp, E, cap, D)
+    out = shard(out, ("dp_shard", "expert", None, "embed"))
+
+    def local_combine(out_loc, meta):
+        st, sw, keep, slot = meta
+        flat = out_loc.reshape(ep * cap, d)
+        contrib = jnp.where(
+            keep[:, None], flat[jnp.minimum(slot, ep * cap - 1)], 0.0
+        ) * sw[:, None].astype(flat.dtype)
+        return jnp.zeros((tl, d), flat.dtype).at[st].add(contrib)
+
+    ys = jax.vmap(local_combine)(out, combine_meta)          # (dp, tl, D)
+    ys = shard(ys, ("dp_shard", None, "embed"))
+    return ys.reshape(t, d), aux.mean()
+
+
+def _moe_tokens_global(params: dict, xf: jax.Array, cfg: ModelConfig):
+    """Dispatch + expert GLU + combine for one (T, D) token window."""
+    t, d = xf.shape
+    e, k = cfg.num_experts, cfg.moe_top_k
+    ep = phys_experts(e)
+
+    logits = (xf @ params["router"]).astype(jnp.float32)      # (T, Ep)
+    if ep > e:  # padded (dummy) experts can never be routed to
+        pad_mask = jnp.arange(ep) >= e
+        logits = jnp.where(pad_mask[None, :], -1.0e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_ids = jax.lax.top_k(probs, k)               # (T, K)
+    weights = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance auxiliary loss.
+    density = jnp.zeros((ep,), jnp.float32).at[top_ids.reshape(-1)].add(1.0)
+    density = density / (t * k)
+    aux = e * jnp.sum(density * probs.mean(axis=0)) * cfg.router_aux_coeff
+
+    # ---- sort-based dispatch -------------------------------------------
+    cap = int(np.ceil(t * k / e * cfg.capacity_factor))
+    cap = max(8, min(-(-cap // 256) * 256 if cap > 256 else cap, t))
+    e = ep  # dispatch over the physical (padded) expert axis
+    flat_e = top_ids.reshape(-1)                               # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    flat_w = weights.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    group_start = jnp.searchsorted(se, jnp.arange(e, dtype=se.dtype))
+    rank = jnp.arange(t * k, dtype=jnp.int32) - group_start[se].astype(jnp.int32)
+    keep = rank < cap
+    slot = jnp.where(keep, se.astype(jnp.int32) * cap + rank, e * cap)
+
+    buf = jnp.zeros((e * cap + 1, d), xf.dtype).at[slot].set(xf[st])
+    buf = buf[: e * cap].reshape(e, cap, d)
+    buf = shard(buf, ("expert", None, "embed"))
+
+    gate = jnp.einsum("ecd,edf->ecf", buf, params["wi_gate"])
+    up = jnp.einsum("ecd,edf->ecf", buf, params["wi_up"])
+    h = _act(gate, cfg.act) * up
+    h = shard(h, ("expert", None, "expert_mlp"))
+    out = jnp.einsum("ecf,efd->ecd", h, params["wo"])
+    out = shard(out, ("expert", None, "embed"))
+
+    out_flat = out.reshape(e * cap, d)
+    contrib = jnp.where(
+        keep[:, None], out_flat[jnp.minimum(slot, e * cap - 1)], 0.0
+    ) * sw[:, None].astype(xf.dtype)
+    y = jnp.zeros((t, d), xf.dtype).at[st].add(contrib)
+    y = shard(y, ("batch", "embed"))
+    return y, aux
+
+
+def kmeans_router_init(
+    router: np.ndarray,
+    token_embeddings: np.ndarray,
+    *,
+    seeder: str = "fastkmeans++",
+    seed: int = 0,
+) -> np.ndarray:
+    """Initialise router rows from k-means++ centroids of token embeddings.
+
+    Paper-technique integration: centroid directions make the step-0 routing
+    partition the embedding space evenly (balanced expert load) instead of
+    slicing it with random hyperplanes.
+    """
+    from repro.core.seeding import SEEDERS
+
+    d, e = router.shape
+    rng = np.random.default_rng(seed)
+    result = SEEDERS[seeder](token_embeddings.astype(np.float64), e, rng)
+    ctr = result.centers
+    ctr = ctr / np.maximum(np.linalg.norm(ctr, axis=1, keepdims=True), 1e-9)
+    scale = float(np.abs(router).mean() * np.sqrt(d)) or 0.02
+    return (ctr * scale).T.astype(router.dtype)

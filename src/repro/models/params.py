@@ -1,0 +1,135 @@
+"""Minimal functional parameter system (no flax dependency).
+
+A model is described by a *spec tree*: nested dicts whose leaves are
+`ParamSpec(shape, logical_axes, init, scale)`.  From one spec tree we derive
+ - real parameters      (`init_params`, for tests/examples),
+ - abstract parameters  (`abstract_params`, for `.lower()` dry-runs),
+ - shardings            (`param_shardings`, logical axes -> NamedSharding).
+
+Layer `apply` functions consume the corresponding param subtree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import sharding_for
+
+__all__ = [
+    "ParamSpec",
+    "init_params",
+    "abstract_params",
+    "param_shardings",
+    "spec_bytes",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple                     # logical axis names, len == len(shape)
+    init: str = "normal"            # normal | zeros | ones
+    scale: float = -1.0             # -1 => 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_leaf(node) -> bool:
+    return isinstance(node, ParamSpec)
+
+
+def init_params(specs, key: jax.Array, dtype=jnp.float32):
+    """Materialise real parameters (host-side, for smoke tests/examples)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_leaf)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, dtype)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, dtype)
+        else:
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            scale = spec.scale if spec.scale > 0 else 1.0 / math.sqrt(max(fan_in, 1))
+            arr = (jax.random.normal(k, spec.shape, jnp.float32) * scale).astype(dtype)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(specs, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs (optionally sharded) — zero allocation."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        specs,
+        is_leaf=_is_leaf,
+    )
+
+
+def param_shardings(specs, mesh=None, rules=None):
+    """NamedSharding tree matching the spec tree (None without a mesh)."""
+    return jax.tree.map(
+        lambda s: sharding_for(s.shape, s.axes, mesh, rules),
+        specs,
+        is_leaf=_is_leaf,
+    )
+
+
+def zero_shardings(specs, mesh, rules=None, dp_axes=("pod", "data")):
+    """ZeRO-1 shardings for optimizer state: the parameter's own sharding
+    plus the data-parallel mesh axes on the largest still-replicated dim.
+
+    Under pjit this makes XLA reduce-scatter gradients into the DP-sharded
+    moments and all-gather the weight delta — the ZeRO-1 schedule — without
+    any manual collectives.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.distributed.sharding import resolve_spec
+
+    avail_all = tuple(a for a in dp_axes if a in mesh.axis_names)
+
+    def f(spec):
+        base = resolve_spec(spec.axes, spec.shape, mesh, rules)
+        parts = list(base) + [None] * (len(spec.shape) - len(base))
+        used = set()
+        for p in parts:
+            if p is None:
+                continue
+            used.update(p if isinstance(p, tuple) else (p,))
+        avail = tuple(a for a in avail_all if a not in used)
+        if avail:
+            # Largest replicated dim that the DP axes divide.
+            order = sorted(
+                range(len(spec.shape)), key=lambda i: -spec.shape[i]
+            )
+            for i in order:
+                if parts[i] is not None:
+                    continue
+                cand = avail
+                while cand:
+                    n = 1
+                    for a in cand:
+                        n *= mesh.shape[a]
+                    if spec.shape[i] % n == 0 and n > 1:
+                        parts[i] = cand if len(cand) > 1 else cand[0]
+                        break
+                    cand = cand[:-1]
+                if parts[i] is not None:
+                    break
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(f, specs, is_leaf=_is_leaf)
+
+
+def spec_bytes(specs, bytes_per_param: int = 2) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(specs, is_leaf=_is_leaf):
+        total += math.prod(leaf.shape) * bytes_per_param
+    return total

@@ -1,0 +1,224 @@
+"""RWKV-6 "Finch" block: data-dependent-decay linear attention.
+
+Time mixing follows the RWKV-6 recurrence with per-channel data-dependent
+decay w_t and bonus u:
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+
+Training uses the *chunked* formulation (the TPU adaptation of the CUDA wkv
+kernel, cf. gated-linear-attention): within a chunk of length L the decays
+telescope, so intra-chunk interactions become an (L, L) masked matmul with
+per-channel factors exp(a_i - b_j) split as exp(a_i) * exp(-b_j) (exponents
+are arranged to be <= 0 before splitting; the log-decay is clamped to keep
+exp(-b) inside f32).  The inter-chunk state is carried by a `lax.scan`
+wrapped in `jax.checkpoint`.
+
+Channel mixing is the RWKV squared-ReLU FFN with token shift.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.params import ParamSpec
+
+__all__ = [
+    "rwkv_time_specs",
+    "rwkv_channel_specs",
+    "rwkv_time_forward",
+    "rwkv_channel_forward",
+    "rwkv_time_decode",
+    "rwkv_channel_decode",
+    "rwkv_state_spec",
+]
+
+CHUNK = 16
+LORA_RANK = 32
+MIN_LOG_W = -2.5  # per-step decay floor (stability clamp; DESIGN.md §3)
+
+
+def _heads(cfg: ModelConfig):
+    hd = cfg.rwkv_head_dim
+    return cfg.d_model // hd, hd
+
+
+def rwkv_time_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h, hd = _heads(cfg)
+    r = LORA_RANK
+    return {
+        "mu_x": ParamSpec((d,), ("embed",), init="zeros"),
+        "mu": ParamSpec((5, d), (None, "embed"), init="zeros"),      # r,k,v,w,g
+        "lora_a": ParamSpec((5, d, r), (None, "embed", None), scale=0.02),
+        "lora_b": ParamSpec((5, r, d), (None, None, "embed"), scale=0.02),
+        "w0": ParamSpec((d,), ("embed",), init="zeros"),
+        "wr": ParamSpec((d, d), ("embed", "heads")),
+        "wk": ParamSpec((d, d), ("embed", "heads")),
+        "wv": ParamSpec((d, d), ("embed", "heads")),
+        "wg": ParamSpec((d, d), ("embed", "heads")),
+        "u": ParamSpec((h, hd), ("heads", None), init="zeros"),
+        "ln_scale": ParamSpec((d,), ("embed",), init="ones"),
+        "wo": ParamSpec((d, d), ("heads", "embed")),
+    }
+
+
+def rwkv_channel_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "mu_k": ParamSpec((d,), ("embed",), init="zeros"),
+        "mu_r": ParamSpec((d,), ("embed",), init="zeros"),
+        "wk": ParamSpec((d, cfg.d_ff), ("embed", "mlp")),
+        "wv": ParamSpec((cfg.d_ff, d), ("mlp", "embed")),
+        "wr": ParamSpec((d, d), ("embed", None)),
+    }
+
+
+def rwkv_state_spec(cfg: ModelConfig, batch: int, dtype) -> dict:
+    h, hd = _heads(cfg)
+    return {
+        "wkv": jax.ShapeDtypeStruct((batch, h, hd, hd), jnp.float32),
+        "x_prev_time": jax.ShapeDtypeStruct((batch, cfg.d_model), dtype),
+        "x_prev_chan": jax.ShapeDtypeStruct((batch, cfg.d_model), dtype),
+    }
+
+
+def _token_shift(x, x_prev=None):
+    """x_{t-1} along seq; first position gets x_prev (or zeros)."""
+    b, s, d = x.shape
+    if s == 1:
+        prev = jnp.zeros_like(x) if x_prev is None else x_prev[:, None, :]
+        return prev
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+    if x_prev is not None:
+        shifted = shifted.at[:, 0, :].set(x_prev)
+    return shifted
+
+
+def _ddlerp(params, x, xs):
+    """Data-dependent lerp (RWKV-6 token shift): one mix per {r,k,v,w,g}."""
+    dx = xs - x
+    base = x + dx * params["mu_x"]
+    lora = jnp.einsum("bsd,cdr->bscr", jnp.tanh(base), params["lora_a"])
+    delta = jnp.einsum("bscr,crd->bscd", lora, params["lora_b"])
+    mix = params["mu"][None, None] + delta                      # (B,S,5,D)
+    return x[:, :, None, :] + dx[:, :, None, :] * mix           # (B,S,5,D)
+
+
+def _time_projections(params, x, cfg, x_prev=None):
+    h, hd = _heads(cfg)
+    b, s, d = x.shape
+    xs = _token_shift(x, x_prev)
+    mixed = _ddlerp(params, x, xs)
+    xr, xk, xv, xw, xg = [mixed[:, :, i, :] for i in range(5)]
+    r = (xr @ params["wr"]).reshape(b, s, h, hd)
+    k = (xk @ params["wk"]).reshape(b, s, h, hd)
+    v = (xv @ params["wv"]).reshape(b, s, h, hd)
+    g = xg @ params["wg"]
+    # Data-dependent decay: w0 + lora over xw (rank LORA_RANK).
+    wlo = jnp.einsum("bsd,dr->bsr", jnp.tanh(xw), params["lora_a"][3])
+    wdd = jnp.einsum("bsr,rd->bsd", wlo, params["lora_b"][3])
+    logw = -jnp.exp(params["w0"][None, None] + wdd)
+    logw = jnp.clip(logw, MIN_LOG_W, -1e-4).reshape(b, s, h, hd)
+    return r, k, v, g, logw.astype(jnp.float32)
+
+
+def _group_norm(x, scale, h, hd, eps=1e-5):
+    """Per-head layer norm on the wkv output (RWKV's GroupNorm)."""
+    b, s, d = x.shape
+    xh = x.reshape(b, s, h, hd).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = ((xh - mu) ** 2).mean(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(b, s, d) * scale).astype(x.dtype)
+
+
+def rwkv_time_forward(params, x: jax.Array, cfg: ModelConfig):
+    """(B, S, D) -> (B, S, D); chunked wkv linear attention."""
+    b, s, d = x.shape
+    h, hd = _heads(cfg)
+    r, k, v, g, logw = _time_projections(params, x, cfg)
+    u = params["u"].astype(jnp.float32)
+
+    chunk = min(CHUNK, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rf = r.astype(jnp.float32).reshape(b, nc, chunk, h, hd)
+    kf = k.astype(jnp.float32).reshape(b, nc, chunk, h, hd)
+    vf = v.astype(jnp.float32).reshape(b, nc, chunk, h, hd)
+    wf = logw.reshape(b, nc, chunk, h, hd)
+
+    @jax.checkpoint
+    def chunk_step(S, inp):
+        rc, kc, vc, wc = inp                      # (B, L, H, hd)
+        cum = jnp.cumsum(wc, axis=1)              # b_j = sum_{l<=j} logw_l
+        cum_prev = cum - wc                       # a_i = sum_{l<i} logw_l
+        r_dec = rc * jnp.exp(cum_prev)            # exponents <= 0
+        k_dec = kc * jnp.exp(-cum)                # grows, bounded by clamp
+        scores = jnp.einsum("bihd,bjhd->bhij", r_dec, k_dec)
+        il = jnp.arange(rc.shape[1])
+        mask = il[:, None] > il[None, :]          # strict lower triangle
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        bonus = jnp.einsum("bihd,bihd->bih", rc * u[None, None], kc)
+        y = jnp.einsum("bhij,bjhd->bihd", scores, vc)
+        y = y + bonus[..., None] * vc
+        y = y + jnp.einsum("bihd,bhde->bihe", r_dec, S)
+        total = cum[:, -1]                        # (B, H, hd)
+        k2 = kc * jnp.exp(total[:, None] - cum)
+        S_new = jnp.exp(total)[..., None] * S + jnp.einsum(
+            "bjhd,bjhe->bhde", k2, vc
+        )
+        return S_new, y
+
+    S0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    _, ys = jax.lax.scan(
+        chunk_step, S0,
+        (rf.swapaxes(0, 1), kf.swapaxes(0, 1),
+         vf.swapaxes(0, 1), wf.swapaxes(0, 1)),
+    )
+    y = ys.swapaxes(0, 1).reshape(b, s, d).astype(x.dtype)
+    y = _group_norm(y, params["ln_scale"], h, hd)
+    y = y * jax.nn.silu(g)
+    y = shard(y, ("batch", "seq", "heads"))
+    return y @ params["wo"]
+
+
+def rwkv_time_decode(params, x: jax.Array, state: dict, cfg: ModelConfig):
+    """Single-token wkv step.  x: (B, 1, D)."""
+    b, _, d = x.shape
+    h, hd = _heads(cfg)
+    r, k, v, g, logw = _time_projections(
+        params, x, cfg, x_prev=state["x_prev_time"]
+    )
+    u = params["u"].astype(jnp.float32)
+    rf = r.astype(jnp.float32)[:, 0]
+    kf = k.astype(jnp.float32)[:, 0]
+    vf = v.astype(jnp.float32)[:, 0]
+    wf = logw[:, 0]
+    S = state["wkv"]
+    kv = jnp.einsum("bhd,bhe->bhde", kf, vf)
+    y = jnp.einsum("bhd,bhde->bhe", rf, S + u[None, :, :, None] * kv)
+    S_new = jnp.exp(wf)[..., None] * S + kv
+    y = y.reshape(b, 1, d).astype(x.dtype)
+    y = _group_norm(y, params["ln_scale"], h, hd)
+    y = y * jax.nn.silu(g)
+    out = y @ params["wo"]
+    return out, {"wkv": S_new, "x_prev_time": x[:, 0]}
+
+
+def rwkv_channel_forward(params, x: jax.Array, cfg: ModelConfig, x_prev=None):
+    xs = _token_shift(x, x_prev)
+    xk = x + (xs - x) * params["mu_k"]
+    xr = x + (xs - x) * params["mu_r"]
+    hidden = jnp.square(jax.nn.relu(xk @ params["wk"]))
+    hidden = shard(hidden, ("batch", "seq", "mlp"))
+    out = hidden @ params["wv"]
+    return jax.nn.sigmoid(xr @ params["wr"]) * out
+
+
+def rwkv_channel_decode(params, x: jax.Array, state: dict, cfg: ModelConfig):
+    y = rwkv_channel_forward(params, x, cfg, x_prev=state["x_prev_chan"])
+    return y, {"x_prev_chan": x[:, 0]}

@@ -1,0 +1,193 @@
+"""Block composition: (attn | mamba | rwkv6) x (dense | MoE) residual blocks,
+grouped into scan-able homogeneous layer layouts.
+
+A model's layers are described by a periodic *layout*: `period` positions,
+each with a (block_type, is_moe) descriptor, repeated `num_groups` times
+(plus `first_k_dense` leading unscanned dense layers, for DeepSeek).  Params
+for each position are stacked across groups on a leading "layers" axis so
+the whole depth is one `lax.scan` — keeping HLO size (and CPU compile time)
+independent of depth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, mamba, rwkv6
+from repro.models.layers import apply_mlp, apply_norm, mlp_specs, norm_specs
+from repro.models.moe import apply_moe, moe_specs
+from repro.models.params import ParamSpec
+
+__all__ = ["layer_layout", "block_specs", "block_forward", "block_decode",
+           "block_cache_spec", "stack_specs", "LayerLayout"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerLayout:
+    period: int
+    num_groups: int
+    first_k_dense: int
+    positions: tuple              # tuple[(block_type, is_moe)] of len period
+
+    @property
+    def scanned_layers(self) -> int:
+        return self.period * self.num_groups
+
+
+def layer_layout(cfg: ModelConfig) -> LayerLayout:
+    period = cfg.attn_period if cfg.attn_period > 1 else 1
+    if cfg.num_experts and cfg.moe_period > 1:
+        # period must cover the MoE pattern as well.
+        import math
+
+        period = math.lcm(period, cfg.moe_period)
+    scanned = cfg.num_layers - cfg.first_k_dense
+    assert scanned % period == 0, (cfg.name, scanned, period)
+    positions = tuple(
+        (cfg.block_type(cfg.first_k_dense + p), cfg.layer_is_moe(cfg.first_k_dense + p))
+        for p in range(period)
+    )
+    # The layout must be consistent across groups.
+    for layer in range(cfg.first_k_dense, cfg.num_layers):
+        p = (layer - cfg.first_k_dense) % period
+        assert (cfg.block_type(layer), cfg.layer_is_moe(layer)) == positions[p], (
+            cfg.name, layer, positions[p]
+        )
+    return LayerLayout(
+        period=period,
+        num_groups=scanned // period,
+        first_k_dense=cfg.first_k_dense,
+        positions=positions,
+    )
+
+
+def stack_specs(specs, n: int):
+    """Prefix every ParamSpec with a ("layers",) group axis of size n."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes,
+                            init=s.init, scale=s.scale),
+        specs,
+        is_leaf=lambda s: isinstance(s, ParamSpec),
+    )
+
+
+# ---------------------------------------------------------------------------
+# One residual block.
+# ---------------------------------------------------------------------------
+
+def block_specs(cfg: ModelConfig, block_type: str, is_moe: bool) -> dict:
+    specs = {"norm1": norm_specs(cfg), "norm2": norm_specs(cfg)}
+    if block_type == "attn":
+        specs["attn"] = attention.attn_specs(cfg)
+    elif block_type == "mamba":
+        specs["mixer"] = mamba.mamba_specs(cfg)
+    elif block_type == "rwkv6":
+        specs["time_mix"] = rwkv6.rwkv_time_specs(cfg)
+    else:
+        raise ValueError(block_type)
+    if block_type == "rwkv6":
+        specs["channel_mix"] = rwkv6.rwkv_channel_specs(cfg)
+    elif is_moe:
+        specs["moe"] = moe_specs(cfg)
+    else:
+        specs["mlp"] = mlp_specs(cfg)
+    return specs
+
+
+def block_cache_spec(
+    cfg: ModelConfig, block_type: str, batch: int, max_seq: int, dtype
+) -> dict:
+    if block_type == "attn":
+        if cfg.cluster_kv and not cfg.use_mla:
+            from repro.models import cluster_attn as CA
+
+            return CA.cluster_cache_specs(
+                batch, cfg.num_kv_heads, cfg.head_dim, cfg.head_dim,
+                max_seq,
+                CA.ClusterKVConfig(num_clusters=cfg.cluster_kv_clusters,
+                                   topc=cfg.cluster_kv_topc),
+                dtype,
+            )
+        return attention.init_kv_cache_spec(cfg, batch, max_seq, dtype)
+    if block_type == "mamba":
+        return mamba.mamba_state_spec(cfg, batch, dtype)
+    if block_type == "rwkv6":
+        return rwkv6.rwkv_state_spec(cfg, batch, dtype)
+    raise ValueError(block_type)
+
+
+def block_forward(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    block_type: str,
+    is_moe: bool,
+    *,
+    positions: Optional[jax.Array] = None,
+    return_cache: bool = False,
+):
+    """Returns (x, cache_entries_or_None, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    h = apply_norm(params["norm1"], x, cfg)
+    if block_type == "attn":
+        y, cache = attention.attn_forward(
+            params["attn"], h, cfg, positions=positions, return_cache=return_cache
+        )
+    elif block_type == "mamba":
+        y = mamba.mamba_forward(params["mixer"], h, cfg)
+    else:
+        y = rwkv6.rwkv_time_forward(params["time_mix"], h, cfg)
+    x = x + y
+
+    h = apply_norm(params["norm2"], x, cfg)
+    if block_type == "rwkv6":
+        y = rwkv6.rwkv_channel_forward(params["channel_mix"], h, cfg)
+    elif is_moe:
+        y, aux = apply_moe(params["moe"], h, cfg)
+    else:
+        y = apply_mlp(params["mlp"], h, cfg)
+    x = x + y
+    return x, cache, aux
+
+
+def block_decode(
+    params: dict,
+    x: jax.Array,
+    cache: dict,
+    index: jax.Array,
+    cfg: ModelConfig,
+    block_type: str,
+    is_moe: bool,
+):
+    """Single-token step.  Returns (x, updated_cache)."""
+    h = apply_norm(params["norm1"], x, cfg)
+    if block_type == "attn":
+        if cfg.cluster_kv and not cfg.use_mla:
+            y, cache = attention.attn_decode_clustered(
+                params["attn"], h, cache, index, cfg
+            )
+        else:
+            y, cache = attention.attn_decode(params["attn"], h, cache, index, cfg)
+    elif block_type == "mamba":
+        y, cache = mamba.mamba_decode(params["mixer"], h, cache, cfg)
+    else:
+        y, tcache = rwkv6.rwkv_time_decode(params["time_mix"], h, cache, cfg)
+        cache = {**cache, **tcache}
+    x = x + y
+
+    h = apply_norm(params["norm2"], x, cfg)
+    if block_type == "rwkv6":
+        y, ccache = rwkv6.rwkv_channel_decode(params["channel_mix"], h, cache, cfg)
+        cache = {**cache, **ccache}
+    elif is_moe:
+        y, _ = apply_moe(params["moe"], h, cfg)
+    else:
+        y = apply_mlp(params["mlp"], h, cfg)
+    x = x + y
+    return x, cache

@@ -1,0 +1,89 @@
+"""Batched serving engine (static batching) + hybrid-arch prefill replay.
+
+The engine drives `prefill` + `decode_step` for aligned prompt batches:
+greedy or temperature sampling, stop on max tokens.  For hybrid/SSM stacks
+(whose recurrent state is not threaded out of the training forward),
+`replay_prefill` builds the decode state by replaying the prompt through
+`decode_step` token by token — O(prompt) decode steps, used by the examples
+and tests (a fused prefill for SSM stacks would thread chunk states out of
+the scan; noted as future work in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import decode_step, make_cache_specs
+from repro.models.transformer import layer_layout
+from repro.serving.prefill import prefill
+
+__all__ = ["ServeConfig", "Engine"]
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0        # 0 => greedy
+    max_seq: int = 512
+    seed: int = 0
+
+
+class Engine:
+    """Minimal batched engine over a fixed model + params."""
+
+    def __init__(self, params, cfg: ModelConfig, serve: ServeConfig):
+        self.params = params
+        self.cfg = cfg
+        self.serve = serve
+        self._step = jax.jit(
+            lambda p, t, c: decode_step(p, cfg, t, c)
+        )
+
+    def _empty_cache(self, batch: int):
+        specs = make_cache_specs(self.cfg, batch, self.serve.max_seq)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+
+    def replay_prefill(self, tokens: jax.Array):
+        """Prompt -> decode cache by sequential replay (any arch)."""
+        b, s = tokens.shape
+        cache = self._empty_cache(b)
+        logits = None
+        for t in range(s):
+            logits, cache = self._step(self.params, tokens[:, t], cache)
+        return logits, cache
+
+    def generate(self, prompts: np.ndarray) -> np.ndarray:
+        """prompts: (B, S) int32 (aligned).  Returns (B, max_new_tokens)."""
+        cfg, serve = self.cfg, self.serve
+        tokens = jnp.asarray(prompts, jnp.int32)
+        use_fused = all(
+            bt == "attn" for bt, _ in layer_layout(cfg).positions
+        )
+        if use_fused and not cfg.first_k_dense:
+            logits, cache = prefill(
+                self.params, cfg, {"tokens": tokens}, max_seq=serve.max_seq
+            )
+        else:
+            logits, cache = self.replay_prefill(tokens)
+        key = jax.random.key(serve.seed)
+        out = []
+        cur = self._sample(logits, key)
+        for i in range(serve.max_new_tokens):
+            out.append(np.asarray(cur))
+            logits, cache = self._step(self.params, cur, cache)
+            key, sub = jax.random.split(key)
+            cur = self._sample(logits, sub)
+        return np.stack(out, axis=1)
+
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        if self.serve.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.serve.temperature, axis=-1
+        ).astype(jnp.int32)

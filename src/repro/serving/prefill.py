@@ -1,0 +1,54 @@
+"""Prefill: encode a prompt batch, producing next-token logits + KV cache."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.models.model import forward
+
+__all__ = ["prefill"]
+
+
+def _pad_attn_cache(entry: dict, seq_axis: int, pad: int) -> dict:
+    def p(x):
+        widths = [(0, 0)] * x.ndim
+        widths[seq_axis] = (0, pad)
+        return jnp.pad(x, widths)
+
+    return jax.tree.map(p, entry)
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: dict, *, max_seq: int = 0):
+    """Returns (last_logits (B, V), cache) ready for `decode_step`.
+
+    Attention cache tensors are padded to `max_seq` along their sequence
+    axis; recurrent states (mamba/rwkv) carry no sequence axis and pass
+    through.  Mamba/RWKV prefill state is rebuilt by a short decode replay
+    in `engine.py` (the training forward does not thread recurrent state
+    out of its chunk scan).
+    """
+    layout = transformer.layer_layout(cfg)
+    if any(bt != "attn" for bt, _ in layout.positions):
+        raise NotImplementedError(
+            "prefill() currently supports attention-only stacks; use "
+            "serving.engine.replay_prefill for hybrid/SSM archs"
+        )
+    logits, _, caches = forward(params, cfg, batch, return_cache=True,
+                                remat="none")
+    seq_len = logits.shape[1]
+    max_seq = max(max_seq, seq_len)
+    pad = max_seq - seq_len
+
+    cache: dict = {"groups": {}}
+    for p_idx in range(layout.period):
+        key = f"pos{p_idx:02d}"
+        # grouped leaves: (num_groups, B, S, ...) => seq axis 2.
+        cache["groups"][key] = _pad_attn_cache(caches["groups"][key], 2, pad)
+    for l in range(cfg.first_k_dense):
+        # ungrouped leaves: (B, S, ...) => seq axis 1.
+        cache[f"dense{l}"] = _pad_attn_cache(caches[f"dense{l}"], 1, pad)
+    cache["index"] = jnp.asarray(seq_len, jnp.int32)
+    return logits[:, -1, :], cache

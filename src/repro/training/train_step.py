@@ -1,0 +1,115 @@
+"""The jit-able training step: microbatched grads -> clip -> AdamW.
+
+Gradient accumulation is a `lax.scan` over microbatches (the leading batch
+dim is reshaped to (microbatches, micro_bs, ...)), so activation memory is
+bounded by one microbatch while XLA overlaps the per-microbatch backward
+collectives with the next microbatch's compute (the standard accumulation
+overlap).  Remat policy selects what the backward recomputes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models.model import loss_fn
+from repro.optim.adamw import (
+    AdamWConfig,
+    apply_updates,
+    clip_by_global_norm,
+    init_opt_state,
+)
+
+__all__ = ["make_train_step", "make_adamw_config", "train_state_specs"]
+
+
+def make_adamw_config(tc: TrainConfig) -> AdamWConfig:
+    return AdamWConfig(
+        learning_rate=tc.learning_rate,
+        warmup_steps=tc.warmup_steps,
+        total_steps=tc.total_steps,
+        weight_decay=tc.weight_decay,
+    )
+
+
+def _split_micro(batch: dict, n: int) -> dict:
+    def r(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape((n, b // n) + x.shape[1:])
+
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig, grad_shardings=None):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    `grad_shardings` (optional NamedSharding tree, typically the ZeRO-1
+    shardings) pins the f32 gradient accumulator: XLA then reduce-scatters
+    each microbatch's grads into the DP-sharded accumulator instead of
+    holding a param-sharded f32 copy per device.
+    """
+    adamw = make_adamw_config(tc)
+
+    def constrain(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree, grad_shardings)
+
+    def grads_one_micro(params, micro):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, micro, z_loss=tc.z_loss, remat=tc.remat),
+            has_aux=True,
+        )(params)
+        return loss, metrics, grads
+
+    def step(params, opt_state, batch):
+        if tc.microbatches > 1:
+            micros = _split_micro(batch, tc.microbatches)
+
+            def body(acc, micro):
+                loss_a, grads_a = acc
+                loss, _, grads = grads_one_micro(params, micro)
+                # Constrain the per-micro grads FIRST: each leaf is
+                # reduce-scattered to the ZeRO sharding as it is produced,
+                # so the param-sharded grad tree never fully materialises.
+                grads = constrain(grads)
+                grads = constrain(jax.tree.map(jnp.add, grads_a, grads))
+                return (loss_a + loss, grads), None
+
+            zero_grads = constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            ))
+            (loss_sum, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zero_grads), micros
+            )
+            inv = 1.0 / tc.microbatches
+            loss = loss_sum * inv
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            metrics = {}
+        else:
+            loss, metrics, grads = grads_one_micro(params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+        params, opt_state, lr = apply_updates(params, grads, opt_state, adamw)
+        out = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        out.update(metrics)
+        return params, opt_state, out
+
+    return step
+
+
+def train_state_specs(param_tree, dtype=jnp.float32):
+    """Abstract optimizer state matching a param (spec or array) tree."""
+    shaped = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dtype), param_tree
+    )
+    return {
+        "m": shaped,
+        "v": jax.tree.map(lambda s: s, shaped),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }

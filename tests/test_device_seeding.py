@@ -1,0 +1,68 @@
+"""Device-side (jit) FASTK-MEANS++ cross-checked against the faithful
+CPU data structure on the SAME embedding."""
+
+import jax
+import numpy as np
+
+from repro.core.device_seeding import device_fast_kmeanspp, prepare_embedding
+from repro.core.multitree import MultiTreeSampler
+from repro.core.seeding import clustering_cost, kmeanspp
+from repro.core.tree_embedding import build_multitree
+
+
+def _data(n=1500, d=6, seed=0):
+    rng = np.random.default_rng(seed)
+    ctr = rng.normal(size=(30, d)) * 12
+    return ctr[rng.integers(30, size=n)] + rng.normal(size=(n, d))
+
+
+def test_weight_sweep_matches_faithful_structure():
+    """Opening the same centers leaves identical weights in both forms."""
+    pts = _data()
+    emb = build_multitree(pts, seed=3)
+    mt = MultiTreeSampler(pts, embedding=emb)
+    lo, hi, meta = prepare_embedding(pts, seed=999)  # seed unused below
+
+    # rebuild device tensors from the SAME embedding for the comparison
+    from repro.kernels.ops import split_codes_u64, tree_sep_update
+    import jax.numpy as jnp
+
+    codes = emb.codes_array()[:, 1:, :]
+    lo, hi = split_codes_u64(codes)
+    weights = jnp.full((len(pts),), emb.dist_upper_bound_sq, jnp.float32)
+    centers = [5, 700, 1234]
+    for x in centers:
+        mt.open(x)
+        for t in range(3):
+            weights = tree_sep_update(
+                jnp.asarray(lo[t]), jnp.asarray(hi[t]),
+                jnp.asarray(lo[t, :, x]), jnp.asarray(hi[t, :, x]),
+                weights,
+                scale=2.0 * np.sqrt(emb.dim) * emb.max_dist,
+                num_levels=emb.num_levels,
+            )
+    np.testing.assert_allclose(np.asarray(weights), mt.weights, rtol=2e-4,
+                               atol=1e-3)
+
+
+def test_device_seeder_quality():
+    """End-to-end jit seeder: D^2-quality centers (vs uniform baseline)."""
+    pts = _data(seed=4)
+    lo, hi, meta = prepare_embedding(pts, seed=1)
+    chosen = device_fast_kmeanspp(
+        lo, hi, 25, jax.random.key(0),
+        scale=meta["scale"], num_levels=meta["num_levels"],
+        m_init=meta["m_init"],
+    )
+    chosen = np.asarray(chosen)
+    assert len(np.unique(chosen)) == 25
+    cost = clustering_cost(pts, pts[chosen])
+    km = kmeanspp(pts, 25, np.random.default_rng(0))
+    exact = clustering_cost(pts, km.centers)
+    rng = np.random.default_rng(1)
+    uni = np.mean([
+        clustering_cost(pts, pts[rng.choice(len(pts), 25, replace=False)])
+        for _ in range(3)
+    ])
+    assert cost < 0.7 * uni
+    assert cost < 2.0 * exact

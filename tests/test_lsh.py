@@ -1,0 +1,54 @@
+"""Monotone LSH structure (paper Theorem 5.1 properties)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lsh import MonotoneLSH
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 10), st.integers(2, 60), st.integers(0, 9999),
+       st.integers(1, 8))
+def test_monotone_under_insertions(d, n_centers, seed, rebuild_every):
+    """dist(p, Query(p)) is non-increasing as centers are inserted."""
+    rng = np.random.default_rng(seed)
+    lsh = MonotoneLSH(d, r=2.0, seed=seed, rebuild_every=rebuild_every)
+    centers = rng.normal(size=(n_centers, d))
+    queries = rng.normal(size=(25, d))
+    prev = np.full(len(queries), np.inf)
+    for c in centers:
+        lsh.insert(c)
+        _, d2 = lsh.query_batch(queries)
+        assert (d2 <= prev + 1e-9).all()
+        prev = d2
+
+
+def test_reported_distance_is_lower_bounded_by_true_nn():
+    rng = np.random.default_rng(0)
+    d = 6
+    lsh = MonotoneLSH(d, r=3.0, seed=1)
+    centers = rng.normal(size=(40, d))
+    for c in centers:
+        lsh.insert(c)
+    queries = rng.normal(size=(100, d))
+    ids, d2 = lsh.query_batch(queries)
+    true = ((queries[:, None, :] - centers[None]) ** 2).sum(-1).min(1)
+    finite = np.isfinite(d2)
+    assert (d2[finite] >= true[finite] - 1e-9).all()
+    # wide buckets => most queries should find their true NN exactly
+    assert np.isclose(d2[finite], true[finite]).mean() > 0.9
+
+
+def test_query_ids_valid_and_distance_consistent():
+    rng = np.random.default_rng(2)
+    d = 4
+    lsh = MonotoneLSH(d, r=5.0, seed=3)
+    centers = rng.normal(size=(20, d))
+    for c in centers:
+        lsh.insert(c)
+    qs = rng.normal(size=(30, d))
+    ids, d2 = lsh.query_batch(qs)
+    for q, i, dd in zip(qs, ids, d2):
+        if np.isfinite(dd):
+            assert 0 <= i < 20
+            assert np.isclose(((q - centers[i]) ** 2).sum(), dd, rtol=1e-6)

@@ -1,0 +1,60 @@
+"""MULTITREEOPEN/SAMPLE data-structure invariants (paper §4, invariant 1+3)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.multitree import MultiTreeSampler
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(5, 120), st.integers(1, 8), st.integers(0, 10_000),
+       st.integers(1, 25))
+def test_invariant_weights_match_brute_force(n, d, seed, opens):
+    rng = np.random.default_rng(seed)
+    pts = rng.normal(size=(n, d)) * rng.uniform(0.1, 30)
+    mt = MultiTreeSampler(pts, seed=seed)
+    opened = []
+    r = np.random.default_rng(seed + 1)
+    for i in range(min(opens, n)):
+        x = int(r.integers(n)) if i == 0 else mt.sample(r)
+        mt.open(x)
+        opened.append(x)
+    bf = mt.brute_force_weights(np.array(opened))
+    assert np.allclose(mt.weights, bf, rtol=1e-9, atol=1e-9)
+    assert np.isclose(mt.total_weight(), mt.weights.sum(), rtol=1e-6)
+
+
+def test_opened_points_get_zero_weight():
+    rng = np.random.default_rng(0)
+    pts = rng.normal(size=(50, 4))
+    mt = MultiTreeSampler(pts, seed=0)
+    mt.open(7)
+    assert mt.weights[7] == 0.0
+    mt.open(12)
+    assert mt.weights[12] == 0.0
+    # zero-weight points are never sampled again
+    draws = mt.sample_batch(np.random.default_rng(1), 500)
+    assert not np.isin(draws, [7, 12]).any()
+
+
+def test_weights_monotone_decreasing():
+    rng = np.random.default_rng(3)
+    pts = rng.normal(size=(80, 6)) * 4
+    mt = MultiTreeSampler(pts, seed=1)
+    prev = mt.weights.copy()
+    r = np.random.default_rng(2)
+    for i in range(15):
+        x = int(r.integers(80)) if i == 0 else mt.sample(r)
+        mt.open(x)
+        assert (mt.weights <= prev + 1e-12).all()
+        prev = mt.weights.copy()
+
+
+def test_duplicate_points_handled():
+    rng = np.random.default_rng(4)
+    base = rng.normal(size=(10, 3))
+    pts = np.concatenate([base, base])  # exact duplicates
+    mt = MultiTreeSampler(pts, seed=2)
+    mt.open(0)
+    # the duplicate of point 0 sits in the same leaves => weight 0
+    assert mt.weights[10] == 0.0

@@ -1,0 +1,76 @@
+"""Optimizer + preprocessing unit tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.adamw import (
+    AdamWConfig,
+    apply_updates,
+    clip_by_global_norm,
+    init_opt_state,
+    lr_schedule,
+)
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(learning_rate=1e-3, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    steps = jnp.arange(0, 120)
+    lrs = jax.vmap(lambda s: lr_schedule(cfg, s))(steps)
+    assert float(lrs[0]) == 0.0
+    assert np.isclose(float(lrs[10]), 1e-3, rtol=1e-3)       # warmup peak
+    assert float(lrs[60]) < float(lrs[20])                   # cosine decay
+    assert np.isclose(float(lrs[110]), 1e-4, rtol=1e-2)      # min ratio
+
+
+def test_weight_decay_matrices_only():
+    cfg = AdamWConfig(learning_rate=1.0, weight_decay=0.5, warmup_steps=0,
+                      total_steps=1, b1=0.0, b2=0.0, eps=1.0)
+    params = {"mat": jnp.ones((2, 2)), "vec": jnp.ones((4,))}
+    grads = jax.tree.map(jnp.zeros_like, params)
+    state = init_opt_state(params)
+    new, state, lr = apply_updates(params, grads, state, cfg)
+    # zero grads: matrix shrinks by wd*lr, vector untouched
+    assert float(new["mat"][0, 0]) < 1.0
+    assert float(new["vec"][0]) == 1.0
+
+
+def test_moments_keep_requested_dtype():
+    params = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    state = init_opt_state(params, jnp.bfloat16)
+    grads = {"w": jnp.full((4, 4), 0.1, jnp.float32)}
+    cfg = AdamWConfig(warmup_steps=0, total_steps=10)
+    _, state, _ = apply_updates(params, grads, state, cfg)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    assert state["v"]["w"].dtype == jnp.bfloat16
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.1, 100.0), st.integers(0, 2 ** 31 - 1))
+def test_clip_by_global_norm(max_norm, seed):
+    rng = np.random.default_rng(seed)
+    tree = {"a": jnp.asarray(rng.normal(size=(7,)) * 10, jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(3, 3)) * 10, jnp.float32)}
+    clipped, norm = clip_by_global_norm(tree, max_norm)
+    total = np.sqrt(sum(float(jnp.sum(x ** 2)) for x in jax.tree.leaves(clipped)))
+    assert total <= max_norm * 1.001 + 1e-6
+    if float(norm) <= max_norm:  # no-op case preserves values
+        np.testing.assert_allclose(clipped["a"], tree["a"], rtol=1e-6)
+
+
+def test_quantize_preserves_geometry():
+    from repro.core.preprocess import quantize
+
+    rng = np.random.default_rng(0)
+    pts = rng.normal(size=(500, 6)) * 5
+    q = quantize(pts, rng)
+    assert q.scaling > 0
+    back = q.points * q.scaling
+    err = np.abs(back - pts).max()
+    assert err <= q.scaling  # floor error bounded by one grid unit
+    # relative geometry approximately preserved
+    d_orig = np.linalg.norm(pts[0] - pts[1])
+    d_back = np.linalg.norm(back[0] - back[1])
+    assert abs(d_orig - d_back) < 10 * q.scaling

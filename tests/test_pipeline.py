@@ -1,0 +1,48 @@
+"""Pipeline parallelism: schedule correctness on a 1-stage mesh (the
+rotation logic degenerates to sequential application, checked exactly)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.pipeline import pipeline_apply
+
+
+def test_single_stage_pipeline_matches_sequential():
+    mesh = jax.make_mesh((1,), ("stage",))
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(1, 8, 8)), jnp.float32)  # (S, d, d)
+
+    def body(params, x):
+        return jnp.tanh(x @ params)
+
+    x = jnp.asarray(rng.normal(size=(4, 2, 8)), jnp.float32)  # (M, B, d)
+    out = pipeline_apply(body, w, x, mesh)
+    expect = jnp.tanh(x @ w[0])
+    np.testing.assert_allclose(out, expect, rtol=1e-5)
+
+
+def test_two_stage_moe_grads_flow():
+    """two_stage dispatch is differentiable and matches global at dp=1."""
+    import dataclasses
+
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.models import init_params, loss_fn, param_specs
+
+    base = dataclasses.replace(
+        reduce_for_smoke(get_config("qwen2-moe-a2.7b")), capacity_factor=16.0
+    )
+    params = init_params(param_specs(base), jax.random.key(0), jnp.float32)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, base.vocab_size, (2, 32)), jnp.int32)
+    outs = {}
+    for dispatch in ("global", "two_stage"):
+        cfg = dataclasses.replace(base, moe_dispatch=dispatch)
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, {"tokens": toks}, remat="none"),
+            has_aux=True,
+        )(params)
+        gn = sum(float(jnp.sum(g ** 2)) for g in jax.tree.leaves(grads))
+        outs[dispatch] = (float(loss), gn)
+    assert np.isclose(outs["global"][0], outs["two_stage"][0], rtol=1e-5)
+    assert np.isclose(outs["global"][1], outs["two_stage"][1], rtol=1e-3)

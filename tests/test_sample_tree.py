@@ -1,0 +1,75 @@
+"""Sample-tree invariants (paper §4, invariant 2) + sampling correctness."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sample_tree import SampleTree, SampleTreeJax
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(1, 300),
+    st.lists(st.integers(0, 10_000), min_size=1, max_size=8),
+    st.integers(0, 2 ** 31 - 1),
+)
+def test_internal_sums_invariant(n, update_seeds, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0, 10, size=n)
+    tree = SampleTree(w)
+    for s in update_seeds:
+        r = np.random.default_rng(s)
+        m = r.integers(1, n + 1)
+        idx = r.choice(n, size=m, replace=False)
+        new = r.uniform(0, 5, size=m)
+        tree.update(idx, new)
+        w[idx] = new
+    # invariant 2: every internal node equals the sum of its children.
+    heap, cap = tree.heap, tree.cap
+    for v in range(1, cap):
+        assert np.isclose(heap[v], heap[2 * v] + heap[2 * v + 1], atol=1e-6)
+    assert np.allclose(tree.leaf_weights(), w)
+    assert np.isclose(tree.total, w.sum(), rtol=1e-9)
+
+
+def test_sampling_distribution():
+    rng = np.random.default_rng(0)
+    w = np.array([1.0, 0.0, 3.0, 6.0])
+    tree = SampleTree(w)
+    draws = tree.sample_batch(rng, 20000)
+    freq = np.bincount(draws, minlength=4) / 20000
+    assert freq[1] == 0.0
+    assert np.allclose(freq, w / w.sum(), atol=0.02)
+    singles = np.array([tree.sample(rng) for _ in range(5000)])
+    freq1 = np.bincount(singles, minlength=4) / 5000
+    assert np.allclose(freq1, w / w.sum(), atol=0.03)
+
+
+def test_zero_weight_never_sampled():
+    rng = np.random.default_rng(1)
+    w = np.zeros(17)
+    w[5] = 2.0
+    tree = SampleTree(w)
+    assert (tree.sample_batch(rng, 500) == 5).all()
+
+
+def test_jax_tree_matches_numpy():
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(2)
+    n = 37
+    w = rng.uniform(0, 4, size=n).astype(np.float32)
+    jt = SampleTreeJax(n)
+    heap = jt.init(jnp.asarray(w))
+    nt = SampleTree(w)
+    assert np.allclose(np.asarray(heap[1]), nt.total, rtol=1e-5)
+    idx = np.array([0, 5, 36])
+    new = np.array([9.0, 0.5, 1.5], dtype=np.float32)
+    heap = jt.update(heap, jnp.asarray(idx), jnp.asarray(new))
+    nt.update(idx, new)
+    assert np.allclose(np.asarray(heap[jt.cap : jt.cap + n]),
+                       nt.leaf_weights(), rtol=1e-5)
+    draws = jt.sample(heap, jax.random.key(0), 4000)
+    w[idx] = new
+    freq = np.bincount(np.asarray(draws), minlength=n) / 4000
+    assert np.allclose(freq, w / w.sum(), atol=0.03)

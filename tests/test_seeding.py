@@ -1,0 +1,102 @@
+"""Seeding algorithms: quality ordering, distribution closeness (Thm 5.4),
+rejection statistics (Lemma 5.3)."""
+
+import numpy as np
+import pytest
+
+from repro.core import KMeansConfig, fit
+from repro.core.lloyd import assign
+from repro.core.multitree import MultiTreeSampler
+from repro.core.seeding import SEEDERS, clustering_cost
+
+
+def _clustered(n=4000, d=8, k_true=25, seed=0):
+    rng = np.random.default_rng(seed)
+    ctr = rng.normal(size=(k_true, d)) * 10
+    return ctr[rng.integers(k_true, size=n)] + rng.normal(size=(n, d))
+
+
+@pytest.mark.parametrize("algo", list(SEEDERS))
+def test_seeder_basic_contract(algo):
+    pts = _clustered()
+    res = SEEDERS[algo](pts, 30, np.random.default_rng(0))
+    assert res.indices.shape == (30,)
+    assert res.centers.shape == (30, pts.shape[1])
+    assert np.isfinite(res.centers).all()
+    # D^2-based seeders never pick the same point twice
+    if algo != "uniform":
+        assert len(np.unique(res.indices)) == 30
+
+
+def test_quality_ordering_uniform_worst():
+    # well-separated clusters with k < k_true: uniform misses clusters,
+    # D^2 seeding covers them (the regime of the paper's Tables 4-6).
+    rng = np.random.default_rng(3)
+    ctr = rng.normal(size=(25, 8)) * 40
+    pts = ctr[rng.integers(25, size=4000)] + rng.normal(size=(4000, 8))
+    k = 20
+    costs = {}
+    for algo in ("kmeans++", "fastkmeans++", "rejection", "uniform"):
+        cs = [
+            clustering_cost(pts, SEEDERS[algo](pts, k, np.random.default_rng(s)).centers)
+            for s in range(3)
+        ]
+        costs[algo] = np.mean(cs)
+    # paper claim C2: D^2-family within a small factor of each other,
+    # uniform clearly worse.
+    assert costs["fastkmeans++"] < 0.6 * costs["uniform"]
+    assert costs["rejection"] < 0.6 * costs["uniform"]
+    assert costs["fastkmeans++"] < 1.35 * costs["kmeans++"]
+    assert costs["rejection"] < 1.35 * costs["kmeans++"]
+
+
+def test_rejection_distribution_c2_close():
+    """Claim C3 (Lemma 5.2): with an exact-NN oracle regime (wide LSH
+    buckets), accepted samples follow D^2 within factor ~c^2."""
+    pts = _clustered(n=400, d=4, k_true=6, seed=5)
+    n = len(pts)
+    rng = np.random.default_rng(0)
+    opened = [3, 77, 200]
+
+    # Exact D^2 distribution w.r.t. opened set.
+    _, d2 = assign(pts, pts[opened])
+    p_exact = d2 / d2.sum()
+
+    # Empirical: one more center drawn many times via the rejection sampler
+    # machinery (multi-tree proposal + acceptance with exact distances).
+    mt = MultiTreeSampler(pts, seed=1)
+    for x in opened:
+        mt.open(x)
+    c2 = 1.2 ** 2
+    counts = np.zeros(n)
+    draws = 0
+    while draws < 4000:
+        cand = mt.sample_batch(rng, 256)
+        us = rng.uniform(size=256)
+        # exact-NN acceptance (successful-LSH regime)
+        _, cd2 = assign(pts[cand], pts[opened])
+        acc = us < cd2 / np.maximum(c2 * mt.weights[cand], 1e-300)
+        for x in cand[acc]:
+            counts[x] += 1
+            draws += 1
+    p_emp = counts / counts.sum()
+    mask = p_exact > 0.005  # compare where statistics are meaningful
+    ratio = p_emp[mask] / p_exact[mask]
+    assert (ratio > 1 / (c2 * 2.0)).all() and (ratio < c2 * 2.0).all()
+
+
+def test_rejection_trials_bounded_by_lemma():
+    pts = _clustered(n=3000, d=6, seed=7)
+    res = SEEDERS["rejection"](pts, 50, np.random.default_rng(1), c=1.2)
+    tpc = res.extras["trials_per_center"]
+    # Lemma 5.3: E[trials/center] = O(c^2 d^2); generous constant 48.
+    assert tpc <= 48 * (1.2 ** 2) * 6 * 6
+
+
+def test_fit_facade_with_lloyd():
+    pts = _clustered(seed=9)
+    km = fit(pts, KMeansConfig(k=25, seeder="rejection", lloyd_iters=5))
+    seeded_only = fit(pts, KMeansConfig(k=25, seeder="rejection"))
+    assert km.cost <= seeded_only.cost  # Lloyd refines
+    pred = km.predict(pts[:100])
+    assert pred.shape == (100,) and (pred < 25).all()

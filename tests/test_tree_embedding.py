@@ -1,0 +1,78 @@
+"""Properties of the multi-tree embedding (paper Lemma 3.1)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tree_embedding import (
+    build_multitree,
+    compute_max_dist,
+    multitree_dist_sq_points,
+    sep_levels,
+    tree_dist_from_sep,
+)
+
+
+def _points(n, d, seed):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, d)) * rng.uniform(0.5, 20)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 200), st.integers(1, 12), st.integers(0, 10_000))
+def test_lower_bound_never_violated(n, d, seed):
+    """dist(p,q) <= MultiTreeDist(p,q) for every pair (first half of L3.1)."""
+    pts = _points(n, d, seed)
+    emb = build_multitree(pts, seed=seed)
+    idx = np.random.default_rng(seed).integers(0, n, size=(50, 2))
+    i, j = idx[:, 0], idx[:, 1]
+    mtd2 = multitree_dist_sq_points(emb, i, j)
+    d2 = ((pts[i] - pts[j]) ** 2).sum(axis=1)
+    assert (mtd2 >= d2 - 1e-6 * np.maximum(d2, 1)).all()
+
+
+def test_expected_distortion_bound():
+    """E[MTD^2] <= 48 d^2 dist^2 (second half of L3.1), statistically."""
+    rng = np.random.default_rng(0)
+    d = 6
+    pts = rng.normal(size=(64, d)) * 5
+    i, j = 3, 17
+    d2 = ((pts[i] - pts[j]) ** 2).sum()
+    ratios = []
+    for seed in range(60):
+        emb = build_multitree(pts, seed=seed)
+        mtd2 = multitree_dist_sq_points(emb, np.array([i]), np.array([j]))[0]
+        ratios.append(mtd2 / d2)
+    # Loose statistical check: the empirical mean must respect the paper's
+    # 48 d^2 bound (it is usually far below it).
+    assert np.mean(ratios) <= 48 * d * d
+    assert np.mean(ratios) >= 1.0  # never an underestimate on average
+
+
+def test_sep_levels_prefix_closed_and_symmetric():
+    pts = _points(100, 5, 7)
+    emb = build_multitree(pts, seed=3)
+    t = emb.trees[0]
+    rng = np.random.default_rng(1)
+    for _ in range(20):
+        i, j = rng.integers(0, 100, size=2)
+        eq = t.codes[:, i] == t.codes[:, j]
+        sep = int(eq.sum())
+        # prefix closed: all levels < sep agree, none >= sep do
+        assert eq[:sep].all() and not eq[sep:].any()
+        assert sep == sep_levels(t.codes[:, j], t.codes[:, i])
+
+
+def test_tree_dist_formula_edges():
+    # same leaf => 0; root-only separation => ~4 sqrt(d) maxdist/2
+    d = tree_dist_from_sep(np.array([1, 10, 10]), 2.0, 10, 4)
+    assert d[0] > d[1] == d[2] == 0.0
+
+
+def test_max_dist_upper_bound():
+    """MaxDist is an upper bound on the diameter, within a factor of 2."""
+    pts = _points(300, 8, 11)
+    md = compute_max_dist(pts)
+    d2 = ((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+    true = float(np.sqrt(d2.max()))
+    assert true <= md <= 2 * true + 1e-9
