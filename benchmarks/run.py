@@ -10,7 +10,14 @@ tables).  Sections:
 
 from __future__ import annotations
 
+import sys
 import time
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parents[1]
+for _p in (str(_ROOT), str(_ROOT / "src")):   # script mode: `python benchmarks/run.py`
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 import numpy as np
 
@@ -65,11 +72,19 @@ def bench_kernels():
     return rows
 
 
-def bench_seeding():
+def bench_seeding(smoke: bool = False):
     from benchmarks.seeding import main as seeding_main
 
-    results = seeding_main(["--datasets", "kddcup", "--ks", "100", "500",
-                            "--scale", "0.05", "--trials", "1"])
+    if smoke:
+        # CI-sized run: tiny slice of one dataset, CPU *and* device backends
+        # so the jit seeders (Pallas kernels in interpret mode off-TPU) get
+        # exercised end-to-end on every push.
+        argv = ["--datasets", "kddcup", "--ks", "25", "--scale", "0.01",
+                "--trials", "1", "--backends", "cpu", "device"]
+    else:
+        argv = ["--datasets", "kddcup", "--ks", "100", "500",
+                "--scale", "0.05", "--trials", "1"]
+    results = seeding_main(argv)
     rows = []
     for res in results:
         for algo, data in res["algos"].items():
@@ -100,13 +115,21 @@ def bench_roofline():
     return rows
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized seeding run (CPU + device backends), "
+                         "skipping the heavier microbenchmarks")
+    args = ap.parse_args(argv)
     all_rows = []
     print("# seeding tables (paper tables 1-8, CI scale)", flush=True)
-    all_rows += bench_seeding()
-    print("# kernel microbenchmarks", flush=True)
-    all_rows += bench_kernels()
-    all_rows += bench_roofline()
+    all_rows += bench_seeding(smoke=args.smoke)
+    if not args.smoke:
+        print("# kernel microbenchmarks", flush=True)
+        all_rows += bench_kernels()
+        all_rows += bench_roofline()
     print("\nname,us_per_call,derived")
     for name, us, derived in all_rows:
         print(f"{name},{us:.1f},{derived}")

@@ -9,8 +9,14 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parents[1]
+for _p in (str(_ROOT), str(_ROOT / "src")):   # script mode: `python benchmarks/seeding.py`
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 import numpy as np
 
@@ -19,28 +25,48 @@ from benchmarks.datasets import DATASETS, make_dataset
 RESULTS = Path(__file__).resolve().parent / "artifacts"
 
 ALGOS = ("fastkmeans++", "rejection", "kmeans++", "afkmc2", "uniform")
+# The paper's two algorithms also exist as jit-able device programs
+# (`repro.core.device_seeding`); `--backends cpu device` appends these so
+# Tables 1-3 can compare CPU vs device wall-clock for the same seeds.
+DEVICE_ALGOS = ("fastkmeans++/device", "rejection/device")
 
 
-def run_dataset(name: str, ks, *, scale: float, trials: int, seed: int = 0):
+def _algo_list(backends) -> tuple[str, ...]:
+    algos = tuple(ALGOS)
+    if "device" in backends:
+        algos += DEVICE_ALGOS
+    return algos
+
+
+def run_dataset(name: str, ks, *, scale: float, trials: int, seed: int = 0,
+                backends=("cpu",)):
+    from repro.core import SEEDERS, clustering_cost  # registers device algos
     from repro.core.preprocess import quantize
-    from repro.core.seeding import SEEDERS, clustering_cost
 
+    algos = _algo_list(backends)
     pts = make_dataset(name, scale=scale, seed=seed)
     rng0 = np.random.default_rng(seed)
     q = quantize(pts, rng0)
     out = {"dataset": name, "n": len(pts), "d": pts.shape[1],
            "scale": scale, "ks": list(ks), "algos": {}}
-    for algo in ALGOS:
+    for algo in algos:
         out["algos"][algo] = {"seconds": {}, "cost": {}, "var": {},
                               "trials_per_center": {}}
     for k in ks:
-        for algo in ALGOS:
+        for algo in algos:
             secs, costs, tpc = [], [], []
+            if "/device" in algo:
+                # Warm-up: the first device call pays one-time jit
+                # trace/compile; exclude it so the speed tables compare
+                # steady-state seeding wall-clock, not XLA compilation.
+                data = q.points
+                SEEDERS[algo](data, k, np.random.default_rng(seed),
+                              resolution=1.0)
             for t in range(trials):
                 rng = np.random.default_rng(1000 * t + k)
                 kwargs = {}
                 data = pts
-                if algo in ("fastkmeans++", "rejection"):
+                if algo.split("/")[0] in ("fastkmeans++", "rejection"):
                     data = q.points          # Appendix-F quantised space
                     kwargs["resolution"] = 1.0
                 res = SEEDERS[algo](data, k, rng, **kwargs)
@@ -62,26 +88,27 @@ def run_dataset(name: str, ks, *, scale: float, trials: int, seed: int = 0):
 def print_tables(results: list[dict]):
     for res in results:
         ks = res["ks"]
+        algos = tuple(res["algos"])
         base = res["algos"]["fastkmeans++"]["seconds"]
         print(f"\n== {res['dataset']} (n={res['n']}, d={res['d']}) — "
               f"runtime / FASTK-MEANS++ (paper Tables 1-3)")
-        print(f"{'algorithm':18s}" + "".join(f" k={k:<8d}" for k in ks))
-        for algo in ALGOS:
+        print(f"{'algorithm':20s}" + "".join(f" k={k:<8d}" for k in ks))
+        for algo in algos:
             if algo == "uniform":
                 continue
             row = res["algos"][algo]["seconds"]
             cells = "".join(f" {row[k]/max(base[k],1e-9):<9.2f}" for k in ks)
-            print(f"{algo:18s}{cells}")
+            print(f"{algo:20s}{cells}")
         print(f"-- seeding cost (paper Tables 4-6)")
-        for algo in ALGOS:
+        for algo in algos:
             row = res["algos"][algo]["cost"]
             cells = "".join(f" {row[k]:<12.4g}" for k in ks)
-            print(f"{algo:18s}{cells}")
+            print(f"{algo:20s}{cells}")
         print(f"-- cost variance over trials (paper Tables 7-8)")
-        for algo in ALGOS:
+        for algo in algos:
             row = res["algos"][algo]["var"]
             cells = "".join(f" {row[k]:<12.4g}" for k in ks)
-            print(f"{algo:18s}{cells}")
+            print(f"{algo:20s}{cells}")
         rej = res["algos"]["rejection"]["trials_per_center"]
         if rej:
             cells = "".join(f" {rej[k]:<9.1f}" for k in ks)
@@ -97,12 +124,18 @@ def main(argv=None):
     ap.add_argument("--scale", type=float, default=0.15,
                     help="fraction of the paper's n (1.0 = full)")
     ap.add_argument("--trials", type=int, default=2)
+    ap.add_argument("--backends", nargs="+", default=["cpu"],
+                    choices=("cpu", "device"),
+                    help="'device' appends the jit seeders "
+                         "(fastkmeans++/device, rejection/device) for the "
+                         "CPU-vs-device wall-clock comparison")
     args = ap.parse_args(argv)
     RESULTS.mkdir(parents=True, exist_ok=True)
     results = []
     for name in args.datasets:
         results.append(run_dataset(name, args.ks, scale=args.scale,
-                                   trials=args.trials))
+                                   trials=args.trials,
+                                   backends=tuple(args.backends)))
     (RESULTS / "seeding_results.json").write_text(json.dumps(results))
     print_tables(results)
     return results

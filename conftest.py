@@ -1,0 +1,31 @@
+"""Pytest bootstrap: import paths + optional-dependency gating.
+
+- Puts `src/` (the package) and the repo root (for `benchmarks.*`) on
+  sys.path, so `PYTHONPATH=src` is no longer load-bearing (mirrors the
+  `pythonpath` pytest config in pyproject.toml for older runners).
+- If `hypothesis` is not installed (hermetic CI images), registers the
+  deterministic fallback in `tests/_hypothesis_fallback.py` under the
+  `hypothesis` module name so property-based tests still run.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent
+for p in (str(ROOT / "src"), str(ROOT)):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+try:
+    import hypothesis  # noqa: F401  (the real library wins when present)
+except ImportError:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis", ROOT / "tests" / "_hypothesis_fallback.py"
+    )
+    _mod = importlib.util.module_from_spec(_spec)
+    sys.modules["hypothesis"] = _mod
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis.strategies"] = _mod.strategies

@@ -22,6 +22,9 @@ def main():
     ap.add_argument("--d", type=int, default=32)
     ap.add_argument("--k", type=int, default=500)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", choices=("cpu", "device"), default="cpu",
+                    help="'device' also runs the jit seeders "
+                         "(Pallas kernels; interpret mode off-TPU)")
     args = ap.parse_args()
 
     from repro.core import KMeansConfig, SEEDERS, clustering_cost, fit
@@ -48,6 +51,19 @@ def main():
           f"trials/center: {km.seeding.extras.get('trials_per_center', 0):.1f}")
     print(f"  final cost: {km.cost:.1f} "
           f"({km.refinement.iterations} Lloyd iterations)")
+
+    if args.backend == "device":
+        # The same two paper algorithms as single jit device programs
+        # (Algorithm 3 + Algorithm 4 with the fused Pallas LSH kernel).
+        # On a TPU the Pallas kernels compile; elsewhere they run in
+        # interpret mode, so expect this to be slower than the CPU path
+        # off-accelerator — it demonstrates the API, not the speed.
+        print("\ndevice backend (backend='device', one jit program per seed):")
+        for name in ("fastkmeans++", "rejection"):
+            km = fit(pts, KMeansConfig(k=args.k, seeder=name,
+                                       backend="device", seed=args.seed))
+            print(f"  {name + '/device':24s} {km.seeding.seconds:8.2f}s "
+                  f"cost={km.cost:14.1f}")
 
 
 if __name__ == "__main__":

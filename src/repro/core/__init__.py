@@ -4,7 +4,7 @@ Faithful CPU algorithms (`seeding`, `multitree`, `lsh`) reproduce the paper;
 `device_seeding` is the TPU-native vectorised twin used inside jit/pjit.
 """
 
-from repro.core.api import KMeans, KMeansConfig, fit
+from repro.core.api import BACKENDS, KMeans, KMeansConfig, fit, resolve_seeder
 from repro.core.lloyd import assign, lloyd
 from repro.core.multitree import MultiTreeSampler
 from repro.core.seeding import (
@@ -20,9 +20,11 @@ from repro.core.seeding import (
 from repro.core.tree_embedding import MultiTreeEmbedding, build_multitree
 
 __all__ = [
+    "BACKENDS",
     "KMeans",
     "KMeansConfig",
     "fit",
+    "resolve_seeder",
     "assign",
     "lloyd",
     "MultiTreeSampler",

@@ -11,17 +11,41 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core import device_seeding  # registers the "/device" seeders
 from repro.core.lloyd import LloydResult, lloyd
 from repro.core.preprocess import quantize
 from repro.core.seeding import SEEDERS, SeedingResult, clustering_cost
 
-__all__ = ["KMeansConfig", "KMeans", "fit"]
+__all__ = ["KMeansConfig", "KMeans", "fit", "resolve_seeder", "BACKENDS"]
+
+BACKENDS = ("cpu", "device")
+
+
+def resolve_seeder(name: str, backend: str = "cpu"):
+    """Seeder lookup behind a backend selector.
+
+    `backend="cpu"` returns the faithful NumPy implementation;
+    `backend="device"` the jit-able TPU-native twin (Pallas kernels run in
+    interpret mode off-TPU).  Composite keys like ``"rejection/device"``
+    are accepted directly by `SEEDERS` as well.
+    """
+    if backend not in BACKENDS:
+        raise KeyError(f"unknown backend {backend!r}; expected {BACKENDS}")
+    if backend == "device":
+        if name not in device_seeding.DEVICE_SEEDERS:
+            raise KeyError(
+                f"seeder {name!r} has no device implementation; available: "
+                f"{sorted(device_seeding.DEVICE_SEEDERS)}"
+            )
+        return SEEDERS[f"{name}/device"]
+    return SEEDERS[name]
 
 
 @dataclasses.dataclass
 class KMeansConfig:
     k: int
     seeder: str = "rejection"           # any key of core.seeding.SEEDERS
+    backend: str = "cpu"                # "cpu" (faithful) | "device" (jit)
     lloyd_iters: int = 0                # 0 = seeding only (paper's experiments)
     quantize: bool = True               # Appendix-F aspect-ratio control
     c: float = 2.0                      # LSH approximation factor (rejection)
@@ -55,7 +79,8 @@ def fit(points: np.ndarray, config: KMeansConfig) -> KMeans:
         kwargs.setdefault("resolution", 1.0)
     if config.seeder == "rejection":
         kwargs.setdefault("c", config.c)
-    result = SEEDERS[config.seeder](seed_pts, config.k, rng, **kwargs)
+    seed_fn = resolve_seeder(config.seeder, config.backend)
+    result = seed_fn(seed_pts, config.k, rng, **kwargs)
     # Centers are reported in *original* coordinates regardless of the
     # quantised seeding space.
     centers = pts[result.indices].copy()

@@ -1,4 +1,4 @@
-"""TPU-native FASTK-MEANS++: the paper's sampler as a jit-able device loop.
+"""TPU-native seeders: the paper's Algorithms 3 and 4 as jit-able device loops.
 
 The pointer-machine data structures become arrays (DESIGN.md §3):
   - the multi-tree embedding is a (trees, H, n) int32x2 code tensor built
@@ -6,31 +6,63 @@ The pointer-machine data structures become arrays (DESIGN.md §3):
   - MULTITREEOPEN is the fused `tree_sep_update` Pallas kernel per tree
     (compare+reduce+min over all points: O(nH) VPU work, no pointers);
   - MULTITREESAMPLE is the flat-heap `SampleTreeJax` descent (O(log n));
+  - the monotone LSH of Algorithm 4 becomes a (L, n) int32x2 bucket-key
+    tensor (hashed host-side with the *same* hash family as
+    `repro.core.lsh.MonotoneLSH`) plus the fused `lsh_bucket_min` Pallas
+    kernel: nearest *colliding-bucket* opened center per candidate;
   - the whole k-center loop is one `lax.fori_loop` — a single device
     program, no host round-trips.
+
+`device_rejection_sampling` (Algorithm 4, REJECTIONSAMPLING) runs batched
+speculative rejection inside a `lax.while_loop` per center: draw a block of
+candidates + uniforms from the *current* multi-tree D^2 distribution,
+evaluate every acceptance test ``d2_lsh / (c^2 * mtd2)`` vectorised, and
+open the first accept, discarding the rest of the block.  Because the block
+is i.i.d. from the current distribution this matches the sequential
+distribution exactly — the same argument as the CPU
+`seeding.rejection_sampling` docstring.
 
 Asymptotics differ from the amortised CPU form (O(k n H) vs O(n H log n)
 total update work) but every step is a dense fused sweep at full VPU
 utilisation — the standard trade on SIMD hardware.  Cross-checked against
-the faithful implementation in tests/test_device_seeding.py.
+the faithful implementations in tests/test_device_seeding.py and
+tests/test_device_rejection.py.
 """
 
 from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.lsh import MonotoneLSH
 from repro.core.sample_tree import SampleTreeJax
 from repro.core.tree_embedding import build_multitree
-from repro.kernels.ops import split_codes_u64, tree_sep_update
+from repro.kernels.ops import lsh_bucket_min, split_codes_u64, tree_sep_update
 
-__all__ = ["device_fast_kmeanspp", "prepare_embedding"]
+__all__ = [
+    "device_fast_kmeanspp",
+    "device_rejection_sampling",
+    "prepare_embedding",
+    "prepare_rejection",
+    "DeviceSeedingData",
+    "device_fast_kmeanspp_seeder",
+    "device_rejection_seeder",
+    "DEVICE_SEEDERS",
+]
+
+_FAR = 1.0e17  # "no center yet" coordinate sentinel (distance^2 f32-finite)
 
 
-def prepare_embedding(points: np.ndarray, *, seed: int = 0):
+def prepare_embedding(points: np.ndarray, *, seed: int = 0,
+                      resolution: Optional[float] = None):
     """Host-side MULTITREEINIT -> device tensors (codes as int32 planes)."""
-    emb = build_multitree(points, seed=seed)
+    emb = build_multitree(points, seed=seed, resolution=resolution)
     # drop the trivial root level (height 0)
     codes = emb.codes_array()[:, 1:, :]            # (T, H-1, n)
     lo, hi = split_codes_u64(codes)
@@ -53,7 +85,7 @@ def device_fast_kmeanspp(
     m_init: float,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Returns (k,) int32 chosen indices.  Jit-able end to end."""
+    """Algorithm 3.  Returns (k,) int32 chosen indices.  Jit-able end to end."""
     t, h, n = codes_lo.shape
     st = SampleTreeJax(n)
 
@@ -88,3 +120,278 @@ def device_fast_kmeanspp(
         0, k, body, (weights0, heap0, chosen0, key)
     )
     return chosen
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 4: REJECTIONSAMPLING as one device program.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSeedingData:
+    """Device tensors + static scalars for `device_rejection_sampling`."""
+
+    codes_lo: jax.Array      # (T, H-1, n) int32 — multi-tree cell codes
+    codes_hi: jax.Array
+    points: jax.Array        # (n, d) f32 — coordinates (acceptance distances)
+    keys_lo: jax.Array       # (L, n) int32 — LSH bucket keys, low plane
+    keys_hi: jax.Array
+    scale: float             # 2 sqrt(d) MaxDist — tree-distance closed form
+    num_levels: int          # H
+    m_init: float            # M = 16 d MaxDist^2
+
+
+def prepare_rejection(
+    points: np.ndarray,
+    *,
+    seed: int = 0,
+    resolution: Optional[float] = None,
+    lsh_r: Optional[float] = None,
+    num_tables: int = 15,
+    hashes_per_table: int = 1,
+) -> DeviceSeedingData:
+    """Host-side init of Algorithm 4's two structures as device tensors.
+
+    The multi-tree part mirrors `prepare_embedding`; the LSH part hashes
+    every point with the same p-stable family as `MonotoneLSH` (App. D.3
+    defaults), so the device bucket-collision test is bit-identical to the
+    CPU structure's.  The paper's LSH stores only *opened centers*; since
+    every center is an input point, precomputing all n keys host-side lets
+    the device program insert a center by copying one precomputed column.
+    """
+    pts = np.asarray(points, dtype=np.float64)
+    n, d = pts.shape
+    rng = np.random.default_rng(seed)
+    lo, hi, meta = prepare_embedding(
+        pts, seed=int(rng.integers(2 ** 31)), resolution=resolution
+    )
+    if lsh_r is None:
+        from repro.core.seeding import _estimate_scale
+
+        lsh_r = 10.0 * (resolution or _estimate_scale(pts, rng))
+    lsh = MonotoneLSH(
+        d,
+        r=lsh_r,
+        num_tables=num_tables,
+        hashes_per_table=hashes_per_table,
+        seed=int(rng.integers(2 ** 31)),
+        capacity=16,
+    )
+    klo, khi = split_codes_u64(lsh.hash_keys(pts))  # (n, L) planes
+    return DeviceSeedingData(
+        codes_lo=lo,
+        codes_hi=hi,
+        points=jnp.asarray(pts, jnp.float32),
+        keys_lo=jnp.asarray(klo.T),                 # (L, n)
+        keys_hi=jnp.asarray(khi.T),
+        scale=meta["scale"],
+        num_levels=meta["num_levels"],
+        m_init=meta["m_init"],
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "k", "scale", "num_levels", "m_init", "c", "batch", "max_rounds",
+        "interpret",
+    ),
+)
+def device_rejection_sampling(
+    codes_lo: jax.Array,     # (T, H-1, n) int32
+    codes_hi: jax.Array,
+    points: jax.Array,       # (n, d) f32
+    keys_lo: jax.Array,      # (L, n) int32
+    keys_hi: jax.Array,
+    k: int,
+    key: jax.Array,
+    *,
+    scale: float,
+    num_levels: int,
+    m_init: float,
+    c: float = 1.2,
+    batch: int = 128,
+    max_rounds: int = 32,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Algorithm 4 as one device program (jit-able end to end).
+
+    Per center, a `lax.while_loop` runs batched speculative rejection: draw
+    `batch` i.i.d. candidates from the current multi-tree D^2 distribution
+    (flat-heap descent) plus uniforms, compute every candidate's LSH
+    nearest-bucket distance with one fused kernel sweep over the opened
+    centers, accept with probability ``d2_lsh / (c^2 * mtd2)`` and open the
+    *first* accept (the rest of the block is discarded, preserving the
+    sequential distribution exactly).  A complete LSH miss (kernel sentinel
+    `LSH_MISS`) makes the ratio > 1, i.e. always accepts — the CPU
+    structure's +inf convention.
+
+    `max_rounds` bounds the per-center loop (expected trials are
+    O(c^2 d^2), Lemma 5.3); on exhaustion the first candidate of the last
+    block — an exact multi-tree D^2 draw — is opened, mirroring the CPU
+    safety net.  The degenerate all-weights-zero case (total heap weight 0)
+    skips the loop and opens a uniform draw.
+
+    Returns ``(chosen (k,) int32, trials (k,) int32)`` — trials per center
+    for the Lemma 5.3 statistics.
+    """
+    t, h, n = codes_lo.shape
+    l = keys_lo.shape[0]
+    d = points.shape[1]
+    st = SampleTreeJax(n)
+    c2 = float(c) ** 2
+
+    def open_center(weights, x):
+        for ti in range(t):
+            weights = tree_sep_update(
+                codes_lo[ti], codes_hi[ti],
+                codes_lo[ti, :, x], codes_hi[ti, :, x],
+                weights,
+                scale=scale, num_levels=num_levels,
+                interpret=interpret,
+            )
+        return weights
+
+    def body(i, state):
+        weights, heap, chosen, ctr_pts, ck_lo, ck_hi, trials, key = state
+        key, k_unif = jax.random.split(key)
+        x_unif = jax.random.randint(k_unif, (), 0, n).astype(jnp.int32)
+
+        def round_cond(carry):
+            key, x_sel, done, t_i, rounds = carry
+            return (~done) & (rounds < max_rounds) & (i > 0) & (heap[1] > 0)
+
+        def round_body(carry):
+            key, x_sel, done, t_i, rounds = carry
+            key, k_cand, k_u = jax.random.split(key, 3)
+            cand = st.sample(heap, k_cand, batch)             # (B,) i.i.d. D^2
+            us = jax.random.uniform(k_u, (batch,), dtype=jnp.float32)
+            d2_lsh = lsh_bucket_min(
+                jnp.take(keys_lo, cand, axis=1),
+                jnp.take(keys_hi, cand, axis=1),
+                jnp.take(points, cand, axis=0),
+                ck_lo, ck_hi, ctr_pts, i,
+                interpret=interpret,
+            )
+            mtd2 = heap[st.cap + cand]                        # current weights
+            p_acc = jnp.where(
+                mtd2 > 0.0, d2_lsh / jnp.maximum(c2 * mtd2, 1e-30), 0.0
+            )
+            acc = us < p_acc
+            any_acc = jnp.any(acc)
+            hit = jnp.argmax(acc)                             # first accept
+            # On exhaustion, cand[0] (exact D^2 draw) is the fallback.
+            x_sel = jnp.where(any_acc, cand[hit], cand[0]).astype(jnp.int32)
+            t_i = t_i + jnp.where(any_acc, hit + 1, batch).astype(jnp.int32)
+            return key, x_sel, any_acc, t_i, rounds + 1
+
+        key, x_sel, _, t_i, _ = jax.lax.while_loop(
+            round_cond, round_body,
+            (key, x_unif, jnp.bool_(False), jnp.int32(0), jnp.int32(0)),
+        )
+        x = x_sel
+        t_i = jnp.maximum(t_i, 1)             # the uniform/fallback draw
+
+        weights = open_center(weights, x)
+        heap = st.init(weights)
+        chosen = chosen.at[i].set(x)
+        ctr_pts = ctr_pts.at[i].set(points[x])
+        ck_lo = ck_lo.at[:, i].set(keys_lo[:, x])
+        ck_hi = ck_hi.at[:, i].set(keys_hi[:, x])
+        trials = trials.at[i].set(t_i)
+        return weights, heap, chosen, ctr_pts, ck_lo, ck_hi, trials, key
+
+    weights0 = jnp.full((n,), m_init, jnp.float32)
+    heap0 = st.init(weights0)
+    chosen0 = jnp.zeros((k,), jnp.int32)
+    ctr_pts0 = jnp.full((k, d), _FAR, jnp.float32)
+    ck_lo0 = jnp.zeros((l, k), jnp.int32)
+    ck_hi0 = jnp.zeros((l, k), jnp.int32)
+    trials0 = jnp.zeros((k,), jnp.int32)
+    _, _, chosen, _, _, _, trials, _ = jax.lax.fori_loop(
+        0, k, body,
+        (weights0, heap0, chosen0, ctr_pts0, ck_lo0, ck_hi0, trials0, key),
+    )
+    return chosen, trials
+
+
+# ---------------------------------------------------------------------------
+# Host-facing wrappers with the common `seed_fn(points, k, rng, **kw)`
+# signature, registered in `seeding.SEEDERS` under "<name>/device".
+# ---------------------------------------------------------------------------
+
+def device_fast_kmeanspp_seeder(points, k, rng, *, resolution=None,
+                                interpret=None, **_):
+    """Algorithm 3 on device; `SeedingResult` facade over the jit program."""
+    from repro.core.seeding import SeedingResult
+
+    t0 = time.perf_counter()
+    pts = np.asarray(points, dtype=np.float64)
+    lo, hi, meta = prepare_embedding(pts, seed=int(rng.integers(2 ** 31)),
+                                     resolution=resolution)
+    key = jax.random.key(int(rng.integers(2 ** 31)))
+    chosen = device_fast_kmeanspp(
+        lo, hi, k, key,
+        scale=meta["scale"], num_levels=meta["num_levels"],
+        m_init=meta["m_init"], interpret=interpret,
+    )
+    idx = np.asarray(jax.block_until_ready(chosen), dtype=np.int64)
+    return SeedingResult(
+        centers=pts[idx].copy(),
+        indices=idx,
+        seconds=time.perf_counter() - t0,
+        num_candidates=k,
+        extras={"backend": "device"},
+    )
+
+
+def device_rejection_seeder(points, k, rng, *, c=1.2, lsh_r=None,
+                            num_tables=15, hashes_per_table=1,
+                            resolution=None, batch=128, max_rounds=32,
+                            interpret=None, **_):
+    """Algorithm 4 on device; `SeedingResult` facade over the jit program."""
+    from repro.core.seeding import SeedingResult
+
+    t0 = time.perf_counter()
+    pts = np.asarray(points, dtype=np.float64)
+    data = prepare_rejection(
+        pts, seed=int(rng.integers(2 ** 31)), resolution=resolution,
+        lsh_r=lsh_r, num_tables=num_tables,
+        hashes_per_table=hashes_per_table,
+    )
+    key = jax.random.key(int(rng.integers(2 ** 31)))
+    chosen, trials = device_rejection_sampling(
+        data.codes_lo, data.codes_hi, data.points,
+        data.keys_lo, data.keys_hi, k, key,
+        scale=data.scale, num_levels=data.num_levels, m_init=data.m_init,
+        c=c, batch=batch, max_rounds=max_rounds, interpret=interpret,
+    )
+    idx = np.asarray(jax.block_until_ready(chosen), dtype=np.int64)
+    trials = np.asarray(trials, dtype=np.int64)
+    total = int(trials.sum())
+    return SeedingResult(
+        centers=pts[idx].copy(),
+        indices=idx,
+        seconds=time.perf_counter() - t0,
+        num_candidates=total,
+        extras={
+            "backend": "device",
+            "trials_per_center": total / k,
+            "per_center_trials": trials,
+        },
+    )
+
+
+DEVICE_SEEDERS = {
+    "fastkmeans++": device_fast_kmeanspp_seeder,
+    "rejection": device_rejection_seeder,
+}
+
+
+def _register():
+    from repro.core import seeding
+
+    for name, fn in DEVICE_SEEDERS.items():
+        seeding.SEEDERS.setdefault(f"{name}/device", fn)
+
+
+_register()

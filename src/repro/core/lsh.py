@@ -76,6 +76,14 @@ class MonotoneLSH:
             k = (h * self.key_mults[None]).sum(axis=-1, dtype=np.uint64)
             return (k + self.key_salt[None]) * _MIX
 
+    def hash_keys(self, ps: np.ndarray) -> np.ndarray:
+        """Public bucket keys for a batch of points: (batch, L) uint64.
+
+        The device-side seeder precomputes these for the whole point set so
+        its bucket-collision test matches this structure's exactly.
+        """
+        return self._keys(np.asarray(ps, dtype=np.float64))
+
     def insert(self, p: np.ndarray) -> int:
         """Insert a point; returns its id.  Amortised O(L m d)."""
         p = np.asarray(p, dtype=np.float64)

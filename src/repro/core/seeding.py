@@ -208,7 +208,7 @@ def rejection_sampling(
 
     opened = 1
     chunk = 64  # LSH-evaluation granularity within a speculative batch
-    while opened < k and trials < max_trials:
+    while opened < k and trials < max_trials and mt.total_weight() > 0:
         # Draw a large block of i.i.d. candidates from the *current*
         # distribution in one vectorised sweep, but evaluate the acceptance
         # tests lazily in chunks so an early accept wastes no LSH work.
@@ -236,9 +236,15 @@ def rejection_sampling(
         lsh.insert(pts[x])
     if opened < k:
         # Safety net: finish with exact D^2 draws from the multi-tree weights
-        # (keeps the result well-defined on adversarial inputs).
+        # (keeps the result well-defined on adversarial inputs).  When every
+        # remaining weight is zero (fewer distinct cells than k, e.g. heavy
+        # point duplication) the D^2 distribution is undefined and the
+        # sample-tree descent would walk off the populated leaves, so fall
+        # back to uniform draws.  These draws count toward `trials` so
+        # `num_candidates`/`trials_per_center` stay faithful.
         while opened < k:
-            x = mt.sample(rng)
+            x = mt.sample(rng) if mt.total_weight() > 0 else int(rng.integers(n))
+            trials += 1
             chosen[opened] = x
             opened += 1
             mt.open(x)

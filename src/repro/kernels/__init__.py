@@ -3,6 +3,8 @@
 - `pairwise_argmin`  — nearest-center search (Lloyd / k-means++ / acceptance)
 - `d2_update`        — fused D^2 weight maintenance for one new center
 - `tree_sep_update`  — MULTITREEOPEN's per-tree weight sweep
+- `lsh_bucket_min`   — monotone-LSH nearest-bucket query (Algorithm 4's
+                       acceptance test: nearest colliding opened center)
 - `flash_attention`  — fused online-softmax attention (the memory-roofline
                        lever for the dense train/prefill cells, §Perf)
 
@@ -12,16 +14,20 @@ in interpret mode.
 """
 
 from repro.kernels.ops import (
+    LSH_MISS,
     d2_update,
     default_interpret,
+    lsh_bucket_min,
     pairwise_argmin,
     split_codes_u64,
     tree_sep_update,
 )
 
 __all__ = [
+    "LSH_MISS",
     "d2_update",
     "default_interpret",
+    "lsh_bucket_min",
     "pairwise_argmin",
     "split_codes_u64",
     "tree_sep_update",

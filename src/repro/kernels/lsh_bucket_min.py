@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: monotone-LSH nearest-bucket query, fused.
+
+The acceptance test of the paper's Algorithm 4 needs, per candidate x,
+``dist(x, Query(x))^2`` — the squared distance to the nearest *opened center
+that shares an LSH bucket with x* in at least one of the L hash tables
+(`repro.core.lsh.MonotoneLSH` semantics: minimum-distance colliding entry,
++infinity on a complete miss, which the sampler treats as "accept").
+
+Bucket keys are 64-bit hashes precomputed host-side for every point (like the
+multi-tree cell codes) and stored as two int32 planes in a (L, n) layout —
+tables in sublanes, points in lanes, exactly the `tree_sep_update` idiom.
+The kernel fuses, per (candidate tile, center tile):
+
+  collide[b, c] = OR_l (qk(b, l) == ck(c, l))        (VPU compare+reduce)
+  d2[b, c]      = |q_b|^2 - 2 q_b . c_c + |c_c|^2    (MXU matmul)
+  out[b]        = min(out[b], min_c where(collide, d2, MISS))
+
+Grid: ``(B // BB, K // BK)`` with the center dimension minor so the output
+tile stays resident in VMEM while center tiles sweep (the `pairwise_argmin`
+accumulation pattern).  A miss leaves the lane at ``MISS`` (3e38, finite so
+downstream f32 arithmetic stays NaN-free); callers compare against
+``MISS / 2`` to detect it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["lsh_bucket_min_pallas", "LSH_MISS"]
+
+LSH_MISS = 3.0e38  # "no colliding center" sentinel (finite in f32)
+
+
+def _kernel(qk_lo_ref, qk_hi_ref, q_ref, ck_lo_ref, ck_hi_ref, c_ref,
+            pen_ref, out_ref, *, num_tables: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, LSH_MISS)
+
+    qk_lo = qk_lo_ref[...]                 # (L, BB) int32
+    qk_hi = qk_hi_ref[...]
+    ck_lo = ck_lo_ref[...]                 # (L, BK) int32
+    ck_hi = ck_hi_ref[...]
+    bb = qk_lo.shape[1]
+    bk = ck_lo.shape[1]
+    # Bucket collision in any table: unrolled OR over the (static, small) L.
+    collide = jnp.zeros((bb, bk), dtype=jnp.bool_)
+    for l in range(num_tables):
+        collide |= (qk_lo[l, :][:, None] == ck_lo[l, :][None, :]) & (
+            qk_hi[l, :][:, None] == ck_hi[l, :][None, :]
+        )
+
+    q = q_ref[...].astype(jnp.float32)     # (BB, D)
+    c = c_ref[...].astype(jnp.float32)     # (BK, D)
+    dots = jax.lax.dot_general(
+        q, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                      # (BB, BK) on the MXU
+    q_sq = jnp.sum(q * q, axis=1, keepdims=True)       # (BB, 1)
+    c_sq = jnp.sum(c * c, axis=1, keepdims=True).T     # (1, BK)
+    d2 = jnp.maximum(q_sq - 2.0 * dots + c_sq, 0.0)
+
+    # penalty row: 0 for live centers, LSH_MISS for padded / not-yet-opened
+    # slots — the max() turns any accidental collision with them into a miss.
+    masked = jnp.maximum(jnp.where(collide, d2, LSH_MISS), pen_ref[...])
+    out_ref[...] = jnp.minimum(out_ref[...], jnp.min(masked, axis=1))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_k", "interpret")
+)
+def lsh_bucket_min_pallas(
+    q_keys_lo: jax.Array,    # (L, B) int32 — candidate bucket keys, low plane
+    q_keys_hi: jax.Array,    # (L, B) int32
+    q: jax.Array,            # (B, D) f32  — candidate coordinates
+    c_keys_lo: jax.Array,    # (L, K) int32 — opened-center bucket keys
+    c_keys_hi: jax.Array,    # (L, K) int32
+    c: jax.Array,            # (K, D) f32  — opened-center coordinates
+    penalty: jax.Array,      # (1, K) f32  — 0 live, LSH_MISS masked-out
+    *,
+    block_b: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """Pre-padded inputs (B % block_b == 0, K % block_k == 0, L % 8 == 0);
+    see `ops.lsh_bucket_min` for the padding/unpadding wrapper."""
+    l, b = q_keys_lo.shape
+    k = c_keys_lo.shape[1]
+    assert b % block_b == 0 and k % block_k == 0, (b, k, block_b, block_k)
+    d = q.shape[1]
+    grid = (b // block_b, k // block_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, num_tables=l),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((l, block_b), lambda i, j: (0, i)),
+            pl.BlockSpec((l, block_b), lambda i, j: (0, i)),
+            pl.BlockSpec((block_b, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((l, block_k), lambda i, j: (0, j)),
+            pl.BlockSpec((l, block_k), lambda i, j: (0, j)),
+            pl.BlockSpec((block_k, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, block_k), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=interpret,
+    )(q_keys_lo, q_keys_hi, q, c_keys_lo, c_keys_hi, c, penalty)

@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.d2_update import d2_update_pallas
+from repro.kernels.lsh_bucket_min import LSH_MISS, lsh_bucket_min_pallas
 from repro.kernels.pairwise_argmin import pairwise_argmin_pallas
 from repro.kernels.tree_sep_update import tree_sep_update_pallas
 
@@ -23,10 +24,13 @@ __all__ = [
     "pairwise_argmin",
     "d2_update",
     "tree_sep_update",
+    "lsh_bucket_min",
+    "LSH_MISS",
     "default_interpret",
 ]
 
 _PAD_DIST = 3.0e38  # padded centers sit "at infinity"
+_PAD_FAR = 1.0e17   # per-coordinate "far away" (distance^2 stays f32-finite)
 
 
 def default_interpret() -> bool:
@@ -120,6 +124,48 @@ def tree_sep_update(
         interpret=interpret,
     )
     return out[:n]
+
+
+def lsh_bucket_min(
+    q_keys_lo: jax.Array,
+    q_keys_hi: jax.Array,
+    q: jax.Array,
+    c_keys_lo: jax.Array,
+    c_keys_hi: jax.Array,
+    c: jax.Array,
+    count: jax.Array | int | None = None,
+    *,
+    block_b: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Nearest colliding-bucket center per candidate; any B/K/L, pads inside.
+
+    Keys are (L, B) / (L, K) int32 planes of the uint64 bucket keys (tables
+    in sublanes, points in lanes — the `tree_sep_update` layout).  `count`
+    (static or traced scalar) marks only the first `count` center slots
+    live — the device seeder grows its center set inside a fixed (k, ...)
+    buffer.  Padding: tables (L -> multiple of 8) use query codes -1 vs
+    center codes -2 (never collide); centers and candidates pad to block
+    multiples, masked via the penalty row / sliced off respectively.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    b = q.shape[0]
+    k = c.shape[0]
+    qlo = _pad_to(_pad_to(q_keys_lo, 1, block_b, 0), 0, 8, -1)
+    qhi = _pad_to(_pad_to(q_keys_hi, 1, block_b, 0), 0, 8, -1)
+    qp = _pad_to(q, 0, block_b, 0.0)
+    clo = _pad_to(_pad_to(c_keys_lo, 1, block_k, -2), 0, 8, -2)
+    chi = _pad_to(_pad_to(c_keys_hi, 1, block_k, -2), 0, 8, -2)
+    cp = _pad_to(c, 0, block_k, _PAD_FAR)
+    live = jnp.arange(cp.shape[0]) < (k if count is None else count)
+    penalty = jnp.where(live, 0.0, LSH_MISS).astype(jnp.float32)[None, :]
+    out = lsh_bucket_min_pallas(
+        qlo, qhi, qp, clo, chi, cp, penalty,
+        block_b=block_b, block_k=block_k, interpret=interpret,
+    )
+    return out[:b]
 
 
 def split_codes_u64(codes: np.ndarray) -> tuple[np.ndarray, np.ndarray]:

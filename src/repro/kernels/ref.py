@@ -9,7 +9,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["pairwise_argmin_ref", "d2_update_ref", "tree_sep_update_ref"]
+__all__ = [
+    "pairwise_argmin_ref",
+    "d2_update_ref",
+    "tree_sep_update_ref",
+    "lsh_bucket_min_ref",
+]
 
 
 def pairwise_argmin_ref(x: jax.Array, c: jax.Array):
@@ -58,6 +63,37 @@ def tree_sep_update_ref(
     dist = scale * (jnp.exp2(1.0 - sep.astype(jnp.float32)) - 2.0 ** (1.0 - num_levels))
     dist = jnp.maximum(dist, 0.0)
     return jnp.minimum(w.astype(jnp.float32), dist * dist)
+
+
+def lsh_bucket_min_ref(
+    q_keys_lo: jax.Array,    # (L, B) int32 — candidate bucket keys, low plane
+    q_keys_hi: jax.Array,    # (L, B) int32
+    q: jax.Array,            # (B, D) — candidate coordinates
+    c_keys_lo: jax.Array,    # (L, K) int32 — opened-center bucket keys
+    c_keys_hi: jax.Array,    # (L, K) int32
+    c: jax.Array,            # (K, D) — opened-center coordinates
+    count=None,              # scalar — only the first `count` centers live
+):
+    """Monotone-LSH nearest-bucket query: min over centers sharing a bucket.
+
+    Returns (B,) f32 — squared distance to the nearest colliding center, or
+    `LSH_MISS` when no center shares any of the L buckets (the rejection
+    sampler then accepts, mirroring `MonotoneLSH.query_batch`'s +inf miss).
+    """
+    from repro.kernels.lsh_bucket_min import LSH_MISS
+
+    collide = (
+        (q_keys_lo[:, :, None] == c_keys_lo[:, None, :])
+        & (q_keys_hi[:, :, None] == c_keys_hi[:, None, :])
+    ).any(axis=0)                                       # (B, K)
+    if count is not None:
+        collide &= (jnp.arange(c.shape[0]) < count)[None, :]
+    qf = q.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    q_sq = (qf * qf).sum(axis=1)
+    c_sq = (cf * cf).sum(axis=1)
+    d2 = jnp.maximum(q_sq[:, None] - 2.0 * (qf @ cf.T) + c_sq[None, :], 0.0)
+    return jnp.where(collide, d2, LSH_MISS).min(axis=1)
 
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -43,6 +43,29 @@ def _dtype(cfg: ModelConfig):
     return jnp.dtype(cfg.dtype)
 
 
+@jax.custom_vjp
+def _grad_safe_barrier(tree):
+    """`optimization_barrier` with a pass-through differentiation rule.
+
+    `jax.lax.optimization_barrier` has no registered transpose rule, so the
+    raw primitive kills `jax.grad` through the scanned group body.  The
+    custom VJP barriers the cotangents the same way on the way back, which
+    keeps the backward all-gathers inside the loop body too.
+    """
+    return jax.lax.optimization_barrier(tree)
+
+
+def _grad_safe_barrier_fwd(tree):
+    return _grad_safe_barrier(tree), None
+
+
+def _grad_safe_barrier_bwd(_, cotangents):
+    return (jax.lax.optimization_barrier(cotangents),)
+
+
+_grad_safe_barrier.defvjp(_grad_safe_barrier_fwd, _grad_safe_barrier_bwd)
+
+
 # ---------------------------------------------------------------------------
 # Specs.
 # ---------------------------------------------------------------------------
@@ -234,7 +257,7 @@ def forward(
         # Barrier: keeps the FSDP weight all-gather *inside* the loop body
         # (XLA otherwise rewrites gather(slice(stacked)) into
         # slice(gather(stacked)) and hoists the full-model gather out).
-        group_params = jax.lax.optimization_barrier(group_params)
+        group_params = _grad_safe_barrier(group_params)
         caches_g = {}
         aux_g = jnp.zeros((), jnp.float32)
         for p, (bt, moe) in enumerate(layout.positions):
@@ -301,7 +324,7 @@ def decode_step(
 
     def group_body(x, scanned):
         group_params, group_cache = scanned
-        group_params = jax.lax.optimization_barrier(group_params)
+        group_params = _grad_safe_barrier(group_params)
         outs = {}
         for p, (bt, moe) in enumerate(layout.positions):
             x, c = transformer.block_decode(

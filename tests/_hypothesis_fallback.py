@@ -1,0 +1,119 @@
+"""Minimal deterministic stand-in for `hypothesis` (used when the real
+package is unavailable — this repo must run without network installs).
+
+Implements exactly the surface the test-suite uses: ``given``, ``settings``,
+``assume`` and the ``strategies`` namespace with ``integers`` / ``floats`` /
+``lists``.  Example generation is a seeded RNG sweep (no shrinking): the
+first example per test is the all-minimum boundary case, the rest are
+uniform draws.  ``conftest.py`` installs this module into ``sys.modules``
+as ``hypothesis`` only when the real library cannot be imported, so
+installing `hypothesis` transparently upgrades the suite to real
+property-based testing.
+"""
+
+from __future__ import annotations
+
+
+import sys
+import types
+
+import numpy as np
+
+_SEED = 0xB0B5EED
+
+
+class _Rejected(Exception):
+    """Raised by `assume(False)`: skip this example, keep the sweep going."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Rejected()
+    return True
+
+
+class _Strategy:
+    def __init__(self, draw_min, draw_rand):
+        self._draw_min = draw_min
+        self._draw_rand = draw_rand
+
+    def draw(self, rng: np.random.Generator, boundary: bool = False):
+        return self._draw_min() if boundary else self._draw_rand(rng)
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(
+        lambda: int(min_value),
+        lambda rng: int(rng.integers(min_value, max_value + 1)),
+    )
+
+
+def _floats(min_value: float, max_value: float, **_) -> _Strategy:
+    return _Strategy(
+        lambda: float(min_value),
+        lambda rng: float(rng.uniform(min_value, max_value)),
+    )
+
+
+def _lists(elements: _Strategy, *, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def draw_min():
+        return [elements.draw(None, boundary=True) for _ in range(min_size)]
+
+    def draw_rand(rng):
+        size = int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(size)]
+
+    return _Strategy(draw_min, draw_rand)
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _integers
+strategies.floats = _floats
+strategies.lists = _lists
+
+
+class HealthCheck:
+    """Placeholder for `hypothesis.HealthCheck` attribute access."""
+
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+    all = classmethod(lambda cls: [])
+
+
+def settings(*_args, max_examples: int = 20, **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        # NOTE: no functools.wraps — copying __wrapped__ would expose fn's
+        # parameters to pytest, which would then demand fixtures for them.
+        def runner(*args, **kwargs):
+            n = getattr(
+                runner, "_fallback_max_examples",
+                getattr(fn, "_fallback_max_examples", 20),
+            )
+            rng = np.random.default_rng(_SEED)
+            for i in range(n):
+                vals = [s.draw(rng, boundary=(i == 0)) for s in strats]
+                try:
+                    fn(*args, *vals, **kwargs)
+                except _Rejected:
+                    continue
+                except Exception:
+                    print(
+                        f"Falsifying example ({fn.__name__}): {vals!r}",
+                        file=sys.stderr,
+                    )
+                    raise
+
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        return runner
+
+    return deco

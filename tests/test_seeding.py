@@ -93,6 +93,27 @@ def test_rejection_trials_bounded_by_lemma():
     assert tpc <= 48 * (1.2 ** 2) * 6 * 6
 
 
+def test_rejection_fallback_counts_trials():
+    """Adversarial input: all points identical => every multi-tree weight
+    collapses to zero after the first open, so all remaining centers come
+    from the safety-net fallback.  Those draws must be counted (the trial
+    statistics under-reported them before) and the result stays in-bounds."""
+    pts = np.zeros((10, 3))
+    k = 5
+    res = SEEDERS["rejection"](pts, k, np.random.default_rng(0))
+    assert res.indices.shape == (k,)
+    assert (res.indices >= 0).all() and (res.indices < len(pts)).all()
+    assert res.num_candidates >= k
+    assert res.extras["trials_per_center"] >= 1.0
+
+
+def test_rejection_trials_at_least_k():
+    """Every opened center costs at least one candidate draw."""
+    pts = _clustered(n=500, d=4, seed=11)
+    res = SEEDERS["rejection"](pts, 20, np.random.default_rng(2))
+    assert res.num_candidates >= 20
+
+
 def test_fit_facade_with_lloyd():
     pts = _clustered(seed=9)
     km = fit(pts, KMeansConfig(k=25, seeder="rejection", lloyd_iters=5))
