@@ -1,15 +1,22 @@
 """Benchmark harness entry point: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (plus the formatted paper
-tables).  Sections:
+tables) and writes the regression artifact ``BENCH_seeding.json`` at the
+repo root — per-backend seeding wall-clock, clustering-cost ratios vs exact
+CPU k-means++, and the per-open sample-structure update microbenchmark
+(O(n) heap rebuild vs the incremental tile-sum scatter) — so every PR
+leaves a perf trajectory point.  Sections:
   - seeding speed/quality/variance + rejection stats — paper Tables 1-8 on
     (n,d)-matched synthetic datasets (see datasets.py), CI scale by default;
+  - per-open heap-update microbenchmark (rebuild vs incremental) at
+    n in {2^14, 2^16, 2^18};
   - kernel microbenchmarks — Pallas ops (interpret mode on CPU) vs jnp refs;
   - roofline — §Roofline summary from the dry-run artifacts (if present).
 """
 
 from __future__ import annotations
 
+import json
 import sys
 import time
 from pathlib import Path
@@ -20,6 +27,8 @@ for _p in (str(_ROOT), str(_ROOT / "src")):   # script mode: `python benchmarks/
         sys.path.insert(0, _p)
 
 import numpy as np
+
+BENCH_JSON = _ROOT / "BENCH_seeding.json"
 
 
 def _timeit(fn, *args, reps=3, warmup=1, **kw):
@@ -55,6 +64,10 @@ def bench_kernels():
         dt, _ = _timeit(lambda: jax.block_until_ready(
             ops.d2_update(x, c[0], w)))
         rows.append((f"kernel.d2_update[{n}x{d}]", dt * 1e6, ""))
+        dt, _ = _timeit(lambda: jax.block_until_ready(
+            ops.d2_update_tiles(x, c[0], w)))
+        rows.append((f"kernel.d2_update_tiles[{n}x{d}]", dt * 1e6,
+                     "tile-sum epilogue for TiledSampleTree.refresh"))
 
     from repro.kernels.flash_attention import flash_attention_pallas
     from repro.kernels.ref import flash_attention_ref
@@ -76,11 +89,12 @@ def bench_seeding(smoke: bool = False):
     from benchmarks.seeding import main as seeding_main
 
     if smoke:
-        # CI-sized run: tiny slice of one dataset, CPU *and* device backends
-        # so the jit seeders (Pallas kernels in interpret mode off-TPU) get
+        # CI-sized run: tiny slice of one dataset, CPU + device + sharded
+        # backends so every jit seeder (Pallas kernels in interpret mode
+        # off-TPU, shard_map over however many local devices exist) gets
         # exercised end-to-end on every push.
         argv = ["--datasets", "kddcup", "--ks", "25", "--scale", "0.01",
-                "--trials", "1", "--backends", "cpu", "device"]
+                "--trials", "1", "--backends", "cpu", "device", "sharded"]
     else:
         argv = ["--datasets", "kddcup", "--ks", "100", "500",
                 "--scale", "0.05", "--trials", "1"]
@@ -92,7 +106,78 @@ def bench_seeding(smoke: bool = False):
                 rows.append((f"seed.{res['dataset']}.{algo}[k={k}]",
                              secs * 1e6,
                              f"cost={data['cost'][k]:.4g}"))
-    return rows
+    return rows, results
+
+
+def bench_heap_update(ns=(1 << 14, 1 << 16, 1 << 18), tile=512, reps=20):
+    """Per-open sample-structure update: O(n) rebuild vs incremental.
+
+    Times exactly the work a device seeder pays per opened center to keep
+    its sample structure consistent AFTER the weight sweep: the old path
+    rebuilt a full flat heap (`SampleTreeJax.init`, O(n)); the new path
+    scatters the kernels' tile-sum epilogue into the coarse heap
+    (`TiledSampleTree.refresh`, O(T log T), T = n/tile) — sublinear in n.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.sample_tree import SampleTreeJax, TiledSampleTree
+
+    rng = np.random.default_rng(0)
+    rows, record = [], {}
+    for n in ns:
+        w = jnp.asarray(rng.uniform(0.5, 2.0, n).astype(np.float32))
+        st = SampleTreeJax(n)
+        rebuild = jax.jit(st.init)
+        dt_rebuild, _ = _timeit(
+            lambda: jax.block_until_ready(rebuild(w)), reps=reps, warmup=2)
+        ts = TiledSampleTree(n, tile=tile)
+        coarse = ts.init(w)
+        tsums = ts.tile_sums(w) * 0.9       # every tile touched (worst case)
+        refresh = jax.jit(ts.refresh)
+        dt_inc, _ = _timeit(
+            lambda: jax.block_until_ready(refresh(coarse, tsums)),
+            reps=reps, warmup=2)
+        record[str(n)] = {
+            "rebuild_s": dt_rebuild,
+            "incremental_s": dt_inc,
+            "speedup": dt_rebuild / max(dt_inc, 1e-12),
+        }
+        rows.append((f"heap_update.rebuild[n={n}]", dt_rebuild * 1e6, ""))
+        rows.append((f"heap_update.incremental[n={n}]", dt_inc * 1e6,
+                     f"speedup_vs_rebuild={dt_rebuild / max(dt_inc, 1e-12):.1f}x"))
+    return rows, {"tile": tile, "per_open": record}
+
+
+def write_bench_json(seed_results, heap_update, *, smoke: bool):
+    """BENCH_seeding.json: the cross-PR perf-trajectory artifact."""
+    import jax
+
+    datasets = []
+    for res in seed_results:
+        base = res["algos"].get("kmeans++", {}).get("cost", {})
+        algos = {}
+        for algo, data in res["algos"].items():
+            algos[algo] = {
+                "seconds": {str(k): v for k, v in data["seconds"].items()},
+                "cost": {str(k): v for k, v in data["cost"].items()},
+                "cost_ratio_vs_kmeanspp": {
+                    str(k): v / base[k]
+                    for k, v in data["cost"].items() if base.get(k)
+                },
+            }
+        datasets.append({"dataset": res["dataset"], "n": res["n"],
+                         "d": res["d"], "ks": res["ks"], "algos": algos})
+    payload = {
+        "generated_by": "benchmarks/run.py" + (" --smoke" if smoke else ""),
+        "backend": jax.default_backend(),
+        "interpret_kernels": jax.default_backend() != "tpu",
+        "num_devices": len(jax.devices()),
+        "datasets": datasets,
+        "heap_update_per_open": heap_update,
+    }
+    BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {BENCH_JSON}")
 
 
 def bench_roofline():
@@ -125,11 +210,16 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     all_rows = []
     print("# seeding tables (paper tables 1-8, CI scale)", flush=True)
-    all_rows += bench_seeding(smoke=args.smoke)
+    seed_rows, seed_results = bench_seeding(smoke=args.smoke)
+    all_rows += seed_rows
+    print("# per-open heap update: rebuild vs incremental", flush=True)
+    heap_rows, heap_update = bench_heap_update()
+    all_rows += heap_rows
     if not args.smoke:
         print("# kernel microbenchmarks", flush=True)
         all_rows += bench_kernels()
         all_rows += bench_roofline()
+    write_bench_json(seed_results, heap_update, smoke=args.smoke)
     print("\nname,us_per_call,derived")
     for name, us, derived in all_rows:
         print(f"{name},{us:.1f},{derived}")

@@ -26,15 +26,19 @@ RESULTS = Path(__file__).resolve().parent / "artifacts"
 
 ALGOS = ("fastkmeans++", "rejection", "kmeans++", "afkmc2", "uniform")
 # The paper's two algorithms also exist as jit-able device programs
-# (`repro.core.device_seeding`); `--backends cpu device` appends these so
-# Tables 1-3 can compare CPU vs device wall-clock for the same seeds.
+# (`repro.core.device_seeding`) and as multi-chip shard_map programs
+# (`repro.core.sharded_seeding`); `--backends cpu device sharded` appends
+# these so Tables 1-3 can compare wall-clock for the same seeds.
 DEVICE_ALGOS = ("fastkmeans++/device", "rejection/device")
+SHARDED_ALGOS = ("fastkmeans++/sharded", "rejection/sharded")
 
 
 def _algo_list(backends) -> tuple[str, ...]:
     algos = tuple(ALGOS)
     if "device" in backends:
         algos += DEVICE_ALGOS
+    if "sharded" in backends:
+        algos += SHARDED_ALGOS
     return algos
 
 
@@ -55,8 +59,8 @@ def run_dataset(name: str, ks, *, scale: float, trials: int, seed: int = 0,
     for k in ks:
         for algo in algos:
             secs, costs, tpc = [], [], []
-            if "/device" in algo:
-                # Warm-up: the first device call pays one-time jit
+            if "/" in algo:
+                # Warm-up: the first device/sharded call pays one-time jit
                 # trace/compile; exclude it so the speed tables compare
                 # steady-state seeding wall-clock, not XLA compilation.
                 data = q.points
@@ -125,10 +129,12 @@ def main(argv=None):
                     help="fraction of the paper's n (1.0 = full)")
     ap.add_argument("--trials", type=int, default=2)
     ap.add_argument("--backends", nargs="+", default=["cpu"],
-                    choices=("cpu", "device"),
+                    choices=("cpu", "device", "sharded"),
                     help="'device' appends the jit seeders "
-                         "(fastkmeans++/device, rejection/device) for the "
-                         "CPU-vs-device wall-clock comparison")
+                         "(fastkmeans++/device, rejection/device); "
+                         "'sharded' the multi-chip shard_map seeders "
+                         "(all local devices) — wall-clock comparison on "
+                         "the same seeds")
     args = ap.parse_args(argv)
     RESULTS.mkdir(parents=True, exist_ok=True)
     results = []

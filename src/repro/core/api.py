@@ -12,13 +12,19 @@ from typing import Optional
 import numpy as np
 
 from repro.core import device_seeding  # registers the "/device" seeders
+from repro.core import sharded_seeding  # registers the "/sharded" seeders
 from repro.core.lloyd import LloydResult, lloyd
 from repro.core.preprocess import quantize
 from repro.core.seeding import SEEDERS, SeedingResult, clustering_cost
 
 __all__ = ["KMeansConfig", "KMeans", "fit", "resolve_seeder", "BACKENDS"]
 
-BACKENDS = ("cpu", "device")
+BACKENDS = ("cpu", "device", "sharded")
+
+_BACKEND_REGISTRIES = {
+    "device": device_seeding.DEVICE_SEEDERS,
+    "sharded": sharded_seeding.SHARDED_SEEDERS,
+}
 
 
 def resolve_seeder(name: str, backend: str = "cpu"):
@@ -26,18 +32,21 @@ def resolve_seeder(name: str, backend: str = "cpu"):
 
     `backend="cpu"` returns the faithful NumPy implementation;
     `backend="device"` the jit-able TPU-native twin (Pallas kernels run in
-    interpret mode off-TPU).  Composite keys like ``"rejection/device"``
-    are accepted directly by `SEEDERS` as well.
+    interpret mode off-TPU); `backend="sharded"` the multi-chip shard_map
+    twin over all local devices (one contiguous point range + local
+    sub-heap per device).  Composite keys like ``"rejection/device"`` are
+    accepted directly by `SEEDERS` as well.
     """
     if backend not in BACKENDS:
         raise KeyError(f"unknown backend {backend!r}; expected {BACKENDS}")
-    if backend == "device":
-        if name not in device_seeding.DEVICE_SEEDERS:
+    registry = _BACKEND_REGISTRIES.get(backend)
+    if registry is not None:
+        if name not in registry:
             raise KeyError(
-                f"seeder {name!r} has no device implementation; available: "
-                f"{sorted(device_seeding.DEVICE_SEEDERS)}"
+                f"seeder {name!r} has no {backend} implementation; "
+                f"available: {sorted(registry)}"
             )
-        return SEEDERS[f"{name}/device"]
+        return SEEDERS[f"{name}/{backend}"]
     return SEEDERS[name]
 
 
@@ -45,7 +54,7 @@ def resolve_seeder(name: str, backend: str = "cpu"):
 class KMeansConfig:
     k: int
     seeder: str = "rejection"           # any key of core.seeding.SEEDERS
-    backend: str = "cpu"                # "cpu" (faithful) | "device" (jit)
+    backend: str = "cpu"                # "cpu" | "device" (jit) | "sharded"
     lloyd_iters: int = 0                # 0 = seeding only (paper's experiments)
     quantize: bool = True               # Appendix-F aspect-ratio control
     c: float = 2.0                      # LSH approximation factor (rejection)

@@ -4,14 +4,27 @@ The pointer-machine data structures become arrays (DESIGN.md §3):
   - the multi-tree embedding is a (trees, H, n) int32x2 code tensor built
     host-side once (O(nd log Δ), embarrassingly vectorisable);
   - MULTITREEOPEN is the fused `tree_sep_update` Pallas kernel per tree
-    (compare+reduce+min over all points: O(nH) VPU work, no pointers);
-  - MULTITREESAMPLE is the flat-heap `SampleTreeJax` descent (O(log n));
+    (compare+reduce+min over all points: O(nH) VPU work, no pointers); the
+    *last* tree's sweep uses the `_tiles` variant, whose free epilogue emits
+    per-tile weight sums;
+  - MULTITREESAMPLE is the two-level `TiledSampleTree` descent: a coarse
+    flat heap over the T = n/tile tile sums plus one vectorised intra-tile
+    cumsum.  After each opened center the coarse heap is fixed *in place*
+    with one `scatter_update` from the kernel epilogue's tile sums —
+    O(T log T) — never rebuilt from scratch (the old per-center
+    `SampleTreeJax.init` cost O(n) per open, O(nk) total, and dominated
+    large-n seeding);
   - the monotone LSH of Algorithm 4 becomes a (L, n) int32x2 bucket-key
     tensor (hashed host-side with the *same* hash family as
-    `repro.core.lsh.MonotoneLSH`) plus the fused `lsh_bucket_min` Pallas
-    kernel: nearest *colliding-bucket* opened center per candidate;
+    `repro.core.lsh.MonotoneLSH`) plus the fused `lsh_bucket_accept` Pallas
+    kernel: nearest *colliding-bucket* opened center per candidate, with the
+    acceptance probability computed in the kernel epilogue;
   - the whole k-center loop is one `lax.fori_loop` — a single device
     program, no host round-trips.
+
+The multi-chip twin of this module lives in `repro.core.sharded_seeding`
+(`backend="sharded"`): shard-then-descend sampling over per-device sub-heaps
+with the same incremental tile-sum updates.
 
 `device_rejection_sampling` (Algorithm 4, REJECTIONSAMPLING) runs batched
 speculative rejection inside a `lax.while_loop` per center: draw a block of
@@ -41,9 +54,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lsh import MonotoneLSH
-from repro.core.sample_tree import SampleTreeJax
+from repro.core.sample_tree import TiledSampleTree
 from repro.core.tree_embedding import build_multitree
-from repro.kernels.ops import lsh_bucket_min, split_codes_u64, tree_sep_update
+from repro.kernels.ops import (
+    lsh_bucket_accept,
+    split_codes_u64,
+    tree_sep_update,
+    tree_sep_update_tiles,
+)
 
 __all__ = [
     "device_fast_kmeanspp",
@@ -74,6 +92,43 @@ def prepare_embedding(points: np.ndarray, *, seed: int = 0,
     return jnp.asarray(lo), jnp.asarray(hi), meta
 
 
+def _pad_axis(a: jax.Array, axis: int, n_pad: int) -> jax.Array:
+    """Zero-pad one axis to `n_pad` (trace-time static shapes)."""
+    pad = n_pad - a.shape[axis]
+    if pad <= 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def _make_open_center(codes_lo, codes_hi, *, scale, num_levels, tile,
+                      interpret):
+    """Per-center fused sweep over all trees; the last tree's kernel emits
+    the per-tile weight sums the coarse heap update consumes (free epilogue
+    — no extra pass over the points)."""
+    t = codes_lo.shape[0]
+
+    def open_center(weights, x):
+        for ti in range(t - 1):
+            weights = tree_sep_update(
+                codes_lo[ti], codes_hi[ti],
+                codes_lo[ti, :, x], codes_hi[ti, :, x],
+                weights,
+                scale=scale, num_levels=num_levels, block_n=tile,
+                interpret=interpret,
+            )
+        return tree_sep_update_tiles(
+            codes_lo[t - 1], codes_hi[t - 1],
+            codes_lo[t - 1, :, x], codes_hi[t - 1, :, x],
+            weights,
+            scale=scale, num_levels=num_levels, block_n=tile,
+            interpret=interpret,
+        )
+
+    return open_center
+
+
 def device_fast_kmeanspp(
     codes_lo: jax.Array,     # (T, H-1, n) int32
     codes_hi: jax.Array,
@@ -83,41 +138,45 @@ def device_fast_kmeanspp(
     scale: float,
     num_levels: int,
     m_init: float,
+    tile: int = 512,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Algorithm 3.  Returns (k,) int32 chosen indices.  Jit-able end to end."""
-    t, h, n = codes_lo.shape
-    st = SampleTreeJax(n)
+    """Algorithm 3.  Returns (k,) int32 chosen indices.  Jit-able end to end.
 
-    def open_center(weights, x):
-        for ti in range(t):
-            weights = tree_sep_update(
-                codes_lo[ti], codes_hi[ti],
-                codes_lo[ti, :, x], codes_hi[ti, :, x],
-                weights,
-                scale=scale, num_levels=num_levels,
-                interpret=interpret,
-            )
-        return weights
+    Per opened center the sample structure is fixed *incrementally*: the last
+    tree sweep's tile-sum epilogue feeds one `TiledSampleTree.refresh`
+    (O(T log T), T = n/tile) — there is no `SampleTreeJax.init` (O(n) heap
+    rebuild) anywhere in the loop body.
+    """
+    t, h, n = codes_lo.shape
+    ts = TiledSampleTree(n, tile=tile)
+    clo = _pad_axis(codes_lo, 2, ts.n_pad)
+    chi = _pad_axis(codes_hi, 2, ts.n_pad)
+    open_center = _make_open_center(clo, chi, scale=scale,
+                                    num_levels=num_levels, tile=tile,
+                                    interpret=interpret)
 
     def body(i, state):
-        weights, heap, chosen, key = state
+        weights, coarse, chosen, key = state
         key, k1 = jax.random.split(key)
         x = jnp.where(
             i == 0,
             jax.random.randint(k1, (), 0, n),
-            st.sample(heap, k1, 1)[0],
+            ts.sample(coarse, weights, k1, 1)[0],
         ).astype(jnp.int32)
-        weights = open_center(weights, x)
-        heap = st.init(weights)
+        weights, tsums = open_center(weights, x)
+        coarse = ts.refresh(coarse, tsums)
         chosen = chosen.at[i].set(x)
-        return weights, heap, chosen, key
+        return weights, coarse, chosen, key
 
-    weights0 = jnp.full((n,), m_init, jnp.float32)
-    heap0 = st.init(weights0)
+    # Padded tail lanes start (and stay) at weight 0: never sampled.
+    weights0 = jnp.where(jnp.arange(ts.n_pad) < n, m_init, 0.0).astype(
+        jnp.float32
+    )
+    coarse0 = ts.init(weights0)
     chosen0 = jnp.zeros((k,), jnp.int32)
     _, _, chosen, _ = jax.lax.fori_loop(
-        0, k, body, (weights0, heap0, chosen0, key)
+        0, k, body, (weights0, coarse0, chosen0, key)
     )
     return chosen
 
@@ -193,7 +252,7 @@ def prepare_rejection(
     jax.jit,
     static_argnames=(
         "k", "scale", "num_levels", "m_init", "c", "batch", "max_rounds",
-        "interpret",
+        "tile", "interpret",
     ),
 )
 def device_rejection_sampling(
@@ -211,25 +270,31 @@ def device_rejection_sampling(
     c: float = 1.2,
     batch: int = 128,
     max_rounds: int = 32,
+    tile: int = 512,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Algorithm 4 as one device program (jit-able end to end).
 
     Per center, a `lax.while_loop` runs batched speculative rejection: draw
     `batch` i.i.d. candidates from the current multi-tree D^2 distribution
-    (flat-heap descent) plus uniforms, compute every candidate's LSH
-    nearest-bucket distance with one fused kernel sweep over the opened
-    centers, accept with probability ``d2_lsh / (c^2 * mtd2)`` and open the
-    *first* accept (the rest of the block is discarded, preserving the
-    sequential distribution exactly).  A complete LSH miss (kernel sentinel
-    `LSH_MISS`) makes the ratio > 1, i.e. always accepts — the CPU
-    structure's +inf convention.
+    (two-level `TiledSampleTree` descent) plus uniforms, compute every
+    candidate's LSH nearest-bucket distance *and* acceptance probability
+    ``d2_lsh / (c^2 * mtd2)`` with one fused `lsh_bucket_accept` kernel
+    sweep over the opened centers, and open the *first* accept (the rest of
+    the block is discarded, preserving the sequential distribution exactly).
+    A complete LSH miss (kernel sentinel `LSH_MISS`) makes the ratio > 1,
+    i.e. always accepts — the CPU structure's +inf convention.
+
+    Opening a center never rebuilds the sample structure: the last tree
+    sweep's tile-sum epilogue feeds one incremental
+    `TiledSampleTree.refresh` (O(T log T), T = n/tile) instead of the old
+    O(n) `SampleTreeJax.init` per center.
 
     `max_rounds` bounds the per-center loop (expected trials are
     O(c^2 d^2), Lemma 5.3); on exhaustion the first candidate of the last
     block — an exact multi-tree D^2 draw — is opened, mirroring the CPU
-    safety net.  The degenerate all-weights-zero case (total heap weight 0)
-    skips the loop and opens a uniform draw.
+    safety net.  The degenerate all-weights-zero case (total coarse-heap
+    weight 0) skips the loop and opens a uniform draw.
 
     Returns ``(chosen (k,) int32, trials (k,) int32)`` — trials per center
     for the Lemma 5.3 statistics.
@@ -237,44 +302,39 @@ def device_rejection_sampling(
     t, h, n = codes_lo.shape
     l = keys_lo.shape[0]
     d = points.shape[1]
-    st = SampleTreeJax(n)
+    ts = TiledSampleTree(n, tile=tile)
     c2 = float(c) ** 2
 
-    def open_center(weights, x):
-        for ti in range(t):
-            weights = tree_sep_update(
-                codes_lo[ti], codes_hi[ti],
-                codes_lo[ti, :, x], codes_hi[ti, :, x],
-                weights,
-                scale=scale, num_levels=num_levels,
-                interpret=interpret,
-            )
-        return weights
+    clo = _pad_axis(codes_lo, 2, ts.n_pad)
+    chi = _pad_axis(codes_hi, 2, ts.n_pad)
+    pts_pad = _pad_axis(points, 0, ts.n_pad)
+    klo_pad = _pad_axis(keys_lo, 1, ts.n_pad)
+    khi_pad = _pad_axis(keys_hi, 1, ts.n_pad)
+    open_center = _make_open_center(clo, chi, scale=scale,
+                                    num_levels=num_levels, tile=tile,
+                                    interpret=interpret)
 
     def body(i, state):
-        weights, heap, chosen, ctr_pts, ck_lo, ck_hi, trials, key = state
+        weights, coarse, chosen, ctr_pts, ck_lo, ck_hi, trials, key = state
         key, k_unif = jax.random.split(key)
         x_unif = jax.random.randint(k_unif, (), 0, n).astype(jnp.int32)
 
         def round_cond(carry):
             key, x_sel, done, t_i, rounds = carry
-            return (~done) & (rounds < max_rounds) & (i > 0) & (heap[1] > 0)
+            return (~done) & (rounds < max_rounds) & (i > 0) & (coarse[1] > 0)
 
         def round_body(carry):
             key, x_sel, done, t_i, rounds = carry
             key, k_cand, k_u = jax.random.split(key, 3)
-            cand = st.sample(heap, k_cand, batch)             # (B,) i.i.d. D^2
+            cand = ts.sample(coarse, weights, k_cand, batch)  # (B,) i.i.d. D^2
             us = jax.random.uniform(k_u, (batch,), dtype=jnp.float32)
-            d2_lsh = lsh_bucket_min(
-                jnp.take(keys_lo, cand, axis=1),
-                jnp.take(keys_hi, cand, axis=1),
-                jnp.take(points, cand, axis=0),
-                ck_lo, ck_hi, ctr_pts, i,
-                interpret=interpret,
-            )
-            mtd2 = heap[st.cap + cand]                        # current weights
-            p_acc = jnp.where(
-                mtd2 > 0.0, d2_lsh / jnp.maximum(c2 * mtd2, 1e-30), 0.0
+            mtd2 = weights[cand]                              # current weights
+            _, p_acc = lsh_bucket_accept(
+                jnp.take(klo_pad, cand, axis=1),
+                jnp.take(khi_pad, cand, axis=1),
+                jnp.take(pts_pad, cand, axis=0),
+                ck_lo, ck_hi, ctr_pts, mtd2, i,
+                c2=c2, interpret=interpret,
             )
             acc = us < p_acc
             any_acc = jnp.any(acc)
@@ -291,17 +351,19 @@ def device_rejection_sampling(
         x = x_sel
         t_i = jnp.maximum(t_i, 1)             # the uniform/fallback draw
 
-        weights = open_center(weights, x)
-        heap = st.init(weights)
+        weights, tsums = open_center(weights, x)
+        coarse = ts.refresh(coarse, tsums)
         chosen = chosen.at[i].set(x)
-        ctr_pts = ctr_pts.at[i].set(points[x])
-        ck_lo = ck_lo.at[:, i].set(keys_lo[:, x])
-        ck_hi = ck_hi.at[:, i].set(keys_hi[:, x])
+        ctr_pts = ctr_pts.at[i].set(pts_pad[x])
+        ck_lo = ck_lo.at[:, i].set(klo_pad[:, x])
+        ck_hi = ck_hi.at[:, i].set(khi_pad[:, x])
         trials = trials.at[i].set(t_i)
-        return weights, heap, chosen, ctr_pts, ck_lo, ck_hi, trials, key
+        return weights, coarse, chosen, ctr_pts, ck_lo, ck_hi, trials, key
 
-    weights0 = jnp.full((n,), m_init, jnp.float32)
-    heap0 = st.init(weights0)
+    weights0 = jnp.where(jnp.arange(ts.n_pad) < n, m_init, 0.0).astype(
+        jnp.float32
+    )
+    coarse0 = ts.init(weights0)
     chosen0 = jnp.zeros((k,), jnp.int32)
     ctr_pts0 = jnp.full((k, d), _FAR, jnp.float32)
     ck_lo0 = jnp.zeros((l, k), jnp.int32)
@@ -309,7 +371,7 @@ def device_rejection_sampling(
     trials0 = jnp.zeros((k,), jnp.int32)
     _, _, chosen, _, _, _, trials, _ = jax.lax.fori_loop(
         0, k, body,
-        (weights0, heap0, chosen0, ctr_pts0, ck_lo0, ck_hi0, trials0, key),
+        (weights0, coarse0, chosen0, ctr_pts0, ck_lo0, ck_hi0, trials0, key),
     )
     return chosen, trials
 

@@ -5,12 +5,21 @@ nodes hold subtree sums; MULTITREESAMPLE descends root->leaf choosing children
 proportionally to their weights (O(log n)); weight updates propagate to the
 root (O(log n)).
 
-TPU-native adaptation (DESIGN.md §3): the tree is a *flat array heap* of size
-2*cap (1-indexed, leaves at [cap, cap+n)).  Batch updates touch each of the
-log2(cap) ancestor levels with one vectorised scatter-add, so a batch of U
-updated leaves costs O(U log n) elementwise work in O(log n) NumPy calls —
-no per-point Python.  A jnp twin (`SampleTreeJax`) provides a jit-able
-fixed-shape version used inside device code.
+TPU-native adaptation (DESIGN.md §3, docs/sample_tree.md): the tree is a
+*flat array heap* of size 2*cap (1-indexed, leaves at [cap, cap+n)).  Batch
+updates touch each of the log2(cap) ancestor levels with one vectorised
+scatter-add, so a batch of U updated leaves costs O(U log n) elementwise work
+in O(log n) NumPy calls — no per-point Python.  A jnp twin (`SampleTreeJax`)
+provides a jit-able fixed-shape version used inside device code; its
+`scatter_update` is the incremental-update contract the device seeders rely
+on (never a from-scratch `init` inside a seeding loop).
+
+`TiledSampleTree` is the device seeders' two-level variant: leaves are
+*kernel tiles* rather than points — a coarse flat heap holds per-tile weight
+sums (refreshed from the fused kernels' tile-sum epilogue via one
+`scatter_update`, O(T log T) for T = n/tile tiles), and sampling descends the
+coarse heap to a tile then resolves the point with one vectorised intra-tile
+cumsum.  This is also the shard-local sub-heap of the sharded seeding path.
 """
 
 from __future__ import annotations
@@ -20,7 +29,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-__all__ = ["SampleTree", "SampleTreeJax"]
+__all__ = ["SampleTree", "SampleTreeJax", "TiledSampleTree"]
 
 
 class SampleTree:
@@ -66,9 +75,11 @@ class SampleTree:
         anc = leaf >> 1
         for _ in range(self.levels):
             np.add.at(self.heap, anc, delta)
+            # Guard against accumulated negative dust at *every* internal
+            # level: a stale negative partial sum deep in the tree would
+            # otherwise steer descents into zero-weight subtrees.
+            np.maximum.at(self.heap, anc, 0.0)
             anc = anc >> 1
-        # Guard against accumulated negative dust.
-        np.maximum(self.heap[1:2], 0.0, out=self.heap[1:2])
 
     def sample(self, rng: np.random.Generator) -> int:
         """Draw one leaf index with probability w_x / total.  O(log n)."""
@@ -121,9 +132,19 @@ class SampleTreeJax:
             idx = half
         return heap
 
-    def update(self, heap: jax.Array, indices: jax.Array, new_weights: jax.Array,
-               valid: jax.Array | None = None) -> jax.Array:
-        """Functional batch update; `valid` masks out padding lanes."""
+    def scatter_update(self, heap: jax.Array, indices: jax.Array,
+                       new_weights: jax.Array,
+                       valid: jax.Array | None = None) -> jax.Array:
+        """Set w[indices] = new_weights and fix ONLY the touched ancestors.
+
+        The incremental-update contract (docs/sample_tree.md): a batch of U
+        unique leaves costs O(U log n) scatter work — one `.at[].add` per
+        level — never an O(n) rebuild, so it is safe inside per-center
+        seeding loop bodies.  `valid` masks out padding lanes.  Every
+        internal level is clamped to >= 0 after its scatter-add so f32
+        delta accumulation can never leave negative dust that would steer
+        descents into empty subtrees.
+        """
         leaf = indices + self.cap
         new = new_weights.astype(jnp.float32)
         delta = new - heap[leaf]
@@ -135,8 +156,12 @@ class SampleTreeJax:
         anc = leaf >> 1
         for _ in range(self.levels):
             heap = heap.at[anc].add(delta)
+            heap = heap.at[anc].max(0.0)
             anc = anc >> 1
         return heap
+
+    # Backwards-compatible name; `scatter_update` is the canonical contract.
+    update = scatter_update
 
     def sample(self, heap: jax.Array, key: jax.Array, size: int) -> jax.Array:
         """Draw `size` i.i.d. leaf indices proportional to leaf weights."""
@@ -154,3 +179,61 @@ class SampleTreeJax:
 
         (_, v), _ = jax.lax.scan(step, (u, v), None, length=self.levels)
         return jnp.clip(v - self.cap, 0, self.n - 1)
+
+
+class TiledSampleTree:
+    """Two-level device sampler: coarse flat heap over *tile* sums + dense w.
+
+    The leaf level is the dense weight array itself (padded to a multiple of
+    `tile`); the heap only spans the T = n_pad/tile per-tile sums.  The fused
+    sweep kernels emit those sums as a free epilogue, so the per-center
+    sample-structure update is one `scatter_update` on a T-leaf heap —
+    O(T log T) with T = n/tile, instead of the O(n) full rebuild the device
+    seeders used to pay (`SampleTreeJax.init` per opened center).
+
+    Sampling descends the coarse heap to a tile (O(log T)) and resolves the
+    point inside the tile with one vectorised cumsum + count (O(tile) VPU
+    work, no sequential depth).  Zero-weight leaves — including the padding
+    tail — are never selected: their cumsum step is empty.
+    """
+
+    def __init__(self, n: int, tile: int = 512):
+        self.n = n
+        self.tile = tile
+        self.num_tiles = -(-n // tile)
+        self.n_pad = self.num_tiles * tile
+        self.coarse = SampleTreeJax(self.num_tiles)
+
+    def tile_sums(self, w_pad: jax.Array) -> jax.Array:
+        """(n_pad,) weights -> (T,) per-tile sums (the kernel epilogue's
+        oracle; used at init time and by tests)."""
+        return w_pad.reshape(self.num_tiles, self.tile).sum(axis=1)
+
+    def init(self, w_pad: jax.Array) -> jax.Array:
+        """Build the coarse heap from scratch — O(T); loop *preambles* only."""
+        return self.coarse.init(self.tile_sums(w_pad))
+
+    def refresh(self, heap: jax.Array, tile_sums: jax.Array) -> jax.Array:
+        """Incremental per-center update from the kernels' tile-sum epilogue."""
+        ids = jnp.arange(self.num_tiles, dtype=jnp.int32)
+        return self.coarse.scatter_update(heap, ids, tile_sums)
+
+    def total(self, heap: jax.Array) -> jax.Array:
+        return heap[1]
+
+    def sample(self, heap: jax.Array, w_pad: jax.Array, key: jax.Array,
+               size: int) -> jax.Array:
+        """Draw `size` i.i.d. point indices proportional to w_pad."""
+        k1, k2 = jax.random.split(key)
+        tiles = self.coarse.sample(heap, k1, size)                  # (B,)
+        wt = w_pad.reshape(self.num_tiles, self.tile)[tiles]        # (B, tile)
+        csum = jnp.cumsum(wt, axis=1)
+        # Fresh intra-tile uniform over the tile's *exact* mass, so the
+        # conditional leaf distribution is exact even when the coarse sums
+        # carry f32 scatter drift.  Smallest j with csum[j] > u, i.e. a
+        # zero-weight leaf (empty cumsum step) is never chosen.
+        u = jax.random.uniform(k2, (size,), dtype=jnp.float32) * csum[:, -1]
+        off = jnp.sum(csum <= u[:, None], axis=1).astype(jnp.int32)
+        off = jnp.minimum(off, self.tile - 1)
+        idx = tiles.astype(jnp.int32) * self.tile + off
+        return jnp.clip(idx, 0, self.n - 1)

@@ -1,0 +1,442 @@
+"""Multi-chip seeders: the device programs of `device_seeding` sharded over
+a 1-D "data" mesh with `shard_map` — the codebase's first multi-chip seeding
+path (ROADMAP: "shard the tree-sep/LSH sweeps across chips").
+
+Layout (docs/sample_tree.md): every per-point tensor — multi-tree codes
+(T, H, n), coordinates (n, d), LSH bucket keys (L, n), and the D^2 weight
+vector — is split into D contiguous leaf ranges, one per device.  Each shard
+owns a *local sub-heap* (`TiledSampleTree` over its own tiles, refreshed
+incrementally from the fused kernels' tile-sum epilogue) and the only
+replicated sampling state is the tiny top-tree: the (D,) vector of shard
+totals, produced by one `all_gather` per draw.
+
+MULTITREESAMPLE therefore runs shard-then-descend: a replicated uniform
+picks a shard from the top-tree cumsum, the owning shard descends its local
+coarse heap + intra-tile cumsum, and the winning global index (plus, for the
+rejection sampler, the candidate's coordinates / bucket keys / current
+weight) is broadcast with one masked `psum`.  Opening a center broadcasts
+the owner shard's code column the same way; the O(nH) tree-sep and LSH
+sweeps then run fully parallel, each device touching only its n/D points —
+the cross-chip sharding of the distance/LSH sweeps.
+
+Everything (the k-center `fori_loop`, the per-center rejection
+`while_loop`, the Pallas kernels — interpret mode off-TPU) runs inside one
+`shard_map`-wrapped jit program; control flow stays in lockstep because
+every predicate is computed from replicated (psum/all_gather) values.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.device_seeding import (
+    _FAR,
+    _pad_axis,
+    prepare_embedding,
+    prepare_rejection,
+)
+from repro.core.sample_tree import TiledSampleTree
+from repro.distributed.sharding import _mesh_size, points_axis
+from repro.kernels.ops import (
+    lsh_bucket_accept,
+    tree_sep_update,
+    tree_sep_update_tiles,
+)
+from repro.launch.mesh import make_seeding_mesh
+
+__all__ = [
+    "sharded_fast_kmeanspp",
+    "sharded_rejection_sampling",
+    "sharded_fast_kmeanspp_seeder",
+    "sharded_rejection_seeder",
+    "SHARDED_SEEDERS",
+]
+
+
+def _shard_sampler(ts_loc, axis):
+    """Shard-then-descend MULTITREESAMPLE over local sub-heaps.
+
+    Returns a function drawing `size` i.i.d. global indices: the (D,)
+    top-tree of shard totals is gathered once, a replicated uniform picks
+    each draw's shard, every shard descends locally for all lanes, and one
+    masked psum publishes the winners.  Exact per-point distribution:
+    P(shard) * P(point | shard).
+    """
+
+    def sample(coarse, w_loc, key, size):
+        sid = jax.lax.axis_index(axis)
+        n_loc = w_loc.shape[0]
+        k1, k2 = jax.random.split(key)
+        totals = jax.lax.all_gather(coarse[1], axis)          # (D,) top-tree
+        csum = jnp.cumsum(totals)
+        u = jax.random.uniform(k1, (size,), dtype=jnp.float32) * csum[-1]
+        s = jnp.sum(csum[None, :] <= u[:, None], axis=1).astype(jnp.int32)
+        s = jnp.minimum(s, totals.shape[0] - 1)               # (size,) shards
+        loc = ts_loc.sample(coarse, w_loc, k2, size)          # local descent
+        mine = s == sid
+        return jax.lax.psum(
+            jnp.where(mine, loc + sid * n_loc, 0), axis
+        ).astype(jnp.int32), mine, loc
+
+    return sample
+
+
+def _broadcast_from_owner(x_glob, n_loc, axis, *columns):
+    """Publish per-point data of a *global* index from its owner shard.
+
+    Each entry of `columns` is a fn(local_index) -> array; the owner's value
+    is psum-broadcast (other shards contribute zeros).  Returns the local
+    index alongside the broadcast values.
+    """
+    sid = jax.lax.axis_index(axis)
+    owner = x_glob // n_loc
+    x_loc = x_glob % n_loc
+    out = []
+    for fn in columns:
+        val = fn(x_loc)
+        out.append(jax.lax.psum(jnp.where(sid == owner, val, 0), axis))
+    return out
+
+
+def _make_local_open(codes_lo_loc, codes_hi_loc, *, scale, num_levels, tile,
+                     interpret):
+    """Sharded MULTITREEOPEN: each device sweeps only its own points; the
+    last tree's kernel emits the local tile sums for the sub-heap refresh."""
+    t = codes_lo_loc.shape[0]
+
+    def open_center(weights, col_lo, col_hi):
+        for ti in range(t - 1):
+            weights = tree_sep_update(
+                codes_lo_loc[ti], codes_hi_loc[ti],
+                col_lo[ti], col_hi[ti], weights,
+                scale=scale, num_levels=num_levels, block_n=tile,
+                interpret=interpret,
+            )
+        return tree_sep_update_tiles(
+            codes_lo_loc[t - 1], codes_hi_loc[t - 1],
+            col_lo[t - 1], col_hi[t - 1], weights,
+            scale=scale, num_levels=num_levels, block_n=tile,
+            interpret=interpret,
+        )
+
+    return open_center
+
+
+def _init_weights(n_loc, n_real, m_init, axis):
+    """Local slice of the initial weight vector; the global padding tail
+    (and only it) starts — and therefore stays — at weight 0."""
+    sid = jax.lax.axis_index(axis)
+    gids = sid * n_loc + jnp.arange(n_loc)
+    return jnp.where(gids < n_real, m_init, 0.0).astype(jnp.float32)
+
+
+def sharded_fast_kmeanspp(
+    codes_lo: jax.Array,     # (T, H-1, n_pad) int32, n_pad % (D * tile) == 0
+    codes_hi: jax.Array,
+    k: int,
+    seed_bits: jax.Array,    # raw PRNG key data (replicated)
+    *,
+    mesh,
+    scale: float,
+    num_levels: int,
+    m_init: float,
+    n_real: int,
+    tile: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Algorithm 3 sharded over the mesh's "data" axis.  (k,) int32 indices."""
+    t, h, n_pad = codes_lo.shape
+    axis = points_axis(mesh, n_pad)
+    d_ax = _mesh_size(mesh, axis)
+    n_loc = n_pad // d_ax
+    ts_loc = TiledSampleTree(n_loc, tile=tile)
+
+    def program(clo, chi, bits):
+        key = jax.random.wrap_key_data(bits)
+        open_center = _make_local_open(clo, chi, scale=scale,
+                                       num_levels=num_levels, tile=tile,
+                                       interpret=interpret)
+        sample = _shard_sampler(ts_loc, axis)
+
+        def body(i, state):
+            w, coarse, chosen, key = state
+            key, k1 = jax.random.split(key)
+            x_samp, _, _ = sample(coarse, w, k1, 1)
+            x = jnp.where(
+                i == 0, jax.random.randint(k1, (), 0, n_real), x_samp[0]
+            ).astype(jnp.int32)
+            col_lo, col_hi = _broadcast_from_owner(
+                x, n_loc, axis,
+                lambda xl: clo[:, :, xl], lambda xl: chi[:, :, xl],
+            )
+            w, tsums = open_center(w, col_lo, col_hi)
+            coarse = ts_loc.refresh(coarse, tsums)
+            chosen = chosen.at[i].set(x)
+            return w, coarse, chosen, key
+
+        w0 = _init_weights(n_loc, n_real, m_init, axis)
+        coarse0 = ts_loc.init(w0)
+        chosen0 = jnp.zeros((k,), jnp.int32)
+        _, _, chosen, _ = jax.lax.fori_loop(
+            0, k, body, (w0, coarse0, chosen0, key)
+        )
+        return chosen
+
+    fn = shard_map(
+        program, mesh=mesh,
+        in_specs=(P(None, None, axis), P(None, None, axis), P()),
+        out_specs=P(),
+        check_rep=False,
+    )
+    return jax.jit(fn)(codes_lo, codes_hi, seed_bits)
+
+
+def sharded_rejection_sampling(
+    codes_lo: jax.Array,     # (T, H-1, n_pad) int32
+    codes_hi: jax.Array,
+    points: jax.Array,       # (n_pad, d) f32
+    keys_lo: jax.Array,      # (L, n_pad) int32
+    keys_hi: jax.Array,
+    k: int,
+    seed_bits: jax.Array,
+    *,
+    mesh,
+    scale: float,
+    num_levels: int,
+    m_init: float,
+    n_real: int,
+    c: float = 1.2,
+    batch: int = 128,
+    max_rounds: int = 32,
+    tile: int = 512,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Algorithm 4 sharded over the mesh's "data" axis.
+
+    Candidate batches are drawn shard-then-descend; each candidate's
+    coordinates, bucket keys and current weight cross chips with one masked
+    psum, after which the (small, replicated) opened-center acceptance sweep
+    runs everywhere so the rejection `while_loop` stays in lockstep.
+    Returns ``(chosen (k,), trials (k,))`` as in the single-device program.
+    """
+    t, h, n_pad = codes_lo.shape
+    l = keys_lo.shape[0]
+    d = points.shape[1]
+    axis = points_axis(mesh, n_pad)
+    d_ax = _mesh_size(mesh, axis)
+    n_loc = n_pad // d_ax
+    ts_loc = TiledSampleTree(n_loc, tile=tile)
+    c2 = float(c) ** 2
+
+    def program(clo, chi, pts_loc, klo, khi, bits):
+        key = jax.random.wrap_key_data(bits)
+        open_center = _make_local_open(clo, chi, scale=scale,
+                                       num_levels=num_levels, tile=tile,
+                                       interpret=interpret)
+        sample = _shard_sampler(ts_loc, axis)
+        sid = jax.lax.axis_index(axis)
+
+        def body(i, state):
+            w, coarse, chosen, ctr_pts, ck_lo, ck_hi, trials, key = state
+            key, k_unif = jax.random.split(key)
+            x_unif = jax.random.randint(k_unif, (), 0, n_real).astype(
+                jnp.int32
+            )
+            total = jax.lax.psum(coarse[1], axis)
+
+            def round_cond(carry):
+                key, x_sel, done, t_i, rounds = carry
+                return (~done) & (rounds < max_rounds) & (i > 0) & (total > 0)
+
+            def round_body(carry):
+                key, x_sel, done, t_i, rounds = carry
+                key, k_cand, k_u = jax.random.split(key, 3)
+                cand, mine, loc = sample(coarse, w, k_cand, batch)
+                us = jax.random.uniform(k_u, (batch,), dtype=jnp.float32)
+                # Two masked psums ship the winning candidates' data to
+                # every shard: coordinates + current weight share one f32
+                # (B, d+1) payload, both bucket-key planes one int32
+                # (2L, B) payload — the round's collective latency floor.
+                fpay = jnp.concatenate(
+                    [pts_loc[loc], w[loc][:, None]], axis=1
+                )
+                fpay = jax.lax.psum(
+                    jnp.where(mine[:, None], fpay, 0.0), axis
+                )
+                q, mtd2 = fpay[:, :d], fpay[:, d]
+                kpay = jnp.concatenate([klo[:, loc], khi[:, loc]], axis=0)
+                kpay = jax.lax.psum(
+                    jnp.where(mine[None, :], kpay, 0), axis
+                )
+                qk_lo, qk_hi = kpay[:l], kpay[l:]
+                _, p_acc = lsh_bucket_accept(
+                    qk_lo, qk_hi, q, ck_lo, ck_hi, ctr_pts, mtd2, i,
+                    c2=c2, interpret=interpret,
+                )
+                acc = us < p_acc
+                any_acc = jnp.any(acc)
+                hit = jnp.argmax(acc)
+                x_sel = jnp.where(any_acc, cand[hit], cand[0]).astype(
+                    jnp.int32
+                )
+                t_i = t_i + jnp.where(any_acc, hit + 1, batch).astype(
+                    jnp.int32
+                )
+                return key, x_sel, any_acc, t_i, rounds + 1
+
+            key, x_sel, _, t_i, _ = jax.lax.while_loop(
+                round_cond, round_body,
+                (key, x_unif, jnp.bool_(False), jnp.int32(0), jnp.int32(0)),
+            )
+            x = x_sel
+            t_i = jnp.maximum(t_i, 1)
+
+            col_lo, col_hi, x_pt, xk_lo, xk_hi = _broadcast_from_owner(
+                x, n_loc, axis,
+                lambda xl: clo[:, :, xl], lambda xl: chi[:, :, xl],
+                lambda xl: pts_loc[xl], lambda xl: klo[:, xl],
+                lambda xl: khi[:, xl],
+            )
+            w, tsums = open_center(w, col_lo, col_hi)
+            coarse = ts_loc.refresh(coarse, tsums)
+            chosen = chosen.at[i].set(x)
+            ctr_pts = ctr_pts.at[i].set(x_pt)
+            ck_lo = ck_lo.at[:, i].set(xk_lo)
+            ck_hi = ck_hi.at[:, i].set(xk_hi)
+            trials = trials.at[i].set(t_i)
+            return w, coarse, chosen, ctr_pts, ck_lo, ck_hi, trials, key
+
+        w0 = _init_weights(n_loc, n_real, m_init, axis)
+        coarse0 = ts_loc.init(w0)
+        state0 = (
+            w0, coarse0,
+            jnp.zeros((k,), jnp.int32),
+            jnp.full((k, d), _FAR, jnp.float32),
+            jnp.zeros((l, k), jnp.int32),
+            jnp.zeros((l, k), jnp.int32),
+            jnp.zeros((k,), jnp.int32),
+            key,
+        )
+        out = jax.lax.fori_loop(0, k, body, state0)
+        return out[2], out[6]
+
+    fn = shard_map(
+        program, mesh=mesh,
+        in_specs=(
+            P(None, None, axis), P(None, None, axis),
+            P(axis, None), P(None, axis), P(None, axis), P(),
+        ),
+        out_specs=(P(), P()),
+        check_rep=False,
+    )
+    return jax.jit(fn)(codes_lo, codes_hi, points, keys_lo, keys_hi,
+                       seed_bits)
+
+
+# ---------------------------------------------------------------------------
+# Host-facing wrappers, registered under "<name>/sharded".
+# ---------------------------------------------------------------------------
+
+def _padded_for_mesh(n: int, mesh, tile: int) -> int:
+    d_ax = _mesh_size(mesh, points_axis(mesh))
+    unit = d_ax * tile
+    return -(-n // unit) * unit
+
+
+def sharded_fast_kmeanspp_seeder(points, k, rng, *, resolution=None,
+                                 tile=512, interpret=None, mesh=None, **_):
+    """Algorithm 3 across all local devices; `SeedingResult` facade."""
+    from repro.core.seeding import SeedingResult
+
+    t0 = time.perf_counter()
+    pts = np.asarray(points, dtype=np.float64)
+    n = len(pts)
+    mesh = mesh if mesh is not None else make_seeding_mesh()
+    lo, hi, meta = prepare_embedding(pts, seed=int(rng.integers(2 ** 31)),
+                                     resolution=resolution)
+    n_pad = _padded_for_mesh(n, mesh, tile)
+    lo = _pad_axis(lo, 2, n_pad)
+    hi = _pad_axis(hi, 2, n_pad)
+    bits = jax.random.key_data(jax.random.key(int(rng.integers(2 ** 31))))
+    chosen = sharded_fast_kmeanspp(
+        lo, hi, k, bits, mesh=mesh,
+        scale=meta["scale"], num_levels=meta["num_levels"],
+        m_init=meta["m_init"], n_real=n, tile=tile, interpret=interpret,
+    )
+    idx = np.asarray(jax.block_until_ready(chosen), dtype=np.int64)
+    return SeedingResult(
+        centers=pts[idx].copy(),
+        indices=idx,
+        seconds=time.perf_counter() - t0,
+        num_candidates=k,
+        extras={"backend": "sharded", "devices": mesh.devices.size},
+    )
+
+
+def sharded_rejection_seeder(points, k, rng, *, c=1.2, lsh_r=None,
+                             num_tables=15, hashes_per_table=1,
+                             resolution=None, batch=128, max_rounds=32,
+                             tile=512, interpret=None, mesh=None, **_):
+    """Algorithm 4 across all local devices; `SeedingResult` facade."""
+    from repro.core.seeding import SeedingResult
+
+    t0 = time.perf_counter()
+    pts = np.asarray(points, dtype=np.float64)
+    n = len(pts)
+    mesh = mesh if mesh is not None else make_seeding_mesh()
+    data = prepare_rejection(
+        pts, seed=int(rng.integers(2 ** 31)), resolution=resolution,
+        lsh_r=lsh_r, num_tables=num_tables,
+        hashes_per_table=hashes_per_table,
+    )
+    n_pad = _padded_for_mesh(n, mesh, tile)
+    lo = _pad_axis(data.codes_lo, 2, n_pad)
+    hi = _pad_axis(data.codes_hi, 2, n_pad)
+    pp = _pad_axis(data.points, 0, n_pad)
+    klo = _pad_axis(data.keys_lo, 1, n_pad)
+    khi = _pad_axis(data.keys_hi, 1, n_pad)
+    bits = jax.random.key_data(jax.random.key(int(rng.integers(2 ** 31))))
+    chosen, trials = sharded_rejection_sampling(
+        lo, hi, pp, klo, khi, k, bits, mesh=mesh,
+        scale=data.scale, num_levels=data.num_levels, m_init=data.m_init,
+        n_real=n, c=c, batch=batch, max_rounds=max_rounds, tile=tile,
+        interpret=interpret,
+    )
+    idx = np.asarray(jax.block_until_ready(chosen), dtype=np.int64)
+    trials = np.asarray(trials, dtype=np.int64)
+    total = int(trials.sum())
+    return SeedingResult(
+        centers=pts[idx].copy(),
+        indices=idx,
+        seconds=time.perf_counter() - t0,
+        num_candidates=total,
+        extras={
+            "backend": "sharded",
+            "devices": mesh.devices.size,
+            "trials_per_center": total / k,
+            "per_center_trials": trials,
+        },
+    )
+
+
+SHARDED_SEEDERS = {
+    "fastkmeans++": sharded_fast_kmeanspp_seeder,
+    "rejection": sharded_rejection_seeder,
+}
+
+
+def _register():
+    from repro.core import seeding
+
+    for name, fn in SHARDED_SEEDERS.items():
+        seeding.SEEDERS.setdefault(f"{name}/sharded", fn)
+
+
+_register()

@@ -29,6 +29,7 @@ __all__ = [
     "resolve_spec",
     "shard",
     "sharding_for",
+    "points_axis",
 ]
 
 # Logical axis -> mesh axis (or tuple of mesh axes).  ``None`` = replicate.
@@ -44,6 +45,7 @@ DEFAULT_RULES: dict[str, object] = {
     "expert": "model",              # EP over experts
     "dp_shard": ("pod", "data"),    # two-stage MoE dispatch shard axis
     "kv_clusters": "model",         # cluster-KV codebook sharding
+    "points": ("pod", "data"),      # clustering point axis (sharded seeders)
     "expert_mlp": None,             # per-expert hidden stays local under EP
     "kv_lora": None,
     "layers": None,                 # scan axis, never sharded
@@ -143,6 +145,33 @@ def shard(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
         return x
     spec = resolve_spec(axes, x.shape, mesh)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def points_axis(mesh: Mesh, n: Optional[int] = None):
+    """Mesh axis (or axis tuple) carrying the clustering "points" dimension.
+
+    Resolves through the rule table like any model tensor, with the same
+    tuple-prefix divisibility fallback as `resolve_spec` — but *keeps*
+    size-1 axes: the sharded seeders' `shard_map` collectives need a named
+    axis even on a 1-device mesh.  ``n=None`` skips the divisibility check
+    (used to size the padding that then guarantees it).  Returns ``None``
+    only when no rule axis exists in the mesh at all.
+    """
+    assignment = current_rules().get("points")
+    if assignment is None:
+        return None
+    cand = (
+        tuple(assignment)
+        if isinstance(assignment, (tuple, list))
+        else (assignment,)
+    )
+    cand = tuple(a for a in cand if a in mesh.axis_names)
+    if n is not None:
+        while cand and n % _mesh_size(mesh, cand) != 0:
+            cand = cand[:-1]
+    if not cand:
+        return None
+    return cand if len(cand) > 1 else cand[0]
 
 
 def sharding_for(

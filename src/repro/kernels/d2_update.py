@@ -6,6 +6,12 @@ rejection seeder's bookkeeping.  Fusing the distance computation with the
 min-update halves HBM traffic vs materialising the distance vector
 (read x + w, write w; no intermediate).
 
+The `_tiles` variant adds a free epilogue: each grid step also emits the
+tile's *new weight sum* (one (1,) lane per tile), which is exactly the leaf
+update the coarse `TiledSampleTree` heap needs — so the sample structure can
+be fixed incrementally (O(T log T) scatter) instead of rebuilt O(n) after
+every opened center.
+
 Grid: 1-D over point tiles; the center row is broadcast to every tile
 (a (1, d) block with a constant index map).
 """
@@ -18,7 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["d2_update_pallas"]
+__all__ = ["d2_update_pallas", "d2_update_tiles_pallas"]
 
 
 def _kernel(x_ref, c_ref, w_ref, out_ref):
@@ -27,6 +33,11 @@ def _kernel(x_ref, c_ref, w_ref, out_ref):
     diff = x - c
     d2 = jnp.sum(diff * diff, axis=1)        # (BN,)
     out_ref[...] = jnp.minimum(w_ref[...].astype(jnp.float32), d2)
+
+
+def _kernel_tiles(x_ref, c_ref, w_ref, out_ref, tsum_ref):
+    _kernel(x_ref, c_ref, w_ref, out_ref)
+    tsum_ref[...] = jnp.sum(out_ref[...], keepdims=True)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
@@ -51,5 +62,40 @@ def d2_update_pallas(
         ],
         out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(x, center.reshape(1, -1), w)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def d2_update_tiles_pallas(
+    x: jax.Array,
+    center: jax.Array,
+    w: jax.Array,
+    *,
+    block_n: int = 512,
+    interpret: bool = False,
+):
+    """As `d2_update_pallas`, plus the per-tile new-sum epilogue.
+
+    Returns ``(w' (n,), tile_sums (n // block_n,))``; pre-padded inputs.
+    """
+    n, d = x.shape
+    assert n % block_n == 0
+    return pl.pallas_call(
+        _kernel_tiles,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n // block_n,), jnp.float32),
+        ],
         interpret=interpret,
     )(x, center.reshape(1, -1), w)

@@ -20,6 +20,14 @@ tile stays resident in VMEM while center tiles sweep (the `pairwise_argmin`
 accumulation pattern).  A miss leaves the lane at ``MISS`` (3e38, finite so
 downstream f32 arithmetic stays NaN-free); callers compare against
 ``MISS / 2`` to detect it.
+
+The `_accept` variant fuses the rejection sampler's acceptance epilogue: at
+the final center tile (the accumulated min is then complete) it also emits
+``p = d2_min / (c^2 * mtd2)`` per candidate — the Algorithm 4 acceptance
+probability — so the seeder's inner loop reads one fused kernel result
+instead of post-processing the distance vector.  A complete LSH miss makes
+``p`` astronomically large (always accepts), matching the CPU structure's
++inf convention; ``mtd2 == 0`` (already-covered point) yields ``p = 0``.
 """
 
 from __future__ import annotations
@@ -30,7 +38,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["lsh_bucket_min_pallas", "LSH_MISS"]
+__all__ = ["lsh_bucket_min_pallas", "lsh_bucket_accept_pallas", "LSH_MISS"]
 
 LSH_MISS = 3.0e38  # "no colliding center" sentinel (finite in f32)
 
@@ -69,6 +77,20 @@ def _kernel(qk_lo_ref, qk_hi_ref, q_ref, ck_lo_ref, ck_hi_ref, c_ref,
     # slots — the max() turns any accidental collision with them into a miss.
     masked = jnp.maximum(jnp.where(collide, d2, LSH_MISS), pen_ref[...])
     out_ref[...] = jnp.minimum(out_ref[...], jnp.min(masked, axis=1))
+
+
+def _kernel_accept(qk_lo_ref, qk_hi_ref, q_ref, ck_lo_ref, ck_hi_ref, c_ref,
+                   pen_ref, mtd2_ref, out_ref, p_ref, *, num_tables: int,
+                   c2: float):
+    _kernel(qk_lo_ref, qk_hi_ref, q_ref, ck_lo_ref, ck_hi_ref, c_ref,
+            pen_ref, out_ref, num_tables=num_tables)
+
+    @pl.when(pl.program_id(1) == pl.num_programs(1) - 1)
+    def _epilogue():
+        mtd2 = mtd2_ref[...].astype(jnp.float32)
+        p_ref[...] = jnp.where(
+            mtd2 > 0.0, out_ref[...] / jnp.maximum(c2 * mtd2, 1e-30), 0.0
+        )
 
 
 @functools.partial(
@@ -110,3 +132,56 @@ def lsh_bucket_min_pallas(
         out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
         interpret=interpret,
     )(q_keys_lo, q_keys_hi, q, c_keys_lo, c_keys_hi, c, penalty)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("c2", "block_b", "block_k", "interpret")
+)
+def lsh_bucket_accept_pallas(
+    q_keys_lo: jax.Array,    # (L, B) int32
+    q_keys_hi: jax.Array,
+    q: jax.Array,            # (B, D) f32
+    c_keys_lo: jax.Array,    # (L, K) int32
+    c_keys_hi: jax.Array,
+    c: jax.Array,            # (K, D) f32
+    penalty: jax.Array,      # (1, K) f32
+    mtd2: jax.Array,         # (B,) f32 — current multi-tree D^2 weights
+    *,
+    c2: float,
+    block_b: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """`lsh_bucket_min_pallas` + the fused acceptance-probability epilogue.
+
+    Returns ``(d2_min (B,), p_accept (B,))``; pre-padded inputs as in
+    `lsh_bucket_min_pallas`, ``mtd2`` padded to the candidate block multiple.
+    """
+    l, b = q_keys_lo.shape
+    k = c_keys_lo.shape[1]
+    assert b % block_b == 0 and k % block_k == 0, (b, k, block_b, block_k)
+    d = q.shape[1]
+    grid = (b // block_b, k // block_k)
+    return pl.pallas_call(
+        functools.partial(_kernel_accept, num_tables=l, c2=c2),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((l, block_b), lambda i, j: (0, i)),
+            pl.BlockSpec((l, block_b), lambda i, j: (0, i)),
+            pl.BlockSpec((block_b, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((l, block_k), lambda i, j: (0, j)),
+            pl.BlockSpec((l, block_k), lambda i, j: (0, j)),
+            pl.BlockSpec((block_k, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, block_k), lambda i, j: (0, j)),
+            pl.BlockSpec((block_b,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b,), lambda i, j: (i,)),
+            pl.BlockSpec((block_b,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_keys_lo, q_keys_hi, q, c_keys_lo, c_keys_hi, c, penalty, mtd2)

@@ -15,16 +15,26 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
-from repro.kernels.d2_update import d2_update_pallas
-from repro.kernels.lsh_bucket_min import LSH_MISS, lsh_bucket_min_pallas
+from repro.kernels.d2_update import d2_update_pallas, d2_update_tiles_pallas
+from repro.kernels.lsh_bucket_min import (
+    LSH_MISS,
+    lsh_bucket_accept_pallas,
+    lsh_bucket_min_pallas,
+)
 from repro.kernels.pairwise_argmin import pairwise_argmin_pallas
-from repro.kernels.tree_sep_update import tree_sep_update_pallas
+from repro.kernels.tree_sep_update import (
+    tree_sep_update_pallas,
+    tree_sep_update_tiles_pallas,
+)
 
 __all__ = [
     "pairwise_argmin",
     "d2_update",
+    "d2_update_tiles",
     "tree_sep_update",
+    "tree_sep_update_tiles",
     "lsh_bucket_min",
+    "lsh_bucket_accept",
     "LSH_MISS",
     "default_interpret",
 ]
@@ -93,6 +103,27 @@ def d2_update(
     return out[:n]
 
 
+def d2_update_tiles(
+    x: jax.Array,
+    center: jax.Array,
+    w: jax.Array,
+    *,
+    block_n: int = 512,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """(w', per-tile sums); any n, pads internally (padding lanes carry w=0
+    so they contribute nothing to the tile sums).  Returns the *padded*
+    weight vector alongside the (ceil(n/block_n),) sums — callers running
+    the incremental `TiledSampleTree` path keep the padded layout as loop
+    state, so no per-call unpad slicing."""
+    if interpret is None:
+        interpret = default_interpret()
+    xp = _pad_to(x, 0, block_n, 0)
+    wp = _pad_to(w, 0, block_n, 0.0)
+    return d2_update_tiles_pallas(xp, center, wp, block_n=block_n,
+                                  interpret=interpret)
+
+
 def tree_sep_update(
     codes_lo: jax.Array,
     codes_hi: jax.Array,
@@ -124,6 +155,38 @@ def tree_sep_update(
         interpret=interpret,
     )
     return out[:n]
+
+
+def tree_sep_update_tiles(
+    codes_lo: jax.Array,
+    codes_hi: jax.Array,
+    center_lo: jax.Array,
+    center_hi: jax.Array,
+    w: jax.Array,
+    *,
+    scale: float,
+    num_levels: int,
+    block_n: int = 512,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """One tree's open-center sweep + per-tile sums; any n, pads internally.
+
+    Returns the *padded* (w', tile_sums) pair (see `d2_update_tiles`): the
+    device seeders carry the padded weight vector across centers and feed
+    the sums straight into `TiledSampleTree.refresh`.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    lo = _pad_to(_pad_to(codes_lo, 1, block_n, 0), 0, 8, -1)
+    hi = _pad_to(_pad_to(codes_hi, 1, block_n, 0), 0, 8, -1)
+    clo = _pad_to(center_lo, 0, 8, -2)
+    chi = _pad_to(center_hi, 0, 8, -2)
+    wp = _pad_to(w, 0, block_n, 0.0)
+    return tree_sep_update_tiles_pallas(
+        lo, hi, clo, chi, wp,
+        scale=scale, num_levels=num_levels, block_n=block_n,
+        interpret=interpret,
+    )
 
 
 def lsh_bucket_min(
@@ -166,6 +229,47 @@ def lsh_bucket_min(
         block_b=block_b, block_k=block_k, interpret=interpret,
     )
     return out[:b]
+
+
+def lsh_bucket_accept(
+    q_keys_lo: jax.Array,
+    q_keys_hi: jax.Array,
+    q: jax.Array,
+    c_keys_lo: jax.Array,
+    c_keys_hi: jax.Array,
+    c: jax.Array,
+    mtd2: jax.Array,
+    count: jax.Array | int | None = None,
+    *,
+    c2: float,
+    block_b: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """`lsh_bucket_min` + the fused Algorithm-4 acceptance epilogue.
+
+    Returns ``(d2_min (B,), p_accept (B,))`` with
+    ``p = d2_min / (c^2 * mtd2)`` (0 where ``mtd2 == 0``); padding as in
+    `lsh_bucket_min`, ``mtd2`` padded with zeros (padded lanes get p = 0).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    b = q.shape[0]
+    k = c.shape[0]
+    qlo = _pad_to(_pad_to(q_keys_lo, 1, block_b, 0), 0, 8, -1)
+    qhi = _pad_to(_pad_to(q_keys_hi, 1, block_b, 0), 0, 8, -1)
+    qp = _pad_to(q, 0, block_b, 0.0)
+    clo = _pad_to(_pad_to(c_keys_lo, 1, block_k, -2), 0, 8, -2)
+    chi = _pad_to(_pad_to(c_keys_hi, 1, block_k, -2), 0, 8, -2)
+    cp = _pad_to(c, 0, block_k, _PAD_FAR)
+    mp = _pad_to(mtd2, 0, block_b, 0.0)
+    live = jnp.arange(cp.shape[0]) < (k if count is None else count)
+    penalty = jnp.where(live, 0.0, LSH_MISS).astype(jnp.float32)[None, :]
+    d2_min, p = lsh_bucket_accept_pallas(
+        qlo, qhi, qp, clo, chi, cp, penalty, mp,
+        c2=c2, block_b=block_b, block_k=block_k, interpret=interpret,
+    )
+    return d2_min[:b], p[:b]
 
 
 def split_codes_u64(codes: np.ndarray) -> tuple[np.ndarray, np.ndarray]:

@@ -12,9 +12,17 @@ import jax.numpy as jnp
 __all__ = [
     "pairwise_argmin_ref",
     "d2_update_ref",
+    "d2_update_tiles_ref",
     "tree_sep_update_ref",
+    "tree_sep_update_tiles_ref",
     "lsh_bucket_min_ref",
+    "lsh_bucket_accept_ref",
 ]
+
+
+def _tile_sums_ref(w: jax.Array, block_n: int) -> jax.Array:
+    """Per-tile weight sums — the `_tiles` kernels' epilogue oracle."""
+    return w.reshape(-1, block_n).sum(axis=1)
 
 
 def pairwise_argmin_ref(x: jax.Array, c: jax.Array):
@@ -42,6 +50,13 @@ def d2_update_ref(x: jax.Array, center: jax.Array, w: jax.Array):
     return jnp.minimum(w.astype(jnp.float32), d2)
 
 
+def d2_update_tiles_ref(x: jax.Array, center: jax.Array, w: jax.Array, *,
+                        block_n: int = 512):
+    """(w', per-tile sums of w') — `d2_update_tiles_pallas` oracle."""
+    out = d2_update_ref(x, center, w)
+    return out, _tile_sums_ref(out, block_n)
+
+
 def tree_sep_update_ref(
     codes_lo: jax.Array,     # (H, n) int32 — low 32 bits of cell codes
     codes_hi: jax.Array,     # (H, n) int32 — high 32 bits
@@ -63,6 +78,23 @@ def tree_sep_update_ref(
     dist = scale * (jnp.exp2(1.0 - sep.astype(jnp.float32)) - 2.0 ** (1.0 - num_levels))
     dist = jnp.maximum(dist, 0.0)
     return jnp.minimum(w.astype(jnp.float32), dist * dist)
+
+
+def tree_sep_update_tiles_ref(
+    codes_lo: jax.Array,
+    codes_hi: jax.Array,
+    center_lo: jax.Array,
+    center_hi: jax.Array,
+    w: jax.Array,
+    *,
+    scale: float,
+    num_levels: int,
+    block_n: int = 512,
+):
+    """(w', per-tile sums of w') — `tree_sep_update_tiles_pallas` oracle."""
+    out = tree_sep_update_ref(codes_lo, codes_hi, center_lo, center_hi, w,
+                              scale=scale, num_levels=num_levels)
+    return out, _tile_sums_ref(out, block_n)
 
 
 def lsh_bucket_min_ref(
@@ -94,6 +126,30 @@ def lsh_bucket_min_ref(
     c_sq = (cf * cf).sum(axis=1)
     d2 = jnp.maximum(q_sq[:, None] - 2.0 * (qf @ cf.T) + c_sq[None, :], 0.0)
     return jnp.where(collide, d2, LSH_MISS).min(axis=1)
+
+
+def lsh_bucket_accept_ref(
+    q_keys_lo: jax.Array,
+    q_keys_hi: jax.Array,
+    q: jax.Array,
+    c_keys_lo: jax.Array,
+    c_keys_hi: jax.Array,
+    c: jax.Array,
+    mtd2: jax.Array,         # (B,) — current multi-tree D^2 weights
+    count=None,
+    *,
+    c2: float,
+):
+    """(d2_min, acceptance probability) — `lsh_bucket_accept_pallas` oracle.
+
+    ``p = d2_min / (c^2 * mtd2)`` with ``p = 0`` where ``mtd2 == 0``; a miss
+    (``d2_min == LSH_MISS``) gives p >> 1, i.e. always accepts.
+    """
+    d2_min = lsh_bucket_min_ref(q_keys_lo, q_keys_hi, q,
+                                c_keys_lo, c_keys_hi, c, count)
+    mtd2 = mtd2.astype(jnp.float32)
+    p = jnp.where(mtd2 > 0.0, d2_min / jnp.maximum(c2 * mtd2, 1e-30), 0.0)
+    return d2_min, p
 
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,

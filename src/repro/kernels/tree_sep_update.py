@@ -16,6 +16,10 @@ put points in the lane dimension; H (~20-32, padded to a multiple of 8) sits
 in sublanes.
 
 Grid: 1-D over point tiles; the opened center's code column is broadcast.
+The `_tiles` variant adds the tile-sum epilogue (each grid step also emits
+the tile's new weight sum) feeding the coarse `TiledSampleTree` heap's
+incremental scatter update — the device seeders' replacement for the old
+per-center O(n) heap rebuild.
 """
 
 from __future__ import annotations
@@ -26,7 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["tree_sep_update_pallas"]
+__all__ = ["tree_sep_update_pallas", "tree_sep_update_tiles_pallas"]
 
 
 def _kernel(lo_ref, hi_ref, clo_ref, chi_ref, w_ref, out_ref, *,
@@ -42,6 +46,13 @@ def _kernel(lo_ref, hi_ref, clo_ref, chi_ref, w_ref, out_ref, *,
     )
     dist = jnp.maximum(dist, 0.0)
     out_ref[...] = jnp.minimum(w_ref[...].astype(jnp.float32), dist * dist)
+
+
+def _kernel_tiles(lo_ref, hi_ref, clo_ref, chi_ref, w_ref, out_ref, tsum_ref,
+                  *, scale: float, num_levels: int):
+    _kernel(lo_ref, hi_ref, clo_ref, chi_ref, w_ref, out_ref,
+            scale=scale, num_levels=num_levels)
+    tsum_ref[...] = jnp.sum(out_ref[...], keepdims=True)
 
 
 @functools.partial(
@@ -74,5 +85,48 @@ def tree_sep_update_pallas(
         ],
         out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(codes_lo, codes_hi, center_lo.reshape(-1, 1), center_hi.reshape(-1, 1), w)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "scale", "num_levels", "interpret")
+)
+def tree_sep_update_tiles_pallas(
+    codes_lo: jax.Array,    # (H, n) int32
+    codes_hi: jax.Array,    # (H, n) int32
+    center_lo: jax.Array,   # (H,) int32
+    center_hi: jax.Array,   # (H,) int32
+    w: jax.Array,           # (n,) f32
+    *,
+    scale: float,
+    num_levels: int,
+    block_n: int = 512,
+    interpret: bool = False,
+):
+    """As `tree_sep_update_pallas`, plus the per-tile new-sum epilogue.
+
+    Returns ``(w' (n,), tile_sums (n // block_n,))``; pre-padded inputs.
+    """
+    h, n = codes_lo.shape
+    assert n % block_n == 0
+    return pl.pallas_call(
+        functools.partial(_kernel_tiles, scale=scale, num_levels=num_levels),
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((h, block_n), lambda i: (0, i)),
+            pl.BlockSpec((h, block_n), lambda i: (0, i)),
+            pl.BlockSpec((h, 1), lambda i: (0, 0)),
+            pl.BlockSpec((h, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n // block_n,), jnp.float32),
+        ],
         interpret=interpret,
     )(codes_lo, codes_hi, center_lo.reshape(-1, 1), center_hi.reshape(-1, 1), w)

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_seeding_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -22,3 +22,14 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """A 1-device mesh with the production axis names (CPU tests)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_seeding_mesh(num_devices: int | None = None):
+    """1-D ("data",) mesh over local devices for the sharded seeders.
+
+    The sharded seeding path (`repro.core.sharded_seeding`) owns a
+    contiguous point range per device; a 2×2 simulated host mesh comes from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+    """
+    n = num_devices if num_devices is not None else len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

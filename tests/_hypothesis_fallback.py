@@ -3,7 +3,7 @@ package is unavailable — this repo must run without network installs).
 
 Implements exactly the surface the test-suite uses: ``given``, ``settings``,
 ``assume`` and the ``strategies`` namespace with ``integers`` / ``floats`` /
-``lists``.  Example generation is a seeded RNG sweep (no shrinking): the
+``lists`` / ``booleans``.  Example generation is a seeded RNG sweep (no shrinking): the
 first example per test is the all-minimum boundary case, the rest are
 uniform draws.  ``conftest.py`` installs this module into ``sys.modules``
 as ``hypothesis`` only when the real library cannot be imported, so
@@ -66,10 +66,15 @@ def _lists(elements: _Strategy, *, min_size: int = 0, max_size: int = 10) -> _St
     return _Strategy(draw_min, draw_rand)
 
 
+def _booleans() -> _Strategy:
+    return _Strategy(lambda: False, lambda rng: bool(rng.integers(0, 2)))
+
+
 strategies = types.ModuleType("hypothesis.strategies")
 strategies.integers = _integers
 strategies.floats = _floats
 strategies.lists = _lists
+strategies.booleans = _booleans
 
 
 class HealthCheck:

@@ -45,6 +45,26 @@ def test_weight_sweep_matches_faithful_structure():
                                atol=1e-3)
 
 
+def test_no_full_heap_rebuild_in_seeding_loops():
+    """Acceptance guard: opening a center must cost one incremental
+    `TiledSampleTree.refresh` (coarse O(T log T) scatter) — the seeders may
+    not construct a full point-leaf heap at all, and the only `.init(` calls
+    are the O(T) coarse-preamble ones outside the loop bodies.  (The
+    distributional equivalence of the incremental path vs the rebuild path
+    is asserted in test_sample_tree.py.)"""
+    import inspect
+
+    from repro.core import device_seeding, sharded_seeding
+
+    for mod in (device_seeding, sharded_seeding):
+        src = inspect.getsource(mod)
+        assert "SampleTreeJax(" not in src, mod.__name__
+        for line in src.splitlines():
+            if ".init(" in line:
+                assert "ts.init" in line or "ts_loc.init" in line, line
+        assert ".refresh(" in src, mod.__name__
+
+
 def test_device_seeder_quality():
     """End-to-end jit seeder: D^2-quality centers (vs uniform baseline)."""
     pts = _data(seed=4)

@@ -9,9 +9,12 @@ from hypothesis import given, settings, strategies as st
 
 from repro.kernels import (
     d2_update,
+    d2_update_tiles,
+    lsh_bucket_accept,
     pairwise_argmin,
     split_codes_u64,
     tree_sep_update,
+    tree_sep_update_tiles,
 )
 from repro.kernels import ref
 
@@ -71,6 +74,65 @@ def test_tree_sep_update_matches_ref(h, n):
                                    w, **kw)
     np.testing.assert_allclose(out, rout, rtol=1e-5, atol=1e-3)
     assert float(out[0]) < 1e-12  # the center itself (f32 exp2 dust allowed)
+
+
+@pytest.mark.parametrize("n,d", [(5, 3), (512, 16), (1300, 7)])
+def test_d2_update_tiles_matches_ref(n, d):
+    """Tiled variant: same w' as the plain kernel + exact per-tile sums;
+    padding lanes (weight 0) contribute nothing."""
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    ctr = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.1, 4, size=n), jnp.float32)
+    out, tsums = d2_update_tiles(x, ctr, w)
+    assert out.shape[0] % 512 == 0 and tsums.shape[0] == out.shape[0] // 512
+    rout = ref.d2_update_ref(x, ctr, w)
+    np.testing.assert_allclose(out[:n], rout, rtol=1e-5, atol=1e-5)
+    assert (np.asarray(out[n:]) == 0.0).all()
+    np.testing.assert_allclose(
+        tsums, np.asarray(out).reshape(-1, 512).sum(1), rtol=1e-4)
+
+
+@pytest.mark.parametrize("h,n,block", [(3, 10, 512), (21, 1025, 512),
+                                       (9, 300, 128)])
+def test_tree_sep_update_tiles_matches_ref(h, n, block):
+    rng = np.random.default_rng(h * 100 + n)
+    codes = rng.integers(0, 2 ** 63, size=(h, n), dtype=np.uint64)
+    lo, hi = split_codes_u64(codes)
+    clo, chi = jnp.asarray(lo[:, 0]), jnp.asarray(hi[:, 0])
+    w = jnp.asarray(rng.uniform(0, 1e6, size=n), jnp.float32)
+    kw = dict(scale=7.5, num_levels=h + 1)
+    out, tsums = tree_sep_update_tiles(
+        jnp.asarray(lo), jnp.asarray(hi), clo, chi, w, block_n=block, **kw)
+    rout = ref.tree_sep_update_ref(jnp.asarray(lo), jnp.asarray(hi), clo,
+                                   chi, w, **kw)
+    np.testing.assert_allclose(out[:n], rout, rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(
+        tsums, np.asarray(out).reshape(-1, block).sum(1), rtol=1e-4,
+        atol=1e-3)
+
+
+@pytest.mark.parametrize("b,k,l,d,count", [
+    (7, 3, 15, 6, None),
+    (130, 129, 15, 12, 60),
+    (16, 40, 15, 8, 0),        # empty center set => every candidate accepts
+])
+def test_lsh_bucket_accept_matches_ref(b, k, l, d, count):
+    """Fused acceptance epilogue: p = d2_min / (c^2 mtd2), 0 on mtd2 == 0."""
+    rng = np.random.default_rng(b + k)
+    qk = rng.integers(-5, 5, size=(2, l, b)).astype(np.int32)
+    ck = rng.integers(-5, 5, size=(2, l, k)).astype(np.int32)
+    q = rng.normal(size=(b, d)).astype(np.float32)
+    c = rng.normal(size=(k, d)).astype(np.float32)
+    mtd2 = rng.uniform(0, 3, size=b).astype(np.float32)
+    mtd2[::5] = 0.0            # already-covered points: must never accept
+    args = tuple(jnp.asarray(a) for a in
+                 (qk[0], qk[1], q, ck[0], ck[1], c, mtd2))
+    d2_min, p = lsh_bucket_accept(*args, count, c2=1.44)
+    rd2, rp = ref.lsh_bucket_accept_ref(*args, count, c2=1.44)
+    np.testing.assert_allclose(d2_min, rd2, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(p, rp, rtol=1e-5, atol=1e-6)
+    assert (np.asarray(p)[::5] == 0.0).all()
 
 
 @settings(max_examples=15, deadline=None)

@@ -1,9 +1,11 @@
-"""Sample-tree invariants (paper §4, invariant 2) + sampling correctness."""
+"""Sample-tree invariants (paper §4, invariant 2) + sampling correctness +
+the incremental-update contract (scatter_update == init, bounded f32 drift,
+tiled two-level sampling == full-heap sampling)."""
 
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
-from repro.core.sample_tree import SampleTree, SampleTreeJax
+from repro.core.sample_tree import SampleTree, SampleTreeJax, TiledSampleTree
 
 
 @settings(max_examples=25, deadline=None)
@@ -50,6 +52,131 @@ def test_zero_weight_never_sampled():
     w[5] = 2.0
     tree = SampleTree(w)
     assert (tree.sample_batch(rng, 500) == 5).all()
+
+
+def test_internal_levels_clamped_nonnegative():
+    """The negative-dust guard covers every internal level, not just the
+    root: after updates that zero out heavy leaves, no internal partial sum
+    may go (and stay) negative."""
+    rng = np.random.default_rng(3)
+    w = rng.uniform(1e-8, 1e8, size=129)     # huge dynamic range => dust
+    tree = SampleTree(w)
+    for s in range(50):
+        r = np.random.default_rng(s)
+        idx = r.choice(129, size=17, replace=False)
+        tree.update(idx, r.uniform(0, 1e-6, size=17))
+    assert (tree.heap[1 : tree.cap] >= 0.0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(1, 400),
+    st.integers(1, 6),
+    st.integers(0, 2 ** 31 - 1),
+    st.booleans(),
+)
+def test_scatter_update_matches_init_property(n, k_open, seed, duplicates):
+    """Acceptance: after each opened center, patching only the changed
+    leaves with `scatter_update` leaves a heap equal (<= 1e-6 relative) to a
+    from-scratch `init` of the new weights — across random n (non-powers of
+    two included) and all-duplicate inputs."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    d = 4
+    if duplicates:
+        pts = np.tile(rng.normal(size=(1, d)), (n, 1))   # all-duplicate
+    else:
+        pts = rng.normal(size=(n, d)) * 5
+    w = np.full(n, 1e4, dtype=np.float32)
+    st_jax = SampleTreeJax(n)
+    heap = st_jax.init(jnp.asarray(w))
+    for _ in range(k_open):
+        c = pts[rng.integers(n)]
+        w_new = np.minimum(w, ((pts - c) ** 2).sum(1)).astype(np.float32)
+        changed = np.flatnonzero(w_new != w)
+        heap = st_jax.scatter_update(
+            heap, jnp.asarray(changed), jnp.asarray(w_new[changed])
+        )
+        w = w_new
+        # Leaves are patched bitwise; internal sums accumulate one f32
+        # rounding per scatter level, so equality holds to ~1e-5 of the
+        # node magnitudes after several stacked incremental updates.
+        expect = st_jax.init(jnp.asarray(w))
+        scale = max(float(expect[1]), 1.0)
+        np.testing.assert_allclose(np.asarray(heap), np.asarray(expect),
+                                   rtol=1e-4, atol=1e-5 * scale)
+        np.testing.assert_array_equal(
+            np.asarray(heap[st_jax.cap : st_jax.cap + n]),
+            w.astype(np.float32))
+
+
+def test_scatter_update_float32_drift_10k():
+    """10k interleaved incremental updates + samples must not drift the f32
+    partial sums measurably away from the exact leaf totals."""
+    import jax
+    import jax.numpy as jnp
+
+    n, u = 4096, 8
+    st_jax = SampleTreeJax(n)
+    w0 = jnp.asarray(np.random.default_rng(0).uniform(0.5, 2.0, n),
+                     jnp.float32)
+    heap0 = st_jax.init(w0)
+
+    @jax.jit
+    def run(heap, key):
+        def step(i, carry):
+            heap, key, sink = carry
+            key, k1, k2 = jax.random.split(key, 3)
+            # u unique leaves per step (stride pattern), fresh weights
+            idx = (i * 37 + jnp.arange(u) * (n // u)) % n
+            new = jax.random.uniform(k1, (u,), jnp.float32, 0.1, 3.0)
+            heap = st_jax.scatter_update(heap, idx, new)
+            # interleaved sampling (kept live via the checksum carry)
+            sink = sink + st_jax.sample(heap, k2, 4).sum()
+            return heap, key, sink
+
+        return jax.lax.fori_loop(
+            0, 10_000, step, (heap, jax.random.wrap_key_data(key),
+                              jnp.int32(0)))
+
+    heap, _, _ = run(heap0, jax.random.key_data(jax.random.key(7)))
+    leaves = np.asarray(heap[st_jax.cap : st_jax.cap + n], np.float64)
+    total = float(heap[1])
+    assert abs(total - leaves.sum()) / leaves.sum() < 1e-3
+    rebuilt = st_jax.init(jnp.asarray(leaves, jnp.float32))
+    np.testing.assert_allclose(np.asarray(heap), np.asarray(rebuilt),
+                               atol=2e-3 * max(total, 1.0))
+    assert (np.asarray(heap)[1:] >= 0.0).all()
+
+
+def test_tiled_sampler_matches_rebuild_distribution():
+    """Acceptance: the incremental two-level TiledSampleTree draws from the
+    same distribution as the full-heap rebuild path (`SampleTreeJax.init` +
+    descent) on the same weights."""
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(5)
+    n, tile, m = 700, 64, 150_000
+    w = rng.uniform(0, 3, size=n).astype(np.float32)
+    w[rng.choice(n, 100, replace=False)] = 0.0    # holes: never sampled
+    ts = TiledSampleTree(n, tile=tile)
+    w_pad = jnp.zeros((ts.n_pad,), jnp.float32).at[:n].set(jnp.asarray(w))
+    tiled = np.asarray(
+        ts.sample(ts.init(w_pad), w_pad, jax.random.key(0), m))
+    full_tree = SampleTreeJax(n)
+    full = np.asarray(
+        full_tree.sample(full_tree.init(jnp.asarray(w)), jax.random.key(1),
+                         m))
+    p = w / w.sum()
+    f_tiled = np.bincount(tiled, minlength=n) / m
+    f_full = np.bincount(full, minlength=n) / m
+    assert (f_tiled[w == 0.0] == 0.0).all()
+    np.testing.assert_allclose(f_tiled, p, atol=0.006)
+    np.testing.assert_allclose(f_full, p, atol=0.006)
+    # and the two empirical distributions agree with each other
+    np.testing.assert_allclose(f_tiled, f_full, atol=0.008)
 
 
 def test_jax_tree_matches_numpy():
