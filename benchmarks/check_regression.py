@@ -1,0 +1,154 @@
+"""Cross-PR bench regression gate over BENCH_seeding.json (ROADMAP item).
+
+CI snapshots the *committed* artifact (the previous PR's trajectory point)
+before `benchmarks/run.py` overwrites it, then runs
+
+    python benchmarks/check_regression.py --prev prev.json --cur BENCH_seeding.json
+
+The gate fails when the per-open incremental sample-structure update
+regresses **superlinearly**:
+
+  * within the current artifact, the log-log slope of ``incremental_s``
+    vs n across the microbench grid must stay below --max-slope (default
+    1.0): the `TiledSampleTree.refresh` path is O(T log T) per open with
+    T = n/tile, and measured slopes sit well under 1 (dispatch overhead
+    amortises across the grid) — a superlinear fit means an O(n^>1)
+    rebuild crept back into the per-open path;
+  * within the current artifact, incremental must still beat the O(n)
+    full rebuild at the largest n (--min-speedup, default 0.8 for noise);
+  * against the previous artifact, the *growth ratio*
+    ``incremental_s(n_max) / incremental_s(n_min)`` may not exceed the
+    previous ratio by more than --slack (default 2.0).  Comparing growth
+    shapes rather than absolute times keeps the gate robust to CI machines
+    of different speeds while still catching a complexity-class regression.
+
+It also gates the adaptive candidate-batch schedule: the n=2^16 per-center
+wall-clock under the adaptive schedule (min over reps, the noise-robust
+statistic) must stay within --batch-slack (default 1.25) of the fixed
+batch=128 baseline — "adaptive no worse than fixed" with timing-noise
+headroom for shared CI runners.
+
+Fields absent from the previous artifact (older PRs) are skipped, so the
+gate is self-bootstrapping.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+
+def _per_open(payload: dict) -> dict[int, float]:
+    rec = payload.get("heap_update_per_open", {}).get("per_open", {})
+    return {int(n): float(v["incremental_s"]) for n, v in rec.items()}
+
+
+def _growth_ratio(per_open: dict[int, float]) -> float | None:
+    if len(per_open) < 2:
+        return None
+    ns = sorted(per_open)
+    return per_open[ns[-1]] / max(per_open[ns[0]], 1e-12)
+
+
+def _loglog_slope(per_open: dict[int, float]) -> float | None:
+    """Least-squares slope of log(incremental_s) vs log(n)."""
+    if len(per_open) < 2:
+        return None
+    xs = [math.log(n) for n in sorted(per_open)]
+    ys = [math.log(max(per_open[n], 1e-12)) for n in sorted(per_open)]
+    mx = sum(xs) / len(xs)
+    my = sum(ys) / len(ys)
+    num = sum((x - mx) * (y - my) for x, y in zip(xs, ys))
+    den = sum((x - mx) ** 2 for x in xs)
+    return num / den if den else None
+
+
+def check(prev: dict, cur: dict, *, slack: float, max_slope: float,
+          batch_slack: float, min_speedup: float) -> list[str]:
+    """Returns a list of failure messages (empty = gate passes)."""
+    failures = []
+    cur_po = _per_open(cur)
+    if not cur_po:
+        failures.append("current artifact has no heap_update_per_open data")
+        return failures
+
+    slope = _loglog_slope(cur_po)
+    if slope is not None and slope >= max_slope:
+        failures.append(
+            f"per-open incremental update grows superlinearly: log-log "
+            f"slope {slope:.2f} >= {max_slope} over n={sorted(cur_po)}"
+        )
+
+    rec = cur.get("heap_update_per_open", {}).get("per_open", {})
+    if rec:
+        n_max = max(rec, key=int)
+        speedup = float(rec[n_max].get("speedup", 0.0))
+        if speedup < min_speedup:
+            failures.append(
+                f"incremental per-open update no longer beats the O(n) "
+                f"rebuild at n={n_max}: speedup {speedup:.2f} < "
+                f"{min_speedup}"
+            )
+
+    prev_po = _per_open(prev)
+    cur_ratio = _growth_ratio(cur_po)
+    prev_ratio = _growth_ratio(prev_po)
+    if cur_ratio is not None and prev_ratio is not None:
+        if cur_ratio > prev_ratio * slack:
+            failures.append(
+                f"per-open incremental growth ratio regressed "
+                f"superlinearly vs previous artifact: "
+                f"{cur_ratio:.2f} > {prev_ratio:.2f} * slack {slack}"
+            )
+
+    ab = cur.get("adaptive_batch")
+    if ab is None:
+        failures.append("current artifact has no adaptive_batch record")
+    else:
+        ratio = float(ab.get("adaptive_over_fixed128", float("inf")))
+        if ratio > batch_slack:
+            failures.append(
+                f"adaptive schedule per-center wall-clock is "
+                f"{ratio:.3f}x the fixed batch=128 baseline "
+                f"(> {batch_slack})"
+            )
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--prev", type=Path, required=True,
+                    help="previous (committed) BENCH_seeding.json")
+    ap.add_argument("--cur", type=Path, required=True,
+                    help="freshly generated BENCH_seeding.json")
+    ap.add_argument("--slack", type=float, default=2.0,
+                    help="allowed growth-ratio inflation vs previous")
+    ap.add_argument("--max-slope", type=float, default=1.0,
+                    help="max log-log slope of incremental_s vs n")
+    ap.add_argument("--batch-slack", type=float, default=1.25,
+                    help="max adaptive/fixed128 per-center ratio")
+    ap.add_argument("--min-speedup", type=float, default=0.8,
+                    help="min incremental-vs-rebuild speedup at the "
+                         "largest n")
+    args = ap.parse_args(argv)
+    prev = json.loads(args.prev.read_text()) if args.prev.exists() else {}
+    cur = json.loads(args.cur.read_text())
+    failures = check(prev, cur, slack=args.slack, max_slope=args.max_slope,
+                     batch_slack=args.batch_slack,
+                     min_speedup=args.min_speedup)
+    for msg in failures:
+        print(f"REGRESSION: {msg}", file=sys.stderr)
+    if not failures:
+        po = _per_open(cur)
+        print(f"bench regression gate ok: per-open incremental "
+              f"slope={_loglog_slope(po):.2f}, growth "
+              f"ratio={_growth_ratio(po):.2f}, adaptive/fixed128="
+              f"{cur['adaptive_batch']['adaptive_over_fixed128']:.3f}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,13 +24,16 @@ from benchmarks.datasets import DATASETS, make_dataset
 
 RESULTS = Path(__file__).resolve().parent / "artifacts"
 
-ALGOS = ("fastkmeans++", "rejection", "kmeans++", "afkmc2", "uniform")
-# The paper's two algorithms also exist as jit-able device programs
-# (`repro.core.device_seeding`) and as multi-chip shard_map programs
-# (`repro.core.sharded_seeding`); `--backends cpu device sharded` appends
-# these so Tables 1-3 can compare wall-clock for the same seeds.
-DEVICE_ALGOS = ("fastkmeans++/device", "rejection/device")
-SHARDED_ALGOS = ("fastkmeans++/sharded", "rejection/sharded")
+ALGOS = ("fastkmeans++", "rejection", "kmeans++", "kmeans||", "afkmc2",
+         "uniform")
+# The paper's two algorithms (and the k-means|| oversampling baseline) also
+# exist as jit-able device programs (`repro.core.device_seeding`) and as
+# multi-chip shard_map programs (`repro.core.sharded_seeding`);
+# `--backends cpu device sharded` appends these so Tables 1-3 can compare
+# wall-clock for the same seeds.
+DEVICE_ALGOS = ("fastkmeans++/device", "rejection/device", "kmeans||/device")
+SHARDED_ALGOS = ("fastkmeans++/sharded", "rejection/sharded",
+                 "kmeans||/sharded")
 
 
 def _algo_list(backends) -> tuple[str, ...]:

@@ -28,9 +28,31 @@ def main():
                          "kernels; interpret mode off-TPU); 'sharded' the "
                          "multi-chip shard_map seeders over all local "
                          "devices")
+    ap.add_argument("--schedule", default="adaptive",
+                    help="candidate-batch schedule for the device/sharded "
+                         "rejection seeder: 'adaptive' (default), "
+                         "'fixed:<B>' (legacy fixed block, e.g. fixed:128) "
+                         "or 'adaptive:<min>,<max>' for a custom ladder")
     args = ap.parse_args()
 
-    from repro.core import KMeansConfig, SEEDERS, clustering_cost, fit
+    from repro.core import BatchSchedule, KMeansConfig, SEEDERS, \
+        clustering_cost, fit
+
+    try:
+        if args.schedule == "adaptive":
+            schedule = BatchSchedule()
+        elif args.schedule.startswith("fixed:"):
+            schedule = BatchSchedule.fixed(
+                int(args.schedule.split(":", 1)[1]))
+        elif args.schedule.startswith("adaptive:"):
+            lo, hi = args.schedule.split(":", 1)[1].split(",")
+            schedule = BatchSchedule(min_batch=int(lo), max_batch=int(hi))
+        else:
+            raise ValueError("unknown schedule kind")
+    except ValueError as e:
+        raise SystemExit(
+            f"bad --schedule {args.schedule!r} ({e}); expected 'adaptive', "
+            f"'fixed:<B>' or 'adaptive:<min>,<max>'")
 
     rng = np.random.default_rng(args.seed)
     centers = rng.normal(size=(args.k * 2, args.d)) * 10
@@ -40,7 +62,8 @@ def main():
     print(f"dataset: n={args.n} d={args.d}, seeding k={args.k}\n")
     print(f"{'algorithm':16s} {'seconds':>8s} {'cost':>14s} {'vs km++':>8s}")
     base = None
-    for name in ("kmeans++", "fastkmeans++", "rejection", "afkmc2", "uniform"):
+    for name in ("kmeans++", "fastkmeans++", "rejection", "kmeans||",
+                 "afkmc2", "uniform"):
         res = SEEDERS[name](pts, args.k, np.random.default_rng(args.seed))
         cost = clustering_cost(pts, res.centers)
         if name == "kmeans++":
@@ -73,10 +96,12 @@ def main():
 
         ndev = len(jax.devices())
         print(f"\n{args.backend} backend "
-              f"(one jit program per seed, {ndev} device(s)):")
-        for name in ("fastkmeans++", "rejection"):
+              f"(one jit program per seed, {ndev} device(s), "
+              f"schedule={args.schedule}):")
+        for name in ("fastkmeans++", "rejection", "kmeans||"):
             km = fit(pts, KMeansConfig(k=args.k, seeder=name,
-                                       backend=args.backend, seed=args.seed))
+                                       backend=args.backend, seed=args.seed,
+                                       schedule=schedule))
             print(f"  {name + '/' + args.backend:24s} "
                   f"{km.seeding.seconds:8.2f}s cost={km.cost:14.1f}")
 

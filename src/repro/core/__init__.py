@@ -5,6 +5,7 @@ Faithful CPU algorithms (`seeding`, `multitree`, `lsh`) reproduce the paper;
 """
 
 from repro.core.api import BACKENDS, KMeans, KMeansConfig, fit, resolve_seeder
+from repro.core.batch_schedule import BatchSchedule
 from repro.core.lloyd import assign, lloyd
 from repro.core.multitree import MultiTreeSampler
 from repro.core.seeding import (
@@ -13,6 +14,7 @@ from repro.core.seeding import (
     afkmc2,
     clustering_cost,
     fast_kmeanspp,
+    kmeans_parallel,
     kmeanspp,
     rejection_sampling,
     uniform_sampling,
@@ -21,12 +23,14 @@ from repro.core.tree_embedding import MultiTreeEmbedding, build_multitree
 
 __all__ = [
     "BACKENDS",
+    "BatchSchedule",
     "KMeans",
     "KMeansConfig",
     "fit",
     "resolve_seeder",
     "assign",
     "lloyd",
+    "kmeans_parallel",
     "MultiTreeSampler",
     "SEEDERS",
     "SeedingResult",

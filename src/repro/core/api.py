@@ -13,11 +13,13 @@ import numpy as np
 
 from repro.core import device_seeding  # registers the "/device" seeders
 from repro.core import sharded_seeding  # registers the "/sharded" seeders
+from repro.core.batch_schedule import BatchSchedule
 from repro.core.lloyd import LloydResult, lloyd
 from repro.core.preprocess import quantize
 from repro.core.seeding import SEEDERS, SeedingResult, clustering_cost
 
-__all__ = ["KMeansConfig", "KMeans", "fit", "resolve_seeder", "BACKENDS"]
+__all__ = ["KMeansConfig", "KMeans", "fit", "resolve_seeder", "BACKENDS",
+           "BatchSchedule"]
 
 BACKENDS = ("cpu", "device", "sharded")
 
@@ -58,6 +60,10 @@ class KMeansConfig:
     lloyd_iters: int = 0                # 0 = seeding only (paper's experiments)
     quantize: bool = True               # Appendix-F aspect-ratio control
     c: float = 2.0                      # LSH approximation factor (rejection)
+    # Candidate-batch schedule for the device/sharded rejection seeders
+    # (None = the adaptive default; BatchSchedule.fixed(b) pins the legacy
+    # fixed block size).  Ignored by seeders without a speculative batch.
+    schedule: Optional[BatchSchedule] = None
     seed: int = 0
     seeder_kwargs: dict = dataclasses.field(default_factory=dict)
 
@@ -88,6 +94,8 @@ def fit(points: np.ndarray, config: KMeansConfig) -> KMeans:
         kwargs.setdefault("resolution", 1.0)
     if config.seeder == "rejection":
         kwargs.setdefault("c", config.c)
+        if config.schedule is not None:
+            kwargs.setdefault("schedule", config.schedule)
     seed_fn = resolve_seeder(config.seeder, config.backend)
     result = seed_fn(seed_pts, config.k, rng, **kwargs)
     # Centers are reported in *original* coordinates regardless of the

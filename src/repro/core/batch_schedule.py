@@ -1,0 +1,182 @@
+"""Adaptive candidate-batch scheduling for the rejection seeders.
+
+PR 2 made the per-open sample-structure update sublinear (one
+`TiledSampleTree.refresh` per center), so the per-round cost of speculative
+rejection is dominated by the candidate block itself: a round draws a block
+of B i.i.d. candidates from the current D^2 distribution, evaluates every
+acceptance test, and opens the first accept — discarding the rest.  The
+block size therefore trades two costs against each other (the trade-off
+analysed by Shah et al., arXiv:2502.02085):
+
+  * too small  -> many sequential `while_loop` rounds per center (each round
+    pays the coarse-heap descent, a kernel launch and — on the sharded
+    path — two cross-chip psums: a fixed per-round overhead);
+  * too large  -> most lanes of an accepted block are wasted work (the
+    expected position of the first accept is 1/p for acceptance rate p, so
+    lanes beyond ~1/p are paid but almost never consumed).
+
+Expected candidates until the first accept is 1/p, so a block of
+``safety / p`` lanes makes a fully-missed round ``exp(-safety)``-rare while
+bounding the wasted tail.  The acceptance rate p is not known up front and
+drifts as centers open (early centers accept nearly everything, late centers
+in dense clusters reject most proposals), hence a *schedule*: start from a
+cost-model prior, measure p per round, and step the block size geometrically
+toward ``safety / p_hat``.
+
+Device constraint: block sizes are trace-time constants inside
+``lax.while_loop``, so the schedule quantises to a static ladder of
+power-of-two **buckets** ``min_batch, 2*min_batch, ..., max_batch`` and the
+device programs `lax.switch` between per-bucket branches; only the bucket
+*index* and the acceptance-rate EMA are dynamic loop state.  A fixed-size
+schedule (``BatchSchedule.fixed(b)``) degenerates to one bucket and
+reproduces the old ``batch: int`` behaviour exactly.
+
+`BatchSchedule` is a frozen (hashable) dataclass so it can ride through
+``jax.jit`` static arguments and act as part of the sharded program-cache
+key.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+__all__ = ["BatchSchedule"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchSchedule:
+    """Geometric candidate-batch schedule for speculative rejection.
+
+    Attributes
+    ----------
+    min_batch / max_batch:
+        The bucket ladder endpoints.  ``max_batch`` is the hard cap: it fixes
+        the static shapes of the device programs' candidate blocks.
+    safety:
+        Target expected accepts per round: a round draws ~``safety / p_hat``
+        candidates, so a full miss has probability ~``exp(-safety)``.
+    ema:
+        Weight of the newest per-round acceptance observation in the running
+        estimate (1.0 = trust only the last round).
+    prior_accept:
+        Acceptance-rate prior used before any measurement (Algorithm 4
+        accepts with ``d^2_lsh / (c^2 mtd^2)``; early centers sit near 1,
+        the Lemma 5.3 worst case near ``1/(c^2 d^2)`` — the prior starts in
+        between and the EMA takes over after the first round).
+    """
+
+    min_batch: int = 32
+    max_batch: int = 512
+    safety: float = 3.0
+    ema: float = 0.5
+    prior_accept: float = 0.25
+
+    def __post_init__(self):
+        if self.min_batch < 1:
+            raise ValueError(f"min_batch must be >= 1, got {self.min_batch}")
+        if self.max_batch < self.min_batch:
+            raise ValueError(
+                f"max_batch {self.max_batch} < min_batch {self.min_batch}"
+            )
+        if not (0.0 < self.ema <= 1.0):
+            raise ValueError(f"ema must be in (0, 1], got {self.ema}")
+        if self.safety <= 0.0 or self.prior_accept <= 0.0:
+            raise ValueError("safety and prior_accept must be positive")
+
+    @classmethod
+    def fixed(cls, batch: int) -> "BatchSchedule":
+        """A one-bucket schedule: the legacy ``batch: int`` behaviour."""
+        return cls(min_batch=batch, max_batch=batch)
+
+    # -- the static bucket ladder -------------------------------------------
+
+    def buckets(self) -> tuple[int, ...]:
+        """Power-of-two ladder ``min, 2 min, ... , max`` (max always last)."""
+        out, b = [], self.min_batch
+        while b < self.max_batch:
+            out.append(b)
+            b *= 2
+        out.append(self.max_batch)
+        return tuple(out)
+
+    # -- cost model ---------------------------------------------------------
+
+    def _ideal(self, acc_rate):
+        """Cost-model block size ``safety / p``; jnp-traceable and float-ok.
+
+        The floor on ``acc_rate`` keeps the ideal finite on an all-miss
+        round; ``1 / (4 max_batch)`` is the rate below which the cap would
+        bind anyway.
+        """
+        p = jnp.maximum(acc_rate, 1.0 / (4.0 * self.max_batch))
+        return self.safety / p
+
+    def initial(self, n: int, k: int, num_tiles: int,
+                acc_rate: float | None = None) -> int:
+        """Cost-model initial batch (host-side, static).
+
+        ``safety / p`` lanes with the prior (or measured) acceptance rate,
+        inflated by the amortisable per-round fixed overhead of *this*
+        problem instance: the coarse-heap descent costs ``log2 T`` sequential
+        steps and the acceptance sweep scans a k-slot center buffer, so
+        larger structures amortise a round's overhead over proportionally
+        more lanes.  Clamped to the bucket ladder and (unless the ladder's
+        floor is itself larger) never beyond n — a block larger than the
+        point set is pure waste.
+        """
+        p = self.prior_accept if acc_rate is None else max(float(acc_rate),
+                                                          1e-6)
+        overhead = math.log2(max(num_tiles, 2)) + math.log2(max(k, 2))
+        b = (self.safety / p) * (1.0 + overhead / 8.0)
+        b = min(b, float(max(n, 1)))
+        return self._snap(b)
+
+    # -- stepping -----------------------------------------------------------
+
+    def propose(self, prev_batch: int, acc_rate: float) -> int:
+        """Next round's batch: one geometric step toward ``safety / p``.
+
+        Host-side twin of `next_index` (the property-tested contract):
+        returns a bucket value, never 0, never above ``max_batch``, and
+        monotone non-increasing in ``acc_rate`` for a fixed ``prev_batch``.
+        """
+        ideal = float(self._ideal(float(acc_rate)))
+        lo = max(prev_batch / 2.0, float(self.min_batch))
+        hi = min(prev_batch * 2.0, float(self.max_batch))
+        return self._snap(min(max(ideal, lo), hi))
+
+    def target_index(self, acc_rate):
+        """Index of the smallest bucket >= ``safety / p``; jnp-traceable,
+        monotone non-increasing in ``acc_rate``."""
+        ideal = self._ideal(acc_rate)
+        idx = jnp.ceil(jnp.log2(jnp.maximum(ideal / self.min_batch, 1.0)))
+        return jnp.clip(idx.astype(jnp.int32), 0, len(self.buckets()) - 1)
+
+    def next_index(self, idx, acc_rate):
+        """Traced bucket-index step: toward `target_index`, at most one
+        ladder rung (x2 / x0.5 geometric move) per round."""
+        tgt = self.target_index(acc_rate)
+        nxt = jnp.clip(tgt, idx - 1, idx + 1)
+        return jnp.clip(nxt, 0, len(self.buckets()) - 1).astype(jnp.int32)
+
+    def update_rate(self, acc_ema, observed):
+        """EMA blend of the newest per-round acceptance observation."""
+        return self.ema * observed + (1.0 - self.ema) * acc_ema
+
+    # -- helpers ------------------------------------------------------------
+
+    def index_of(self, batch: int) -> int:
+        """Index of the smallest bucket >= ``batch`` (host-side, static)."""
+        for j, b in enumerate(self.buckets()):
+            if b >= batch:
+                return j
+        return len(self.buckets()) - 1
+
+    def _snap(self, b: float) -> int:
+        """Clamp to [min_batch, max_batch] and snap up to the bucket ladder."""
+        buckets = self.buckets()
+        b = min(max(b, float(self.min_batch)), float(self.max_batch))
+        return buckets[self.index_of(int(math.ceil(b)))]

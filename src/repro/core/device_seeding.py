@@ -53,11 +53,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.batch_schedule import BatchSchedule
 from repro.core.lsh import MonotoneLSH
 from repro.core.sample_tree import TiledSampleTree
 from repro.core.tree_embedding import build_multitree
 from repro.kernels.ops import (
     lsh_bucket_accept,
+    pairwise_argmin,
     split_codes_u64,
     tree_sep_update,
     tree_sep_update_tiles,
@@ -66,11 +68,13 @@ from repro.kernels.ops import (
 __all__ = [
     "device_fast_kmeanspp",
     "device_rejection_sampling",
+    "device_kmeans_parallel_rounds",
     "prepare_embedding",
     "prepare_rejection",
     "DeviceSeedingData",
     "device_fast_kmeanspp_seeder",
     "device_rejection_seeder",
+    "device_kmeans_parallel_seeder",
     "DEVICE_SEEDERS",
 ]
 
@@ -251,7 +255,7 @@ def prepare_rejection(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "k", "scale", "num_levels", "m_init", "c", "batch", "max_rounds",
+        "k", "scale", "num_levels", "m_init", "c", "schedule", "max_rounds",
         "tile", "interpret",
     ),
 )
@@ -268,7 +272,7 @@ def device_rejection_sampling(
     num_levels: int,
     m_init: float,
     c: float = 1.2,
-    batch: int = 128,
+    schedule: BatchSchedule | None = None,
     max_rounds: int = 32,
     tile: int = 512,
     interpret: bool | None = None,
@@ -276,14 +280,25 @@ def device_rejection_sampling(
     """Algorithm 4 as one device program (jit-able end to end).
 
     Per center, a `lax.while_loop` runs batched speculative rejection: draw
-    `batch` i.i.d. candidates from the current multi-tree D^2 distribution
-    (two-level `TiledSampleTree` descent) plus uniforms, compute every
-    candidate's LSH nearest-bucket distance *and* acceptance probability
-    ``d2_lsh / (c^2 * mtd2)`` with one fused `lsh_bucket_accept` kernel
-    sweep over the opened centers, and open the *first* accept (the rest of
-    the block is discarded, preserving the sequential distribution exactly).
-    A complete LSH miss (kernel sentinel `LSH_MISS`) makes the ratio > 1,
-    i.e. always accepts — the CPU structure's +inf convention.
+    a block of i.i.d. candidates from the current multi-tree D^2
+    distribution (two-level `TiledSampleTree` descent) plus uniforms,
+    compute every candidate's LSH nearest-bucket distance *and* acceptance
+    probability ``d2_lsh / (c^2 * mtd2)`` with one fused `lsh_bucket_accept`
+    kernel sweep over the opened centers, and open the *first* accept (the
+    rest of the block is discarded, preserving the sequential distribution
+    exactly).  A complete LSH miss (kernel sentinel `LSH_MISS`) makes the
+    ratio > 1, i.e. always accepts — the CPU structure's +inf convention.
+
+    The block size follows the adaptive `schedule` (`BatchSchedule`): block
+    shapes must be trace-time constants inside the `while_loop`, so each
+    round `lax.switch`-es between one branch per power-of-two bucket of the
+    schedule's ladder, and only the bucket index plus the acceptance-rate
+    EMA travel as loop state (carried across rounds AND across centers, so
+    each center starts from the measured rate so far).  Because every
+    candidate in a block is i.i.d. from the *current* distribution and the
+    block size depends only on past rounds, adaptivity does not perturb the
+    sampled distribution.  `BatchSchedule.fixed(b)` pins one bucket and
+    reproduces the legacy fixed-batch program (identical RNG stream).
 
     Opening a center never rebuilds the sample structure: the last tree
     sweep's tile-sum epilogue feeds one incremental
@@ -304,6 +319,9 @@ def device_rejection_sampling(
     d = points.shape[1]
     ts = TiledSampleTree(n, tile=tile)
     c2 = float(c) ** 2
+    schedule = schedule if schedule is not None else BatchSchedule()
+    buckets = schedule.buckets()
+    b_idx0 = schedule.index_of(schedule.initial(n, k, ts.num_tiles))
 
     clo = _pad_axis(codes_lo, 2, ts.n_pad)
     chi = _pad_axis(codes_hi, 2, ts.n_pad)
@@ -315,38 +333,61 @@ def device_rejection_sampling(
                                     interpret=interpret)
 
     def body(i, state):
-        weights, coarse, chosen, ctr_pts, ck_lo, ck_hi, trials, key = state
+        (weights, coarse, chosen, ctr_pts, ck_lo, ck_hi, trials, b_idx,
+         acc_ema, key) = state
         key, k_unif = jax.random.split(key)
         x_unif = jax.random.randint(k_unif, (), 0, n).astype(jnp.int32)
 
         def round_cond(carry):
-            key, x_sel, done, t_i, rounds = carry
+            key, x_sel, done, t_i, rounds, b_idx, acc_ema = carry
             return (~done) & (rounds < max_rounds) & (i > 0) & (coarse[1] > 0)
 
         def round_body(carry):
-            key, x_sel, done, t_i, rounds = carry
+            key, x_sel, done, t_i, rounds, b_idx, acc_ema = carry
             key, k_cand, k_u = jax.random.split(key, 3)
-            cand = ts.sample(coarse, weights, k_cand, batch)  # (B,) i.i.d. D^2
-            us = jax.random.uniform(k_u, (batch,), dtype=jnp.float32)
-            mtd2 = weights[cand]                              # current weights
-            _, p_acc = lsh_bucket_accept(
-                jnp.take(klo_pad, cand, axis=1),
-                jnp.take(khi_pad, cand, axis=1),
-                jnp.take(pts_pad, cand, axis=0),
-                ck_lo, ck_hi, ctr_pts, mtd2, i,
-                c2=c2, interpret=interpret,
-            )
-            acc = us < p_acc
-            any_acc = jnp.any(acc)
-            hit = jnp.argmax(acc)                             # first accept
-            # On exhaustion, cand[0] (exact D^2 draw) is the fallback.
-            x_sel = jnp.where(any_acc, cand[hit], cand[0]).astype(jnp.int32)
-            t_i = t_i + jnp.where(any_acc, hit + 1, batch).astype(jnp.int32)
-            return key, x_sel, any_acc, t_i, rounds + 1
 
-        key, x_sel, _, t_i, _ = jax.lax.while_loop(
+            def make_branch(bj):
+                # One bucket of the schedule's ladder: block shapes are
+                # trace-time constants, so each bucket is its own branch.
+                def branch(_):
+                    cand = ts.sample(coarse, weights, k_cand, bj)  # i.i.d. D^2
+                    us = jax.random.uniform(k_u, (bj,), dtype=jnp.float32)
+                    mtd2 = weights[cand]                  # current weights
+                    _, p_acc = lsh_bucket_accept(
+                        jnp.take(klo_pad, cand, axis=1),
+                        jnp.take(khi_pad, cand, axis=1),
+                        jnp.take(pts_pad, cand, axis=0),
+                        ck_lo, ck_hi, ctr_pts, mtd2, i,
+                        c2=c2, interpret=interpret,
+                    )
+                    acc = us < p_acc
+                    any_acc = jnp.any(acc)
+                    hit = jnp.argmax(acc)                 # first accept
+                    # On exhaustion, cand[0] (exact D^2 draw) is the fallback.
+                    x_b = jnp.where(any_acc, cand[hit], cand[0]).astype(
+                        jnp.int32
+                    )
+                    used = jnp.where(any_acc, hit + 1, bj).astype(jnp.int32)
+                    rate = (jnp.sum(acc) / bj).astype(jnp.float32)
+                    return x_b, any_acc, used, rate
+                return branch
+
+            branches = [make_branch(bj) for bj in buckets]
+            if len(branches) == 1:                        # fixed schedule
+                x_sel, any_acc, used, rate = branches[0](None)
+            else:
+                x_sel, any_acc, used, rate = jax.lax.switch(
+                    b_idx, branches, None
+                )
+            t_i = t_i + used
+            acc_ema = schedule.update_rate(acc_ema, rate)
+            b_idx = schedule.next_index(b_idx, acc_ema)
+            return key, x_sel, any_acc, t_i, rounds + 1, b_idx, acc_ema
+
+        key, x_sel, _, t_i, _, b_idx, acc_ema = jax.lax.while_loop(
             round_cond, round_body,
-            (key, x_unif, jnp.bool_(False), jnp.int32(0), jnp.int32(0)),
+            (key, x_unif, jnp.bool_(False), jnp.int32(0), jnp.int32(0),
+             b_idx, acc_ema),
         )
         x = x_sel
         t_i = jnp.maximum(t_i, 1)             # the uniform/fallback draw
@@ -358,7 +399,8 @@ def device_rejection_sampling(
         ck_lo = ck_lo.at[:, i].set(klo_pad[:, x])
         ck_hi = ck_hi.at[:, i].set(khi_pad[:, x])
         trials = trials.at[i].set(t_i)
-        return weights, coarse, chosen, ctr_pts, ck_lo, ck_hi, trials, key
+        return (weights, coarse, chosen, ctr_pts, ck_lo, ck_hi, trials,
+                b_idx, acc_ema, key)
 
     weights0 = jnp.where(jnp.arange(ts.n_pad) < n, m_init, 0.0).astype(
         jnp.float32
@@ -369,11 +411,12 @@ def device_rejection_sampling(
     ck_lo0 = jnp.zeros((l, k), jnp.int32)
     ck_hi0 = jnp.zeros((l, k), jnp.int32)
     trials0 = jnp.zeros((k,), jnp.int32)
-    _, _, chosen, _, _, _, trials, _ = jax.lax.fori_loop(
+    out = jax.lax.fori_loop(
         0, k, body,
-        (weights0, coarse0, chosen0, ctr_pts0, ck_lo0, ck_hi0, trials0, key),
+        (weights0, coarse0, chosen0, ctr_pts0, ck_lo0, ck_hi0, trials0,
+         jnp.int32(b_idx0), jnp.float32(schedule.prior_accept), key),
     )
-    return chosen, trials
+    return out[2], out[6]
 
 
 # ---------------------------------------------------------------------------
@@ -406,15 +449,27 @@ def device_fast_kmeanspp_seeder(points, k, rng, *, resolution=None,
     )
 
 
+def resolve_schedule(schedule, batch) -> BatchSchedule:
+    """The seeders' schedule policy: an explicit `BatchSchedule` wins, a
+    legacy ``batch=<int>`` pins a one-bucket fixed schedule, and the default
+    is the adaptive schedule."""
+    if schedule is not None:
+        return schedule
+    if batch is not None:
+        return BatchSchedule.fixed(int(batch))
+    return BatchSchedule()
+
+
 def device_rejection_seeder(points, k, rng, *, c=1.2, lsh_r=None,
                             num_tables=15, hashes_per_table=1,
-                            resolution=None, batch=128, max_rounds=32,
-                            interpret=None, **_):
+                            resolution=None, schedule=None, batch=None,
+                            max_rounds=32, interpret=None, **_):
     """Algorithm 4 on device; `SeedingResult` facade over the jit program."""
     from repro.core.seeding import SeedingResult
 
     t0 = time.perf_counter()
     pts = np.asarray(points, dtype=np.float64)
+    sched = resolve_schedule(schedule, batch)
     data = prepare_rejection(
         pts, seed=int(rng.integers(2 ** 31)), resolution=resolution,
         lsh_r=lsh_r, num_tables=num_tables,
@@ -425,7 +480,7 @@ def device_rejection_seeder(points, k, rng, *, c=1.2, lsh_r=None,
         data.codes_lo, data.codes_hi, data.points,
         data.keys_lo, data.keys_hi, k, key,
         scale=data.scale, num_levels=data.num_levels, m_init=data.m_init,
-        c=c, batch=batch, max_rounds=max_rounds, interpret=interpret,
+        c=c, schedule=sched, max_rounds=max_rounds, interpret=interpret,
     )
     idx = np.asarray(jax.block_until_ready(chosen), dtype=np.int64)
     trials = np.asarray(trials, dtype=np.int64)
@@ -439,13 +494,100 @@ def device_rejection_seeder(points, k, rng, *, c=1.2, lsh_r=None,
             "backend": "device",
             "trials_per_center": total / k,
             "per_center_trials": trials,
+            "batch_buckets": sched.buckets(),
         },
+    )
+
+
+# ---------------------------------------------------------------------------
+# k-means|| baseline (Bahmani et al. 2012; bias analysis Makarychev et al.,
+# arXiv:2010.14487): the oversampling rounds as one jit device program.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("rounds", "cap", "interpret"))
+def device_kmeans_parallel_rounds(
+    points: jax.Array,       # (n, d) f32
+    key: jax.Array,
+    ell: jax.Array,          # oversampling factor per round (scalar f32)
+    *,
+    rounds: int,
+    cap: int,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """k-means|| oversampling: `rounds` passes, each picking every point
+    independently with probability ``min(1, ell * d2(x) / phi)`` and then
+    refreshing d2 against the round's picks with one `pairwise_argmin`
+    kernel sweep.  Returns ``(selected (n,) bool, d2 (n,))``.
+
+    `cap` bounds a single round's pick count (static shapes for the gather);
+    picks beyond it are dropped *consistently* — they are neither marked
+    selected nor allowed to lower d2 — so the candidate pool stays exactly
+    the set the distance field saw.  The weighted recluster down to k runs
+    host-side on the O(ell * rounds) pool (`seeding.kmeans_parallel` doc).
+    """
+    n, d = points.shape
+    key, k0 = jax.random.split(key)
+    x0 = jax.random.randint(k0, (), 0, n)
+    d2_0 = jnp.sum((points - points[x0]) ** 2, axis=1)
+    sel0 = jnp.zeros((n,), jnp.bool_).at[x0].set(True)
+
+    def round_body(r, carry):
+        key, sel, d2 = carry
+        key, kr = jax.random.split(key)
+        phi = jnp.sum(d2)
+        p = jnp.minimum(1.0, ell * d2 / jnp.maximum(phi, 1e-30))
+        u = jax.random.uniform(kr, (n,), dtype=jnp.float32)
+        want = (u < p) & (phi > 0)
+        idx = jnp.nonzero(want, size=cap, fill_value=0)[0]
+        valid = jnp.arange(cap) < jnp.sum(want)
+        picked = jnp.zeros((n,), jnp.int32).at[idx].max(
+            valid.astype(jnp.int32)
+        ).astype(jnp.bool_) & want
+        ctrs = jnp.where(valid[:, None], points[idx], _FAR)
+        dmin, _ = pairwise_argmin(points, ctrs, interpret=interpret)
+        return key, sel | picked, jnp.minimum(d2, dmin)
+
+    _, sel, d2 = jax.lax.fori_loop(0, rounds, round_body, (key, sel0, d2_0))
+    return sel, d2
+
+
+def device_kmeans_parallel_seeder(points, k, rng, *, rounds=5,
+                                  oversample=None, interpret=None, **_):
+    """k-means|| with the oversampling rounds on device; the O(ell * rounds)
+    candidate pool is reclustered host-side by weighted k-means++ (shared
+    with the CPU baseline)."""
+    from repro.core.seeding import (
+        SeedingResult,
+        _candidate_pool_to_centers,
+    )
+
+    t0 = time.perf_counter()
+    pts = np.asarray(points, dtype=np.float64)
+    n = len(pts)
+    ell = float(oversample) if oversample is not None else 2.0 * k
+    cap = int(min(n, max(8, 4 * ell)))
+    key = jax.random.key(int(rng.integers(2 ** 31)))
+    sel, _ = device_kmeans_parallel_rounds(
+        jnp.asarray(pts, jnp.float32), key, jnp.float32(ell),
+        rounds=rounds, cap=cap, interpret=interpret,
+    )
+    cand = np.flatnonzero(np.asarray(jax.block_until_ready(sel)))
+    idx, pool = _candidate_pool_to_centers(pts, cand, k, rng)
+    return SeedingResult(
+        centers=pts[idx].copy(),
+        indices=idx,
+        seconds=time.perf_counter() - t0,
+        num_candidates=pool,
+        extras={"backend": "device", "pool_size": pool, "rounds": rounds,
+                "oversample": ell},
     )
 
 
 DEVICE_SEEDERS = {
     "fastkmeans++": device_fast_kmeanspp_seeder,
     "rejection": device_rejection_seeder,
+    "kmeans||": device_kmeans_parallel_seeder,
 }
 
 

@@ -19,6 +19,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.core.batch_schedule import BatchSchedule
 from repro.core.lsh import MonotoneLSH
 from repro.core.multitree import MultiTreeSampler
 
@@ -27,6 +28,7 @@ __all__ = [
     "kmeanspp",
     "fast_kmeanspp",
     "rejection_sampling",
+    "kmeans_parallel",
     "afkmc2",
     "uniform_sampling",
     "SEEDERS",
@@ -160,6 +162,7 @@ def rejection_sampling(
     resolution: Optional[float] = None,
     max_trials_factor: int = 4096,
     batch: int = 512,
+    schedule: Optional[BatchSchedule] = None,
     **_,
 ) -> SeedingResult:
     """Algorithm 4.  Accept candidate x with prob
@@ -172,6 +175,13 @@ def rejection_sampling(
     of the block (their distribution would change after the open).  This
     preserves the sequential distribution exactly while amortising sampling
     and LSH-hashing costs over the block.
+
+    A `schedule` (`BatchSchedule`) overrides the fixed `batch`: the block
+    size then starts from the schedule's cost model and steps geometrically
+    per block on a coarse acceptance estimate (1/position-of-first-accept;
+    the lazy chunked evaluation never sees the rest of the block).  The CPU
+    path has no static-shape constraint, so the bucket ladder is only used
+    for its bounds/monotonicity contract.
 
     `max_trials_factor * k` bounds the total loop count as a safety net (the
     expectation is O(c^2 d^2 k), Lemma 5.3).
@@ -198,6 +208,10 @@ def rejection_sampling(
     c2 = float(c) ** 2
     trials = 0
     max_trials = max_trials_factor * k + 64
+    acc_ema = None
+    if schedule is not None:
+        batch = schedule.initial(n, k, max(1, n // 512))
+        acc_ema = schedule.prior_accept
 
     # First center: uniform, acceptance probability one (paper, Line 5 note).
     x0 = int(rng.integers(n))
@@ -225,8 +239,13 @@ def rejection_sampling(
             if accepted.any():
                 hit = lo + int(np.argmax(accepted))
                 break
+        evaluated = batch if hit < 0 else hit + 1
+        if schedule is not None:
+            acc_ema = float(schedule.update_rate(
+                acc_ema, (1.0 if hit >= 0 else 0.0) / evaluated))
+            batch = schedule.propose(batch, acc_ema)
         if hit < 0:
-            trials += batch
+            trials += evaluated
             continue
         trials += hit + 1
         x = int(cand[hit])
@@ -255,6 +274,141 @@ def rejection_sampling(
         seconds=time.perf_counter() - t0,
         num_candidates=trials,
         extras={"trials_per_center": trials / k},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Baseline: k-means|| (Bahmani et al. 2012).  The bias/approximation analysis
+# the comparison targets is Makarychev-Reddy-Shan (arXiv:2010.14487): O(1)
+# oversampling rounds, then a weighted k-means++ recluster of the pool.
+# ---------------------------------------------------------------------------
+
+def _nearest_chunked(points: np.ndarray, centers: np.ndarray,
+                     chunk: int = 65536, with_idx: bool = True
+                     ) -> tuple[Optional[np.ndarray], np.ndarray]:
+    """(argmin center index, min squared distance) per point; chunked BLAS.
+    ``with_idx=False`` skips the argmin reduction (index is None)."""
+    pts = np.asarray(points, dtype=np.float64)
+    ctr = np.asarray(centers, dtype=np.float64)
+    c_sq = (ctr ** 2).sum(axis=1)
+    idx = np.empty(len(pts), dtype=np.int64) if with_idx else None
+    d2 = np.empty(len(pts), dtype=np.float64)
+    for lo in range(0, len(pts), chunk):
+        x = pts[lo : lo + chunk]
+        dd = (x ** 2).sum(axis=1)[:, None] - 2.0 * (x @ ctr.T) + c_sq[None, :]
+        np.maximum(dd, 0.0, out=dd)
+        if with_idx:
+            idx[lo : lo + chunk] = dd.argmin(axis=1)
+        d2[lo : lo + chunk] = dd.min(axis=1)
+    return idx, d2
+
+
+def _weighted_kmeanspp_indices(cand: np.ndarray, weights: np.ndarray, k: int,
+                               rng: np.random.Generator) -> np.ndarray:
+    """Weighted k-means++ over a (small) candidate set: D^2 sampling with
+    per-candidate multiplicities.  Returns k distinct positions into `cand`.
+
+    This is k-means||'s recluster step; the pool is O(ell * rounds) so the
+    Theta(|pool| k d) exact loop is cheap.
+    """
+    pts = np.asarray(cand, dtype=np.float64)
+    w = np.asarray(weights, dtype=np.float64)
+    m = len(pts)
+    pts_sq = (pts ** 2).sum(axis=1)
+    chosen = np.empty(k, dtype=np.int64)
+    taken = np.zeros(m, dtype=bool)
+    chosen[0] = int(np.searchsorted(np.cumsum(w), rng.uniform(0.0, w.sum())))
+    chosen[0] = min(chosen[0], m - 1)
+    taken[chosen[0]] = True
+    d2 = np.full(m, np.inf)
+    _min_d2_update(pts, pts_sq, pts[chosen[0]], d2)
+    for i in range(1, k):
+        mass = np.where(taken, 0.0, w * d2)
+        total = mass.sum()
+        if total > 0:
+            u = rng.uniform(0.0, total)
+            x = int(np.searchsorted(np.cumsum(mass), u))
+            x = min(x, m - 1)
+        else:
+            # Degenerate pool (duplicates): any untaken position will do.
+            x = int(rng.choice(np.flatnonzero(~taken)))
+        chosen[i] = x
+        taken[x] = True
+        _min_d2_update(pts, pts_sq, pts[x], d2)
+    return chosen
+
+
+def _candidate_pool_to_centers(pts: np.ndarray, cand: np.ndarray, k: int,
+                               rng: np.random.Generator
+                               ) -> tuple[np.ndarray, int]:
+    """k-means|| tail shared by all backends: pad the pool to >= k distinct
+    points, weight each candidate by its Voronoi population, recluster with
+    weighted k-means++.  Returns (k chosen point indices, pool size)."""
+    n = len(pts)
+    cand = np.unique(np.asarray(cand, dtype=np.int64))
+    if len(cand) < k:
+        extra = rng.permutation(np.setdiff1d(np.arange(n), cand))
+        cand = np.sort(np.concatenate([cand, extra[: k - len(cand)]]))
+    assign, _ = _nearest_chunked(pts, pts[cand])
+    w = np.bincount(assign, minlength=len(cand)).astype(np.float64)
+    # Every candidate is its own nearest candidate, so w >= 1 everywhere and
+    # the weighted D^2 distribution is well defined.
+    np.maximum(w, 1.0, out=w)
+    local = _weighted_kmeanspp_indices(pts[cand], w, k, rng)
+    return cand[local], len(cand)
+
+
+def kmeans_parallel(
+    points: np.ndarray,
+    k: int,
+    rng: np.random.Generator,
+    *,
+    rounds: int = 5,
+    oversample: Optional[float] = None,
+    chunk: int = 65536,
+    **_,
+) -> SeedingResult:
+    """k-means|| seeding (Bahmani et al. 2012; Makarychev et al. 2020 show
+    O(1) rounds suffice for an O(log k)-competitive pool).
+
+    `rounds` oversampling passes each pick point x independently with
+    probability ``min(1, ell * d2(x) / phi)`` (``ell = oversample``, default
+    2k), the pool is weighted by Voronoi population and reclustered down to
+    k by weighted k-means++.  Per round the distance refresh is one chunked
+    (n x picks) BLAS pass, so the total work is O(n d ell rounds / chunk)
+    matmuls — the speed column BENCH_seeding.json compares against the
+    rejection seeders.
+    """
+    t0 = time.perf_counter()
+    pts = np.asarray(points, dtype=np.float64)
+    n = len(pts)
+    ell = float(oversample) if oversample is not None else 2.0 * k
+    c0 = int(rng.integers(n))
+    selected = np.zeros(n, dtype=bool)
+    selected[c0] = True
+    pts_sq = (pts ** 2).sum(axis=1)
+    d2 = np.full(n, np.inf)
+    _min_d2_update(pts, pts_sq, pts[c0], d2)
+    for _r in range(rounds):
+        phi = d2.sum()
+        if phi <= 0:
+            break
+        p = np.minimum(1.0, ell * d2 / phi)
+        picked = (rng.uniform(size=n) < p) & ~selected
+        new = np.flatnonzero(picked)
+        if new.size == 0:
+            continue
+        selected |= picked
+        _, d2_new = _nearest_chunked(pts, pts[new], chunk, with_idx=False)
+        np.minimum(d2, d2_new, out=d2)
+    idx, pool = _candidate_pool_to_centers(pts, np.flatnonzero(selected), k,
+                                           rng)
+    return SeedingResult(
+        centers=pts[idx].copy(),
+        indices=idx,
+        seconds=time.perf_counter() - t0,
+        num_candidates=pool,
+        extras={"pool_size": pool, "rounds": rounds, "oversample": ell},
     )
 
 
@@ -340,6 +494,7 @@ SEEDERS: dict[str, Callable[..., SeedingResult]] = {
     "kmeans++": kmeanspp,
     "fastkmeans++": fast_kmeanspp,
     "rejection": rejection_sampling,
+    "kmeans||": kmeans_parallel,
     "afkmc2": afkmc2,
     "uniform": uniform_sampling,
 }

@@ -23,10 +23,27 @@ Everything (the k-center `fori_loop`, the per-center rejection
 `while_loop`, the Pallas kernels — interpret mode off-TPU) runs inside one
 `shard_map`-wrapped jit program; control flow stays in lockstep because
 every predicate is computed from replicated (psum/all_gather) values.
+
+**Program cache.**  Serving-style callers `fit` repeatedly with identical
+static configuration; re-wrapping `shard_map` + `jax.jit` per call would
+re-trace every time.  The jitted programs are therefore built once per
+``(mesh, array shapes, static args)`` key by `functools.lru_cache`-d
+builders and reused — `TRACE_COUNTS` (incremented inside the program bodies,
+i.e. at trace time only) plus `program_cache_info()` expose the behaviour to
+tests and profiling.
+
+The per-center rejection block size follows the same adaptive
+`BatchSchedule` as the single-device program: one `lax.switch` branch per
+power-of-two bucket, bucket index + acceptance EMA carried as loop state.
+Every value feeding the switch predicate is replicated (psum outputs), so
+all shards take the same branch and the collectives inside the branches stay
+in lockstep.
 """
 
 from __future__ import annotations
 
+import collections
+import functools
 import time
 
 import jax
@@ -36,16 +53,19 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.core.batch_schedule import BatchSchedule
 from repro.core.device_seeding import (
     _FAR,
     _pad_axis,
     prepare_embedding,
     prepare_rejection,
+    resolve_schedule,
 )
 from repro.core.sample_tree import TiledSampleTree
 from repro.distributed.sharding import _mesh_size, points_axis
 from repro.kernels.ops import (
     lsh_bucket_accept,
+    pairwise_argmin,
     tree_sep_update,
     tree_sep_update_tiles,
 )
@@ -54,10 +74,29 @@ from repro.launch.mesh import make_seeding_mesh
 __all__ = [
     "sharded_fast_kmeanspp",
     "sharded_rejection_sampling",
+    "sharded_kmeans_parallel_rounds",
     "sharded_fast_kmeanspp_seeder",
     "sharded_rejection_seeder",
+    "sharded_kmeans_parallel_seeder",
     "SHARDED_SEEDERS",
+    "TRACE_COUNTS",
+    "program_cache_info",
 ]
+
+# Incremented inside the shard_map program bodies, which only execute while
+# jax traces them — so this counts *traces*, not calls.  Tests use it to
+# assert that repeated fits with identical static args reuse the cached
+# compiled program instead of re-tracing.
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def program_cache_info():
+    """lru_cache statistics of the jit-program builders (hits = reuses)."""
+    return {
+        "fastkmeans++": _fastkmeanspp_program.cache_info(),
+        "rejection": _rejection_program.cache_info(),
+        "kmeans||": _kmeans_parallel_program.cache_info(),
+    }
 
 
 def _shard_sampler(ts_loc, axis):
@@ -137,28 +176,22 @@ def _init_weights(n_loc, n_real, m_init, axis):
     return jnp.where(gids < n_real, m_init, 0.0).astype(jnp.float32)
 
 
-def sharded_fast_kmeanspp(
-    codes_lo: jax.Array,     # (T, H-1, n_pad) int32, n_pad % (D * tile) == 0
-    codes_hi: jax.Array,
-    k: int,
-    seed_bits: jax.Array,    # raw PRNG key data (replicated)
-    *,
-    mesh,
-    scale: float,
-    num_levels: int,
-    m_init: float,
-    n_real: int,
-    tile: int = 512,
-    interpret: bool | None = None,
-) -> jax.Array:
-    """Algorithm 3 sharded over the mesh's "data" axis.  (k,) int32 indices."""
-    t, h, n_pad = codes_lo.shape
+# ---------------------------------------------------------------------------
+# Cached jit-program builders.  Key = (mesh, shapes, static args): the Mesh
+# object hashes by device assignment + axis names, so one program per
+# serving configuration, reused across every subsequent `fit`.
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _fastkmeanspp_program(mesh, t, h, n_pad, k, scale, num_levels, m_init,
+                          n_real, tile, interpret):
     axis = points_axis(mesh, n_pad)
     d_ax = _mesh_size(mesh, axis)
     n_loc = n_pad // d_ax
     ts_loc = TiledSampleTree(n_loc, tile=tile)
 
     def program(clo, chi, bits):
+        TRACE_COUNTS["fastkmeans++"] += 1     # trace-time only
         key = jax.random.wrap_key_data(bits)
         open_center = _make_local_open(clo, chi, scale=scale,
                                        num_levels=num_levels, tile=tile,
@@ -195,56 +228,52 @@ def sharded_fast_kmeanspp(
         out_specs=P(),
         check_rep=False,
     )
-    return jax.jit(fn)(codes_lo, codes_hi, seed_bits)
+    return jax.jit(fn)
 
 
-def sharded_rejection_sampling(
-    codes_lo: jax.Array,     # (T, H-1, n_pad) int32
+def sharded_fast_kmeanspp(
+    codes_lo: jax.Array,     # (T, H-1, n_pad) int32, n_pad % (D * tile) == 0
     codes_hi: jax.Array,
-    points: jax.Array,       # (n_pad, d) f32
-    keys_lo: jax.Array,      # (L, n_pad) int32
-    keys_hi: jax.Array,
     k: int,
-    seed_bits: jax.Array,
+    seed_bits: jax.Array,    # raw PRNG key data (replicated)
     *,
     mesh,
     scale: float,
     num_levels: int,
     m_init: float,
     n_real: int,
-    c: float = 1.2,
-    batch: int = 128,
-    max_rounds: int = 32,
     tile: int = 512,
     interpret: bool | None = None,
-) -> tuple[jax.Array, jax.Array]:
-    """Algorithm 4 sharded over the mesh's "data" axis.
-
-    Candidate batches are drawn shard-then-descend; each candidate's
-    coordinates, bucket keys and current weight cross chips with one masked
-    psum, after which the (small, replicated) opened-center acceptance sweep
-    runs everywhere so the rejection `while_loop` stays in lockstep.
-    Returns ``(chosen (k,), trials (k,))`` as in the single-device program.
-    """
+) -> jax.Array:
+    """Algorithm 3 sharded over the mesh's "data" axis.  (k,) int32 indices."""
     t, h, n_pad = codes_lo.shape
-    l = keys_lo.shape[0]
-    d = points.shape[1]
+    fn = _fastkmeanspp_program(mesh, t, h, n_pad, k, scale, num_levels,
+                               m_init, n_real, tile, interpret)
+    return fn(codes_lo, codes_hi, seed_bits)
+
+
+@functools.lru_cache(maxsize=None)
+def _rejection_program(mesh, t, h, n_pad, l, d, k, scale, num_levels, m_init,
+                       n_real, c, schedule, max_rounds, tile, interpret):
     axis = points_axis(mesh, n_pad)
     d_ax = _mesh_size(mesh, axis)
     n_loc = n_pad // d_ax
     ts_loc = TiledSampleTree(n_loc, tile=tile)
     c2 = float(c) ** 2
+    buckets = schedule.buckets()
+    b_idx0 = schedule.index_of(schedule.initial(n_real, k, ts_loc.num_tiles))
 
     def program(clo, chi, pts_loc, klo, khi, bits):
+        TRACE_COUNTS["rejection"] += 1        # trace-time only
         key = jax.random.wrap_key_data(bits)
         open_center = _make_local_open(clo, chi, scale=scale,
                                        num_levels=num_levels, tile=tile,
                                        interpret=interpret)
         sample = _shard_sampler(ts_loc, axis)
-        sid = jax.lax.axis_index(axis)
 
         def body(i, state):
-            w, coarse, chosen, ctr_pts, ck_lo, ck_hi, trials, key = state
+            (w, coarse, chosen, ctr_pts, ck_lo, ck_hi, trials, b_idx,
+             acc_ema, key) = state
             key, k_unif = jax.random.split(key)
             x_unif = jax.random.randint(k_unif, (), 0, n_real).astype(
                 jnp.int32
@@ -252,48 +281,73 @@ def sharded_rejection_sampling(
             total = jax.lax.psum(coarse[1], axis)
 
             def round_cond(carry):
-                key, x_sel, done, t_i, rounds = carry
+                key, x_sel, done, t_i, rounds, b_idx, acc_ema = carry
                 return (~done) & (rounds < max_rounds) & (i > 0) & (total > 0)
 
             def round_body(carry):
-                key, x_sel, done, t_i, rounds = carry
+                key, x_sel, done, t_i, rounds, b_idx, acc_ema = carry
                 key, k_cand, k_u = jax.random.split(key, 3)
-                cand, mine, loc = sample(coarse, w, k_cand, batch)
-                us = jax.random.uniform(k_u, (batch,), dtype=jnp.float32)
-                # Two masked psums ship the winning candidates' data to
-                # every shard: coordinates + current weight share one f32
-                # (B, d+1) payload, both bucket-key planes one int32
-                # (2L, B) payload — the round's collective latency floor.
-                fpay = jnp.concatenate(
-                    [pts_loc[loc], w[loc][:, None]], axis=1
-                )
-                fpay = jax.lax.psum(
-                    jnp.where(mine[:, None], fpay, 0.0), axis
-                )
-                q, mtd2 = fpay[:, :d], fpay[:, d]
-                kpay = jnp.concatenate([klo[:, loc], khi[:, loc]], axis=0)
-                kpay = jax.lax.psum(
-                    jnp.where(mine[None, :], kpay, 0), axis
-                )
-                qk_lo, qk_hi = kpay[:l], kpay[l:]
-                _, p_acc = lsh_bucket_accept(
-                    qk_lo, qk_hi, q, ck_lo, ck_hi, ctr_pts, mtd2, i,
-                    c2=c2, interpret=interpret,
-                )
-                acc = us < p_acc
-                any_acc = jnp.any(acc)
-                hit = jnp.argmax(acc)
-                x_sel = jnp.where(any_acc, cand[hit], cand[0]).astype(
-                    jnp.int32
-                )
-                t_i = t_i + jnp.where(any_acc, hit + 1, batch).astype(
-                    jnp.int32
-                )
-                return key, x_sel, any_acc, t_i, rounds + 1
 
-            key, x_sel, _, t_i, _ = jax.lax.while_loop(
+                def make_branch(bj):
+                    # One bucket of the schedule's ladder; every shard takes
+                    # the same branch (b_idx derives from replicated values)
+                    # so the psums inside stay in lockstep.
+                    def branch(_):
+                        cand, mine, loc = sample(coarse, w, k_cand, bj)
+                        us = jax.random.uniform(k_u, (bj,),
+                                                dtype=jnp.float32)
+                        # Two masked psums ship the winning candidates' data
+                        # to every shard: coordinates + current weight share
+                        # one f32 (B, d+1) payload, both bucket-key planes
+                        # one int32 (2L, B) payload — the round's collective
+                        # latency floor.
+                        fpay = jnp.concatenate(
+                            [pts_loc[loc], w[loc][:, None]], axis=1
+                        )
+                        fpay = jax.lax.psum(
+                            jnp.where(mine[:, None], fpay, 0.0), axis
+                        )
+                        q, mtd2 = fpay[:, :d], fpay[:, d]
+                        kpay = jnp.concatenate(
+                            [klo[:, loc], khi[:, loc]], axis=0
+                        )
+                        kpay = jax.lax.psum(
+                            jnp.where(mine[None, :], kpay, 0), axis
+                        )
+                        qk_lo, qk_hi = kpay[:l], kpay[l:]
+                        _, p_acc = lsh_bucket_accept(
+                            qk_lo, qk_hi, q, ck_lo, ck_hi, ctr_pts, mtd2, i,
+                            c2=c2, interpret=interpret,
+                        )
+                        acc = us < p_acc
+                        any_acc = jnp.any(acc)
+                        hit = jnp.argmax(acc)
+                        x_b = jnp.where(any_acc, cand[hit], cand[0]).astype(
+                            jnp.int32
+                        )
+                        used = jnp.where(any_acc, hit + 1, bj).astype(
+                            jnp.int32
+                        )
+                        rate = (jnp.sum(acc) / bj).astype(jnp.float32)
+                        return x_b, any_acc, used, rate
+                    return branch
+
+                branches = [make_branch(bj) for bj in buckets]
+                if len(branches) == 1:        # fixed schedule
+                    x_sel, any_acc, used, rate = branches[0](None)
+                else:
+                    x_sel, any_acc, used, rate = jax.lax.switch(
+                        b_idx, branches, None
+                    )
+                t_i = t_i + used
+                acc_ema = schedule.update_rate(acc_ema, rate)
+                b_idx = schedule.next_index(b_idx, acc_ema)
+                return key, x_sel, any_acc, t_i, rounds + 1, b_idx, acc_ema
+
+            key, x_sel, _, t_i, _, b_idx, acc_ema = jax.lax.while_loop(
                 round_cond, round_body,
-                (key, x_unif, jnp.bool_(False), jnp.int32(0), jnp.int32(0)),
+                (key, x_unif, jnp.bool_(False), jnp.int32(0), jnp.int32(0),
+                 b_idx, acc_ema),
             )
             x = x_sel
             t_i = jnp.maximum(t_i, 1)
@@ -311,7 +365,8 @@ def sharded_rejection_sampling(
             ck_lo = ck_lo.at[:, i].set(xk_lo)
             ck_hi = ck_hi.at[:, i].set(xk_hi)
             trials = trials.at[i].set(t_i)
-            return w, coarse, chosen, ctr_pts, ck_lo, ck_hi, trials, key
+            return (w, coarse, chosen, ctr_pts, ck_lo, ck_hi, trials,
+                    b_idx, acc_ema, key)
 
         w0 = _init_weights(n_loc, n_real, m_init, axis)
         coarse0 = ts_loc.init(w0)
@@ -322,6 +377,8 @@ def sharded_rejection_sampling(
             jnp.zeros((l, k), jnp.int32),
             jnp.zeros((l, k), jnp.int32),
             jnp.zeros((k,), jnp.int32),
+            jnp.int32(b_idx0),
+            jnp.float32(schedule.prior_accept),
             key,
         )
         out = jax.lax.fori_loop(0, k, body, state0)
@@ -336,8 +393,129 @@ def sharded_rejection_sampling(
         out_specs=(P(), P()),
         check_rep=False,
     )
-    return jax.jit(fn)(codes_lo, codes_hi, points, keys_lo, keys_hi,
-                       seed_bits)
+    return jax.jit(fn)
+
+
+def sharded_rejection_sampling(
+    codes_lo: jax.Array,     # (T, H-1, n_pad) int32
+    codes_hi: jax.Array,
+    points: jax.Array,       # (n_pad, d) f32
+    keys_lo: jax.Array,      # (L, n_pad) int32
+    keys_hi: jax.Array,
+    k: int,
+    seed_bits: jax.Array,
+    *,
+    mesh,
+    scale: float,
+    num_levels: int,
+    m_init: float,
+    n_real: int,
+    c: float = 1.2,
+    schedule: BatchSchedule | None = None,
+    max_rounds: int = 32,
+    tile: int = 512,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Algorithm 4 sharded over the mesh's "data" axis.
+
+    Candidate batches are drawn shard-then-descend; each candidate's
+    coordinates, bucket keys and current weight cross chips with one masked
+    psum, after which the (small, replicated) opened-center acceptance sweep
+    runs everywhere so the rejection `while_loop` stays in lockstep.  The
+    batch size follows the adaptive `schedule` exactly as in
+    `device_rejection_sampling` (see that docstring).
+    Returns ``(chosen (k,), trials (k,))`` as in the single-device program.
+    """
+    t, h, n_pad = codes_lo.shape
+    l = keys_lo.shape[0]
+    d = points.shape[1]
+    schedule = schedule if schedule is not None else BatchSchedule()
+    fn = _rejection_program(mesh, t, h, n_pad, l, d, k, scale, num_levels,
+                            m_init, n_real, c, schedule, max_rounds, tile,
+                            interpret)
+    return fn(codes_lo, codes_hi, points, keys_lo, keys_hi, seed_bits)
+
+
+# ---------------------------------------------------------------------------
+# k-means|| oversampling rounds, sharded: local d2/pick per shard, one
+# all_gather of the round's picks, local pairwise refresh.
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _kmeans_parallel_program(mesh, n_pad, d, rounds, cap_loc, n_real,
+                             interpret):
+    axis = points_axis(mesh, n_pad)
+    d_ax = _mesh_size(mesh, axis)
+    n_loc = n_pad // d_ax
+
+    def program(pts_loc, ell, bits):
+        TRACE_COUNTS["kmeans||"] += 1         # trace-time only
+        key = jax.random.wrap_key_data(bits)
+        sid = jax.lax.axis_index(axis)
+        gids = sid * n_loc + jnp.arange(n_loc)
+        live = gids < n_real
+        key, k0 = jax.random.split(key)
+        x0 = jax.random.randint(k0, (), 0, n_real)
+        (x_pt,) = _broadcast_from_owner(x0, n_loc, axis,
+                                        lambda xl: pts_loc[xl])
+        d2 = jnp.where(live, jnp.sum((pts_loc - x_pt) ** 2, axis=1), 0.0)
+        sel = gids == x0
+
+        def round_body(r, carry):
+            key, sel, d2 = carry
+            key, kr = jax.random.split(key)
+            phi = jax.lax.psum(jnp.sum(d2), axis)
+            p = jnp.minimum(1.0, ell * d2 / jnp.maximum(phi, 1e-30))
+            # Per-shard independent coins: fold the (replicated) round key
+            # with the shard id.
+            u = jax.random.uniform(jax.random.fold_in(kr, sid), (n_loc,),
+                                   dtype=jnp.float32)
+            want = (u < p) & live & (phi > 0)
+            idx = jnp.nonzero(want, size=cap_loc, fill_value=0)[0]
+            valid = jnp.arange(cap_loc) < jnp.sum(want)
+            picked = jnp.zeros((n_loc,), jnp.int32).at[idx].max(
+                valid.astype(jnp.int32)
+            ).astype(jnp.bool_) & want
+            ctrs_loc = jnp.where(valid[:, None], pts_loc[idx], _FAR)
+            ctrs = jax.lax.all_gather(ctrs_loc, axis, tiled=True)
+            dmin, _ = pairwise_argmin(pts_loc, ctrs, interpret=interpret)
+            d2 = jnp.where(live, jnp.minimum(d2, dmin), 0.0)
+            return key, sel | picked, d2
+
+        _, sel, _ = jax.lax.fori_loop(0, rounds, round_body, (key, sel, d2))
+        return sel
+
+    fn = shard_map(
+        program, mesh=mesh,
+        in_specs=(P(axis, None), P(), P()),
+        out_specs=P(axis),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+def sharded_kmeans_parallel_rounds(
+    points: jax.Array,       # (n_pad, d) f32
+    ell,                     # oversampling factor (scalar f32)
+    seed_bits: jax.Array,
+    *,
+    mesh,
+    rounds: int,
+    cap_loc: int,
+    n_real: int,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """k-means|| oversampling rounds over the mesh; (n_pad,) bool picks.
+
+    Per round each shard draws its own picks (at most `cap_loc`, dropped
+    consistently as in `device_kmeans_parallel_rounds`), one `all_gather`
+    replicates the round's (D * cap_loc, d) pick block, and the distance
+    refresh runs shard-locally.
+    """
+    n_pad, d = points.shape
+    fn = _kmeans_parallel_program(mesh, n_pad, d, rounds, cap_loc, n_real,
+                                  interpret)
+    return fn(points, jnp.float32(ell), seed_bits)
 
 
 # ---------------------------------------------------------------------------
@@ -382,8 +560,9 @@ def sharded_fast_kmeanspp_seeder(points, k, rng, *, resolution=None,
 
 def sharded_rejection_seeder(points, k, rng, *, c=1.2, lsh_r=None,
                              num_tables=15, hashes_per_table=1,
-                             resolution=None, batch=128, max_rounds=32,
-                             tile=512, interpret=None, mesh=None, **_):
+                             resolution=None, schedule=None, batch=None,
+                             max_rounds=32, tile=512, interpret=None,
+                             mesh=None, **_):
     """Algorithm 4 across all local devices; `SeedingResult` facade."""
     from repro.core.seeding import SeedingResult
 
@@ -391,6 +570,7 @@ def sharded_rejection_seeder(points, k, rng, *, c=1.2, lsh_r=None,
     pts = np.asarray(points, dtype=np.float64)
     n = len(pts)
     mesh = mesh if mesh is not None else make_seeding_mesh()
+    sched = resolve_schedule(schedule, batch)
     data = prepare_rejection(
         pts, seed=int(rng.integers(2 ** 31)), resolution=resolution,
         lsh_r=lsh_r, num_tables=num_tables,
@@ -406,7 +586,7 @@ def sharded_rejection_seeder(points, k, rng, *, c=1.2, lsh_r=None,
     chosen, trials = sharded_rejection_sampling(
         lo, hi, pp, klo, khi, k, bits, mesh=mesh,
         scale=data.scale, num_levels=data.num_levels, m_init=data.m_init,
-        n_real=n, c=c, batch=batch, max_rounds=max_rounds, tile=tile,
+        n_real=n, c=c, schedule=sched, max_rounds=max_rounds, tile=tile,
         interpret=interpret,
     )
     idx = np.asarray(jax.block_until_ready(chosen), dtype=np.int64)
@@ -422,13 +602,56 @@ def sharded_rejection_seeder(points, k, rng, *, c=1.2, lsh_r=None,
             "devices": mesh.devices.size,
             "trials_per_center": total / k,
             "per_center_trials": trials,
+            "batch_buckets": sched.buckets(),
         },
+    )
+
+
+def sharded_kmeans_parallel_seeder(points, k, rng, *, rounds=5,
+                                   oversample=None, tile=512, interpret=None,
+                                   mesh=None, **_):
+    """k-means|| with sharded oversampling rounds; host-side weighted
+    recluster (shared with the CPU baseline)."""
+    from repro.core.seeding import (
+        SeedingResult,
+        _candidate_pool_to_centers,
+    )
+
+    t0 = time.perf_counter()
+    pts = np.asarray(points, dtype=np.float64)
+    n = len(pts)
+    mesh = mesh if mesh is not None else make_seeding_mesh()
+    d_ax = _mesh_size(mesh, points_axis(mesh))
+    ell = float(oversample) if oversample is not None else 2.0 * k
+    n_pad = _padded_for_mesh(n, mesh, tile)
+    n_loc = n_pad // d_ax
+    # Per-shard pick cap: points are sharded by index order, so a single
+    # shard can own nearly all the D^2 mass and draw ~ell picks in one
+    # round.  2*ell covers that worst case (global expected picks per round
+    # is <= ell) instead of assuming a uniform ell/D split.
+    cap_loc = int(min(n_loc, max(8, 2 * ell)))
+    pp = _pad_axis(jnp.asarray(pts, jnp.float32), 0, n_pad)
+    bits = jax.random.key_data(jax.random.key(int(rng.integers(2 ** 31))))
+    sel = sharded_kmeans_parallel_rounds(
+        pp, ell, bits, mesh=mesh, rounds=rounds, cap_loc=cap_loc,
+        n_real=n, interpret=interpret,
+    )
+    cand = np.flatnonzero(np.asarray(jax.block_until_ready(sel))[:n])
+    idx, pool = _candidate_pool_to_centers(pts, cand, k, rng)
+    return SeedingResult(
+        centers=pts[idx].copy(),
+        indices=idx,
+        seconds=time.perf_counter() - t0,
+        num_candidates=pool,
+        extras={"backend": "sharded", "devices": mesh.devices.size,
+                "pool_size": pool, "rounds": rounds, "oversample": ell},
     )
 
 
 SHARDED_SEEDERS = {
     "fastkmeans++": sharded_fast_kmeanspp_seeder,
     "rejection": sharded_rejection_seeder,
+    "kmeans||": sharded_kmeans_parallel_seeder,
 }
 
 

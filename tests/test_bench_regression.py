@@ -1,0 +1,83 @@
+"""Unit tests for the cross-PR bench regression gate
+(benchmarks/check_regression.py)."""
+
+import json
+from pathlib import Path
+
+from benchmarks.check_regression import check, main
+
+KW = dict(slack=2.0, max_slope=1.0, batch_slack=1.15, min_speedup=0.8)
+
+
+def _payload(inc, rebuild=None, adaptive_ratio=0.9):
+    rebuild = rebuild or {n: v * 3.0 for n, v in inc.items()}
+    return {
+        "heap_update_per_open": {"per_open": {
+            str(n): {"incremental_s": inc[n], "rebuild_s": rebuild[n],
+                     "speedup": rebuild[n] / inc[n]}
+            for n in inc
+        }},
+        "adaptive_batch": {"adaptive_over_fixed128": adaptive_ratio,
+                           "schedules": {}},
+    }
+
+
+GOOD = _payload({16384: 1e-4, 65536: 3e-4, 262144: 1e-3})
+
+
+def test_passes_on_healthy_artifact():
+    assert check(GOOD, GOOD, **KW) == []
+
+
+def test_bootstraps_without_previous_artifact():
+    assert check({}, GOOD, **KW) == []
+
+
+def test_fails_on_superlinear_slope():
+    bad = _payload({16384: 1e-4, 65536: 1.6e-3, 262144: 2.56e-2})  # ~O(n^2)
+    msgs = check(GOOD, bad, **KW)
+    assert any("superlinear" in m for m in msgs)
+
+
+def test_fails_on_growth_ratio_regression_vs_previous():
+    # Slope stays < 1.0 but the growth ratio more than doubles vs prev.
+    prev = _payload({16384: 1e-4, 65536: 1.5e-4, 262144: 2.2e-4})
+    cur = _payload({16384: 1e-4, 65536: 3e-4, 262144: 9e-4})
+    msgs = check(prev, cur, **KW)
+    assert any("vs previous artifact" in m for m in msgs)
+
+
+def test_fails_when_rebuild_beats_incremental():
+    bad = _payload({16384: 1e-4, 65536: 3e-4, 262144: 1e-3},
+                   rebuild={16384: 3e-4, 65536: 9e-4, 262144: 5e-4})
+    msgs = check(GOOD, bad, **KW)
+    assert any("no longer beats" in m for m in msgs)
+
+
+def test_fails_on_adaptive_batch_regression():
+    bad = _payload({16384: 1e-4, 65536: 3e-4, 262144: 1e-3},
+                   adaptive_ratio=1.5)
+    msgs = check(GOOD, bad, **KW)
+    assert any("fixed batch=128" in m for m in msgs)
+    missing = dict(GOOD)
+    missing = {k: v for k, v in missing.items() if k != "adaptive_batch"}
+    msgs = check(GOOD, missing, **KW)
+    assert any("adaptive_batch" in m for m in msgs)
+
+
+def test_cli_roundtrip(tmp_path: Path):
+    prev = tmp_path / "prev.json"
+    cur = tmp_path / "cur.json"
+    prev.write_text(json.dumps(GOOD))
+    cur.write_text(json.dumps(GOOD))
+    assert main(["--prev", str(prev), "--cur", str(cur)]) == 0
+    cur.write_text(json.dumps(
+        _payload({16384: 1e-4, 65536: 1.6e-3, 262144: 2.56e-2})))
+    assert main(["--prev", str(prev), "--cur", str(cur)]) == 1
+
+
+def test_committed_artifact_passes_gate():
+    """The artifact committed with this PR must itself satisfy the gate."""
+    root = Path(__file__).resolve().parents[1]
+    cur = json.loads((root / "BENCH_seeding.json").read_text())
+    assert check(cur, cur, **KW) == []

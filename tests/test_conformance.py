@@ -1,0 +1,188 @@
+"""Cross-backend statistical conformance of the rejection seeders.
+
+With three backends (`cpu` / `device` / `sharded`) sampling from three
+different tree implementations, nothing structural guarantees they draw
+from the same distribution — this suite proves it statistically.
+
+The key exactness property (same argument as the seeding docstrings): a
+candidate is proposed with probability proportional to its multi-tree
+weight ``mtd2(x)`` and accepted with probability
+``d2_lsh(x) / (c^2 * mtd2(x))``, so the *accepted* distribution is
+proportional to ``d2_lsh(x)`` — the proposal weights cancel.  On a fixture
+whose LSH radius guarantees that every point collides with every opened
+center in every table, ``d2_lsh`` is the exact Euclidean ``d2(x, S)``, and
+(because the tree distance dominates the true distance and c >= 1) the
+acceptance ratio is a valid probability.  Hence with k = 2:
+
+  * the first center is uniform on the n points;
+  * the second center is an **exact D^2 draw** given the first, for *any*
+    realisation of the random trees — so its marginal over the uniform
+    first center is ``P(j) = (1/n) sum_i d2(j, i) / sum_l d2(l, i)``,
+    computable in closed form on a small fixture.
+
+Each backend's observed first/second-center frequencies over R seeded
+repetitions are tested against the exact law with a chi-square test on
+mass-balanced bins (expected count >= ~40 per bin) at a
+Bonferroni-adjusted threshold, plus a coarser total-variation bound.
+Every seed is fixed, so the suite is deterministic.
+"""
+
+import functools
+
+import numpy as np
+import pytest
+
+from repro.core.seeding import SEEDERS
+
+N, D = 96, 4
+R = 360                     # seeded repetitions per backend
+BINS = 8
+ALPHA = 0.01
+# Bonferroni over the whole suite: 3 backends x 2 chi-square tests.
+N_TESTS = 6
+TV_BOUND = 0.15             # binned total variation, ~2.3x the H0 mean
+SEEDER_KW = dict(lsh_r=1e6, c=1.2, resolution=0.05)
+BACKENDS = {
+    "cpu": ("rejection", {}),
+    "device": ("rejection/device", {}),
+    "sharded": ("rejection/sharded", {"tile": 32}),
+}
+
+
+def _norm_isf(p: float) -> float:
+    """Upper-tail standard-normal quantile: solve 0.5 erfc(z / sqrt 2) = p
+    by bisection (exact to ~1e-12; no scipy dependency)."""
+    import math
+
+    lo, hi = -10.0, 10.0
+    for _ in range(80):
+        mid = 0.5 * (lo + hi)
+        if 0.5 * math.erfc(mid / math.sqrt(2.0)) > p:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+def _chi2_isf(alpha: float, df: int) -> float:
+    """Upper-tail chi-square quantile via Wilson-Hilferty."""
+    z = _norm_isf(alpha)
+    h = 2.0 / (9.0 * df)
+    return df * (1.0 - h + z * np.sqrt(h)) ** 3
+
+
+def _fixture():
+    rng = np.random.default_rng(1234)
+    return rng.normal(size=(N, D)) * 5.0
+
+
+def _exact_laws(pts):
+    """(uniform first-center law, exact D^2 second-center marginal)."""
+    d2 = ((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+    cond = d2 / d2.sum(axis=1, keepdims=True)     # row i: P(j | first = i)
+    return np.full(N, 1.0 / N), cond.mean(axis=0)
+
+
+def _mass_balanced_bins(p: np.ndarray, bins: int) -> np.ndarray:
+    """Assign points to `bins` groups of ~equal expected mass (sorted by
+    probability, greedy fill) — keeps every expected bin count large."""
+    order = np.argsort(p)
+    assignment = np.empty(len(p), dtype=np.int64)
+    target = 1.0 / bins
+    acc, b = 0.0, 0
+    for j in order:
+        assignment[j] = b
+        acc += p[j]
+        if acc >= target * (b + 1) and b < bins - 1:
+            b += 1
+    return assignment
+
+def _binned(p_or_counts: np.ndarray, assignment: np.ndarray,
+            bins: int) -> np.ndarray:
+    return np.bincount(assignment, weights=p_or_counts, minlength=bins)
+
+
+@functools.lru_cache(maxsize=None)
+def _draws(backend: str) -> np.ndarray:
+    name, extra = BACKENDS[backend]
+    out = np.empty((R, 2), dtype=np.int64)
+    pts = _fixture()
+    for s in range(R):
+        res = SEEDERS[name](pts, 2, np.random.default_rng(10_000 + s),
+                            **SEEDER_KW, **extra)
+        out[s] = res.indices
+    return out
+
+
+def _chi2_stat(counts: np.ndarray, expected: np.ndarray) -> float:
+    return float(((counts - expected) ** 2 / expected).sum())
+
+
+@pytest.fixture(scope="module", params=sorted(BACKENDS))
+def backend_draws(request):
+    return request.param, _draws(request.param)
+
+
+def test_first_center_uniform(backend_draws):
+    """Center 0 is a uniform draw on every backend (chi-square, Bonferroni
+    threshold shared with the D^2 tests)."""
+    backend, draws = backend_draws
+    uniform, _ = _exact_laws(_fixture())
+    assignment = _mass_balanced_bins(uniform, BINS)
+    counts = _binned(np.bincount(draws[:, 0], minlength=N).astype(float),
+                     assignment, BINS)
+    expected = _binned(uniform, assignment, BINS) * R
+    stat = _chi2_stat(counts, expected)
+    crit = _chi2_isf(ALPHA / N_TESTS, BINS - 1)
+    assert stat < crit, (backend, stat, crit)
+
+
+def test_second_center_exact_d2(backend_draws):
+    """Center 1's marginal equals the exact D^2 law: chi-square on
+    mass-balanced bins + a binned total-variation bound."""
+    backend, draws = backend_draws
+    _, marg2 = _exact_laws(_fixture())
+    assignment = _mass_balanced_bins(marg2, BINS)
+    counts = _binned(np.bincount(draws[:, 1], minlength=N).astype(float),
+                     assignment, BINS)
+    expected = _binned(marg2, assignment, BINS) * R
+    assert expected.min() > 20.0          # the binning did its job
+    stat = _chi2_stat(counts, expected)
+    crit = _chi2_isf(ALPHA / N_TESTS, BINS - 1)
+    assert stat < crit, (backend, stat, crit)
+    tv = 0.5 * np.abs(counts / R - expected / R).sum()
+    assert tv < TV_BOUND, (backend, tv)
+
+
+def test_backends_pairwise_close():
+    """The three backends' binned second-center histograms are close to
+    *each other* (TV), not only to the analytic law — a direct cross-backend
+    conformance check."""
+    _, marg2 = _exact_laws(_fixture())
+    assignment = _mass_balanced_bins(marg2, BINS)
+    hists = {}
+    for backend in BACKENDS:
+        draws = _draws(backend)
+        hists[backend] = _binned(
+            np.bincount(draws[:, 1], minlength=N).astype(float),
+            assignment, BINS) / R
+    names = sorted(hists)
+    for i, a in enumerate(names):
+        for b in names[i + 1:]:
+            tv = 0.5 * np.abs(hists[a] - hists[b]).sum()
+            assert tv < 2 * TV_BOUND, (a, b, tv)
+
+
+def test_collision_fixture_assumption():
+    """The exactness argument needs every point to share every opened
+    center's bucket at this radius — verify against the CPU structure."""
+    from repro.core.lsh import MonotoneLSH
+
+    pts = _fixture()
+    lsh = MonotoneLSH(D, r=SEEDER_KW["lsh_r"], num_tables=15, seed=3,
+                      capacity=16)
+    lsh.insert(pts[0])
+    _, d2 = lsh.query_batch(pts)
+    exact = ((pts - pts[0]) ** 2).sum(axis=1)
+    assert np.isfinite(d2).all() and (d2 < 1e30).all()
+    np.testing.assert_allclose(d2, exact, rtol=1e-9, atol=1e-9)

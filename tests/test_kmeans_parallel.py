@@ -1,0 +1,126 @@
+"""k-means|| baseline (Bahmani et al. 2012; Makarychev et al. 2020):
+CPU reference, device jit rounds, sharded shard_map rounds."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    KMeansConfig,
+    SEEDERS,
+    clustering_cost,
+    fit,
+    kmeans_parallel,
+    resolve_seeder,
+)
+from repro.core.seeding import (
+    _candidate_pool_to_centers,
+    _weighted_kmeanspp_indices,
+    kmeanspp,
+)
+
+
+def _mixture(n=1500, d=5, k_true=12, spread=40.0, seed=0):
+    rng = np.random.default_rng(seed)
+    ctr = rng.normal(size=(k_true, d)) * spread
+    return ctr[rng.integers(k_true, size=n)] + rng.normal(size=(n, d))
+
+
+def test_registered_on_all_backends():
+    assert SEEDERS["kmeans||"] is kmeans_parallel
+    for backend in ("cpu", "device", "sharded"):
+        fn = resolve_seeder("kmeans||", backend)
+        assert callable(fn)
+    assert resolve_seeder("kmeans||", "device") is SEEDERS["kmeans||/device"]
+    assert (resolve_seeder("kmeans||", "sharded")
+            is SEEDERS["kmeans||/sharded"])
+
+
+@pytest.mark.parametrize("name", ["kmeans||", "kmeans||/device",
+                                  "kmeans||/sharded"])
+def test_contract(name):
+    pts = _mixture(n=900, d=4, k_true=10, seed=3)
+    k = 20
+    res = SEEDERS[name](pts, k, np.random.default_rng(0))
+    assert res.indices.shape == (k,)
+    assert len(np.unique(res.indices)) == k
+    assert res.centers.shape == (k, 4)
+    np.testing.assert_array_equal(res.centers, pts[res.indices])
+    assert res.num_candidates >= k          # the oversampled pool
+    assert res.extras["pool_size"] == res.num_candidates
+
+
+def test_quality_close_to_kmeanspp_and_beats_uniform():
+    """The point of the baseline: k-means|| should land in the same cost
+    regime as exact k-means++ (Makarychev et al.: O(1) rounds suffice) and
+    clearly beat uniform seeding on clustered data."""
+    pts = _mixture(n=2000, d=5, k_true=12, seed=6)
+    k = 24
+    kpar, kpp = [], []
+    for s in range(6):
+        a = kmeans_parallel(pts, k, np.random.default_rng(s))
+        b = kmeanspp(pts, k, np.random.default_rng(s))
+        kpar.append(clustering_cost(pts, pts[a.indices]))
+        kpp.append(clustering_cost(pts, pts[b.indices]))
+    assert np.mean(kpar) < 1.25 * np.mean(kpp), (np.mean(kpar), np.mean(kpp))
+    rng = np.random.default_rng(0)
+    uni = np.mean([
+        clustering_cost(pts, pts[rng.choice(len(pts), k, replace=False)])
+        for _ in range(4)
+    ])
+    assert np.mean(kpar) < 0.7 * uni
+
+
+@pytest.mark.parametrize("name", ["kmeans||/device", "kmeans||/sharded"])
+def test_backend_matches_cpu_cost(name):
+    """Device/sharded rounds draw the same distribution as the CPU loop:
+    mean clustering costs over paired seeds agree within 5%."""
+    pts = _mixture(n=1600, d=5, k_true=12, seed=9)
+    k = 36
+    cpu_costs, dev_costs = [], []
+    for s in range(8):
+        cpu = kmeans_parallel(pts, k, np.random.default_rng(s))
+        dev = SEEDERS[name](pts, k, np.random.default_rng(s))
+        cpu_costs.append(clustering_cost(pts, pts[cpu.indices]))
+        dev_costs.append(clustering_cost(pts, pts[dev.indices]))
+    ratio = np.mean(dev_costs) / np.mean(cpu_costs)
+    assert abs(ratio - 1.0) < 0.05, (np.mean(cpu_costs), np.mean(dev_costs))
+
+
+def test_fit_facade():
+    pts = _mixture(n=700, d=4, k_true=8, seed=2)
+    for backend in ("cpu", "device", "sharded"):
+        km = fit(pts, KMeansConfig(k=10, seeder="kmeans||", backend=backend))
+        assert km.centers.shape == (10, 4)
+        assert len(np.unique(km.seeding.indices)) == 10
+
+
+def test_pool_padding_when_rounds_underfill():
+    """rounds=0 leaves a single-candidate pool; the shared tail pads it to
+    k distinct points before reclustering."""
+    pts = _mixture(n=60, d=3, k_true=4, seed=5)
+    res = kmeans_parallel(pts, 12, np.random.default_rng(1), rounds=0)
+    assert len(np.unique(res.indices)) == 12
+
+
+def test_weighted_recluster_distinct_and_weighted():
+    rng = np.random.default_rng(7)
+    cand = rng.normal(size=(50, 3))
+    w = np.ones(50)
+    w[:5] = 1000.0                      # heavy candidates dominate the seed
+    picks = _weighted_kmeanspp_indices(cand, w, 10, rng)
+    assert len(np.unique(picks)) == 10
+    # Degenerate pool: exact duplicates still yield distinct positions.
+    cand_dup = np.zeros((8, 3))
+    picks = _weighted_kmeanspp_indices(cand_dup, np.ones(8), 8,
+                                       np.random.default_rng(0))
+    assert sorted(picks) == list(range(8))
+
+
+def test_candidate_pool_weights_are_voronoi_counts():
+    pts = _mixture(n=400, d=3, k_true=6, seed=8)
+    cand = np.arange(0, 400, 40)
+    idx, pool = _candidate_pool_to_centers(pts, cand, 5,
+                                           np.random.default_rng(0))
+    assert pool == len(cand)
+    assert len(np.unique(idx)) == 5
+    assert set(idx).issubset(set(cand))

@@ -93,6 +93,27 @@ def test_sharded_matches_single_device_cost(algo):
     assert abs(sh_mean / dev_mean - 1.0) < 0.05, (dev_mean, sh_mean)
 
 
+def test_repeated_fit_hits_program_cache():
+    """Serving contract: repeated `fit(..., backend="sharded")` calls with
+    identical static args reuse the cached jit program — no re-trace.
+    `TRACE_COUNTS` is incremented inside the shard_map program bodies, which
+    only run while jax traces them, so it counts traces, not calls."""
+    from repro.core import sharded_seeding as ss
+
+    pts = _mixture(n=640, d=4, k_true=8, seed=11)
+    cfg = KMeansConfig(k=8, seeder="rejection", backend="sharded")
+    fit(pts, cfg)                      # builds + traces (or reuses) once
+    traces_before = dict(ss.TRACE_COUNTS)
+    hits_before = ss.program_cache_info()["rejection"].hits
+    km = fit(pts, cfg)                 # identical static args
+    assert dict(ss.TRACE_COUNTS) == traces_before, "sharded fit re-traced"
+    assert ss.program_cache_info()["rejection"].hits > hits_before
+    assert km.centers.shape == (8, 4)
+    # A different static configuration still (re)builds its own program.
+    fit(pts, KMeansConfig(k=9, seeder="rejection", backend="sharded"))
+    assert ss.TRACE_COUNTS["rejection"] == traces_before["rejection"] + 1
+
+
 def test_sharded_rejection_trials_contract():
     pts = _mixture(n=900, d=4, k_true=10, seed=9)
     res = SHARDED_SEEDERS["rejection"](pts, 12, np.random.default_rng(3))
