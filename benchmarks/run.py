@@ -163,6 +163,56 @@ def bench_adaptive_batch(n=1 << 16, d=16, k=8, reps=3):
     return rows, record
 
 
+def bench_plan_refit(n=1 << 14, d=16, k=16, refits=4):
+    """Prepare-once / refit-many (ISSUE 4 acceptance row).
+
+    Times the plan/execute lifecycle on the device rejection seeder: the
+    first `fit` pays prepare (multi-tree embedding + LSH keys, O(nd log Δ)
+    host work) plus the solve stage; every `refit(seed=...)` pays the solve
+    stage only — zero host-side re-preparation and zero re-traces
+    (`TRACE_COUNTS` is asserted by tests, the wall-clock win is recorded
+    here so the cached-prepare advantage stays measurable across PRs).
+    """
+    from repro.core import ClusterPlan, ClusterSpec, ExecutionSpec
+
+    rng = np.random.default_rng(0)
+    ctr = rng.normal(size=(64, d)) * 20
+    pts = ctr[rng.integers(64, size=n)] + rng.normal(size=(n, d))
+    plan = ClusterPlan(
+        ClusterSpec(k=k, seeder="rejection", seed=0,
+                    options={"resolution": 0.05}, quantize=False),
+        ExecutionSpec(backend="device"),
+    )
+    t0 = time.perf_counter()
+    plan.prepare(pts)
+    prepare_s = time.perf_counter() - t0
+    first = plan.fit().block_until_ready()     # traces + compiles once
+    refit_s = []
+    for i in range(refits):
+        t0 = time.perf_counter()
+        plan.refit(seed=i + 1).block_until_ready()
+        refit_s.append(time.perf_counter() - t0)
+    best_refit = min(refit_s)
+    record = {
+        "n": n, "k": k, "d": d,
+        "prepare_s": prepare_s,
+        "first_fit_s": prepare_s + first.solve_seconds,
+        "refit_s": best_refit,
+        "refits": refits,
+        "prepare_amortized_speedup":
+            (prepare_s + best_refit) / max(best_refit, 1e-12),
+        "cache": plan.cache_info(),
+    }
+    rows = [
+        ("plan_refit.prepare[n=%d]" % n, prepare_s * 1e6,
+         "host artifacts, paid once"),
+        ("plan_refit.refit[n=%d]" % n, best_refit * 1e6,
+         f"solve-only; prepare amortised "
+         f"{record['prepare_amortized_speedup']:.1f}x"),
+    ]
+    return rows, record
+
+
 def bench_heap_update(ns=(1 << 14, 1 << 16, 1 << 18), tile=512, reps=20):
     """Per-open sample-structure update: O(n) rebuild vs incremental.
 
@@ -203,8 +253,8 @@ def bench_heap_update(ns=(1 << 14, 1 << 16, 1 << 18), tile=512, reps=20):
     return rows, {"tile": tile, "per_open": record}
 
 
-def write_bench_json(seed_results, heap_update, adaptive_batch, *,
-                     smoke: bool):
+def write_bench_json(seed_results, heap_update, adaptive_batch, plan_refit,
+                     *, smoke: bool):
     """BENCH_seeding.json: the cross-PR perf-trajectory artifact."""
     import jax
 
@@ -215,6 +265,14 @@ def write_bench_json(seed_results, heap_update, adaptive_batch, *,
         for algo, data in res["algos"].items():
             algos[algo] = {
                 "seconds": {str(k): v for k, v in data["seconds"].items()},
+                "prepare_seconds": {
+                    str(k): v
+                    for k, v in data.get("prepare_seconds", {}).items()
+                },
+                "solve_seconds": {
+                    str(k): v
+                    for k, v in data.get("solve_seconds", {}).items()
+                },
                 "cost": {str(k): v for k, v in data["cost"].items()},
                 "cost_ratio_vs_kmeanspp": {
                     str(k): v / base[k]
@@ -231,6 +289,7 @@ def write_bench_json(seed_results, heap_update, adaptive_batch, *,
         "datasets": datasets,
         "heap_update_per_open": heap_update,
         "adaptive_batch": adaptive_batch,
+        "plan_refit": plan_refit,
     }
     BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"wrote {BENCH_JSON}")
@@ -274,11 +333,14 @@ def main(argv=None) -> None:
     print("# adaptive vs fixed candidate batching (n=2^16)", flush=True)
     ab_rows, adaptive_batch = bench_adaptive_batch()
     all_rows += ab_rows
+    print("# plan/execute: prepare-once / refit-many", flush=True)
+    pr_rows, plan_refit = bench_plan_refit()
+    all_rows += pr_rows
     if not args.smoke:
         print("# kernel microbenchmarks", flush=True)
         all_rows += bench_kernels()
         all_rows += bench_roofline()
-    write_bench_json(seed_results, heap_update, adaptive_batch,
+    write_bench_json(seed_results, heap_update, adaptive_batch, plan_refit,
                      smoke=args.smoke)
     print("\nname,us_per_call,derived")
     for name, us, derived in all_rows:

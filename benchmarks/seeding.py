@@ -57,11 +57,12 @@ def run_dataset(name: str, ks, *, scale: float, trials: int, seed: int = 0,
     out = {"dataset": name, "n": len(pts), "d": pts.shape[1],
            "scale": scale, "ks": list(ks), "algos": {}}
     for algo in algos:
-        out["algos"][algo] = {"seconds": {}, "cost": {}, "var": {},
+        out["algos"][algo] = {"seconds": {}, "prepare_seconds": {},
+                              "solve_seconds": {}, "cost": {}, "var": {},
                               "trials_per_center": {}}
     for k in ks:
         for algo in algos:
-            secs, costs, tpc = [], [], []
+            secs, prep_secs, solve_secs, costs, tpc = [], [], [], [], []
             if "/" in algo:
                 # Warm-up: the first device/sharded call pays one-time jit
                 # trace/compile; exclude it so the speed tables compare
@@ -78,11 +79,15 @@ def run_dataset(name: str, ks, *, scale: float, trials: int, seed: int = 0,
                     kwargs["resolution"] = 1.0
                 res = SEEDERS[algo](data, k, rng, **kwargs)
                 secs.append(res.seconds)
+                prep_secs.append(res.prepare_seconds)
+                solve_secs.append(res.solve_seconds)
                 costs.append(clustering_cost(pts, pts[res.indices]))
                 if res.num_candidates:
                     tpc.append(res.num_candidates / k)
             a = out["algos"][algo]
             a["seconds"][k] = float(np.mean(secs))
+            a["prepare_seconds"][k] = float(np.mean(prep_secs))
+            a["solve_seconds"][k] = float(np.mean(solve_secs))
             a["cost"][k] = float(np.mean(costs))
             a["var"][k] = float(np.var(costs))
             if tpc:

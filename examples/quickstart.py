@@ -4,7 +4,12 @@
 
 Compares FASTK-MEANS++ and REJECTIONSAMPLING (this paper) against exact
 k-means++, AFK-MC^2 and uniform seeding — the experiment of paper §6 —
-then refines the best seeding with Lloyd and reports the final cost.
+then demonstrates the plan/execute API: one `ClusterPlan` whose prepare
+stage (multi-tree embedding, LSH keys, quantisation) is built once and
+reused by `fit` / `refit` / `fit_batch`.
+
+`--smoke` runs a seconds-sized version of everything (CI keeps this
+example from rotting by running it on every push).
 """
 
 import argparse
@@ -22,6 +27,8 @@ def main():
     ap.add_argument("--d", type=int, default=32)
     ap.add_argument("--k", type=int, default=500)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: tiny dataset, every API surface")
     ap.add_argument("--backend", choices=("cpu", "device", "sharded"),
                     default="cpu",
                     help="'device' also runs the jit seeders (Pallas "
@@ -34,9 +41,17 @@ def main():
                          "'fixed:<B>' (legacy fixed block, e.g. fixed:128) "
                          "or 'adaptive:<min>,<max>' for a custom ladder")
     args = ap.parse_args()
+    if args.smoke:
+        args.n, args.d, args.k = 4000, 8, 25
 
-    from repro.core import BatchSchedule, KMeansConfig, SEEDERS, \
-        clustering_cost, fit
+    from repro.core import (
+        BatchSchedule,
+        ClusterPlan,
+        ClusterSpec,
+        ExecutionSpec,
+        SEEDERS,
+        clustering_cost,
+    )
 
     try:
         if args.schedule == "adaptive":
@@ -70,15 +85,26 @@ def main():
             base = cost
         print(f"{name:16s} {res.seconds:8.2f} {cost:14.1f} {cost/base:8.3f}")
 
-    print("\nrejection seeding + 5 Lloyd iterations via the facade API:")
-    km = fit(pts, KMeansConfig(k=args.k, seeder="rejection", lloyd_iters=5,
-                               seed=args.seed))
-    print(f"  seeding wall-clock: {km.seeding.seconds:.2f}s  "
-          f"trials/center: {km.seeding.extras.get('trials_per_center', 0):.1f}")
-    print(f"  final cost: {km.cost:.1f} "
-          f"({km.refinement.iterations} Lloyd iterations)")
+    # -- plan/execute API ---------------------------------------------------
+    # ClusterSpec (what) + ExecutionSpec (where) compile into a ClusterPlan:
+    # `prepare` builds the host-side artifacts once (cached by data
+    # fingerprint); `fit`/`refit`/`fit_batch` only pay the solve stage.
+    print("\nplan/execute API (rejection seeder + 5 Lloyd iterations):")
+    spec = ClusterSpec(k=args.k, seeder="rejection", lloyd_iters=5,
+                       seed=args.seed, schedule=schedule)
+    plan = ClusterPlan(spec, ExecutionSpec(backend="cpu"))
+    plan.prepare(pts)
+    km = plan.fit()
+    print(f"  prepare: {km.prepare_seconds:.2f}s   "
+          f"fit (solve only): {km.solve_seconds:.2f}s   "
+          f"final cost: {float(np.asarray(km.cost)):.1f} "
+          f"({km.extras.get('lloyd_iterations', 0)} Lloyd iterations)")
+    km2 = plan.refit(seed=args.seed + 1)
+    print(f"  refit(seed+1): {km2.solve_seconds:.2f}s "
+          f"(cpu caches the quantise step; the device plans below cache "
+          f"embedding+LSH too; cost {float(np.asarray(km2.cost)):.1f})")
 
-    if args.backend in ("device", "sharded"):
+    if args.backend in ("device", "sharded") or args.smoke:
         # The same two paper algorithms as single jit device programs
         # (Algorithm 3 + Algorithm 4 with the fused Pallas LSH kernel).
         # On a TPU the Pallas kernels compile; elsewhere they run in
@@ -86,24 +112,35 @@ def main():
         # off-accelerator — it demonstrates the API, not the speed.
         #
         # backend='sharded' runs the shard_map twins instead: one
-        # contiguous point range + local sub-heap per device.  It wins
-        # once n outgrows a single chip's HBM (the O(nH) sweeps split n/D
-        # per device and the per-center heap update is already O(T log T)
-        # incremental); on one CPU host it only demonstrates the API.
-        # Try XLA_FLAGS=--xla_force_host_platform_device_count=4 to see
-        # the 4-shard program run without TPU hardware.
+        # contiguous point range + local sub-heap per device.  Try
+        # XLA_FLAGS=--xla_force_host_platform_device_count=4 to see the
+        # 4-shard program run without TPU hardware.
         import jax
 
+        backend = args.backend if args.backend != "cpu" else "device"
+        dev_pts, dev_k = (pts[:1500], 10) if args.smoke else (pts, args.k)
         ndev = len(jax.devices())
-        print(f"\n{args.backend} backend "
-              f"(one jit program per seed, {ndev} device(s), "
+        print(f"\n{backend} backend plans ({ndev} device(s), "
               f"schedule={args.schedule}):")
         for name in ("fastkmeans++", "rejection", "kmeans||"):
-            km = fit(pts, KMeansConfig(k=args.k, seeder=name,
-                                       backend=args.backend, seed=args.seed,
-                                       schedule=schedule))
-            print(f"  {name + '/' + args.backend:24s} "
-                  f"{km.seeding.seconds:8.2f}s cost={km.cost:14.1f}")
+            plan = ClusterPlan(
+                ClusterSpec(k=dev_k, seeder=name, seed=args.seed,
+                            schedule=schedule),
+                ExecutionSpec(backend=backend),
+            )
+            plan.prepare(dev_pts)
+            km = plan.fit()
+            line = (f"  {name + '/' + backend:24s} "
+                    f"prepare {km.prepare_seconds:7.2f}s  "
+                    f"solve {km.solve_seconds:7.2f}s  "
+                    f"cost={float(np.asarray(km.cost)):14.1f}")
+            if name == "rejection":
+                batch = plan.fit_batch([1, 2, 3, 4])
+                costs = np.asarray(batch.cost)
+                line += (f"  fit_batch(4 seeds"
+                         f"{', vmapped' if batch.extras['vmapped'] else ''})"
+                         f" {batch.solve_seconds:.2f}s best={costs.min():.1f}")
+            print(line)
 
 
 if __name__ == "__main__":

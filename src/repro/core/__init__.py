@@ -1,10 +1,29 @@
 """Core library: the paper's contribution (fast k-means++ seeding).
 
 Faithful CPU algorithms (`seeding`, `multitree`, `lsh`) reproduce the paper;
-`device_seeding` is the TPU-native vectorised twin used inside jit/pjit.
+`device_seeding` is the TPU-native vectorised twin used inside jit/pjit;
+`sharded_seeding` the multi-chip shard_map twin.  `plan` is the serving
+entry point: `ClusterSpec` + `ExecutionSpec` compile into a `ClusterPlan`
+with a cached prepare stage and device-resident `FitResult`s; the typed
+per-backend seeder registry lives in `registry`.
 """
 
-from repro.core.api import BACKENDS, KMeans, KMeansConfig, fit, resolve_seeder
+from repro.core.api import (
+    BACKENDS,
+    ClusterPlan,
+    ClusterSpec,
+    ExecutionSpec,
+    FitResult,
+    KMeans,
+    KMeansConfig,
+    SEEDER_SPECS,
+    SeederSpec,
+    capability_table,
+    data_fingerprint,
+    ensure_host_f64,
+    fit,
+    resolve_seeder,
+)
 from repro.core.batch_schedule import BatchSchedule
 from repro.core.lloyd import assign, lloyd
 from repro.core.multitree import MultiTreeSampler
@@ -19,13 +38,24 @@ from repro.core.seeding import (
     rejection_sampling,
     uniform_sampling,
 )
+from repro.core.tracing import TRACE_COUNTS
 from repro.core.tree_embedding import MultiTreeEmbedding, build_multitree
 
 __all__ = [
     "BACKENDS",
     "BatchSchedule",
+    "ClusterPlan",
+    "ClusterSpec",
+    "ExecutionSpec",
+    "FitResult",
     "KMeans",
     "KMeansConfig",
+    "SEEDER_SPECS",
+    "SeederSpec",
+    "TRACE_COUNTS",
+    "capability_table",
+    "data_fingerprint",
+    "ensure_host_f64",
     "fit",
     "resolve_seeder",
     "assign",

@@ -1,4 +1,17 @@
-"""Public clustering facade: seed -> (optional) Lloyd refinement.
+"""Public clustering facade.
+
+Two entry points:
+
+  * **Plan/execute (preferred)** — `ClusterSpec` + `ExecutionSpec` compile
+    into a `ClusterPlan` (see `repro.core.plan`): `prepare(points)` caches
+    the host-side artifacts by data fingerprint, `fit`/`refit`/`fit_batch`
+    run the solve stage against cached jit programs and return
+    device-resident `FitResult` pytrees.
+  * **Legacy facade (deprecated)** — `fit(points, KMeansConfig(...))`
+    returning a host-side `KMeans`.  Kept bit-for-bit compatible on fixed
+    seeds; implemented against the same typed seeder registry
+    (`repro.core.registry`), so there is no per-algorithm special-casing
+    here anymore — capabilities drive the kwargs.
 
 This is the API the rest of the framework consumes (cluster-KV attention,
 MoE router init, data dedup) and the one the examples/benchmarks drive.
@@ -7,57 +20,72 @@ MoE router init, data dedup) and the one the examples/benchmarks drive.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import warnings
+from typing import Any, Optional
 
 import numpy as np
 
-from repro.core import device_seeding  # registers the "/device" seeders
-from repro.core import sharded_seeding  # registers the "/sharded" seeders
+from repro.core import device_seeding  # noqa: F401  registers "device"
+from repro.core import sharded_seeding  # noqa: F401  registers "sharded"
+from repro.core import registry
 from repro.core.batch_schedule import BatchSchedule
 from repro.core.lloyd import LloydResult, lloyd
+from repro.core.plan import (
+    ClusterPlan,
+    ClusterSpec,
+    ExecutionSpec,
+    FitResult,
+    data_fingerprint,
+    ensure_host_f64,
+)
 from repro.core.preprocess import quantize
+from repro.core.registry import (
+    BACKENDS,
+    SEEDER_SPECS,
+    SeederSpec,
+    capability_table,
+)
 from repro.core.seeding import SEEDERS, SeedingResult, clustering_cost
 
-__all__ = ["KMeansConfig", "KMeans", "fit", "resolve_seeder", "BACKENDS",
-           "BatchSchedule"]
-
-BACKENDS = ("cpu", "device", "sharded")
-
-_BACKEND_REGISTRIES = {
-    "device": device_seeding.DEVICE_SEEDERS,
-    "sharded": sharded_seeding.SHARDED_SEEDERS,
-}
+__all__ = [
+    "KMeansConfig", "KMeans", "fit", "resolve_seeder", "BACKENDS",
+    "BatchSchedule", "ClusterPlan", "ClusterSpec", "ExecutionSpec",
+    "FitResult", "SEEDER_SPECS", "SeederSpec", "capability_table",
+    "data_fingerprint", "ensure_host_f64",
+]
 
 
 def resolve_seeder(name: str, backend: str = "cpu"):
-    """Seeder lookup behind a backend selector.
+    """Seeder lookup behind a backend selector (typed-registry dispatch).
 
     `backend="cpu"` returns the faithful NumPy implementation;
     `backend="device"` the jit-able TPU-native twin (Pallas kernels run in
     interpret mode off-TPU); `backend="sharded"` the multi-chip shard_map
-    twin over all local devices (one contiguous point range + local
-    sub-heap per device).  Composite keys like ``"rejection/device"`` are
-    accepted directly by `SEEDERS` as well.
+    twin over all local devices.  Composite keys like
+    ``"rejection/device"`` are accepted directly by `SEEDERS` as well.
     """
     if backend not in BACKENDS:
         raise KeyError(f"unknown backend {backend!r}; expected {BACKENDS}")
-    registry = _BACKEND_REGISTRIES.get(backend)
-    if registry is not None:
-        if name not in registry:
-            raise KeyError(
-                f"seeder {name!r} has no {backend} implementation; "
-                f"available: {sorted(registry)}"
-            )
-        return SEEDERS[f"{name}/{backend}"]
-    return SEEDERS[name]
+    if name not in SEEDER_SPECS:
+        # Legacy escape hatch: composite "<name>/<backend>" strings (and
+        # any externally-injected SEEDERS entries) resolve directly.
+        return SEEDERS[name]
+    return registry.resolve(name, backend)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class KMeansConfig:
+    """Legacy per-call configuration (deprecated; see `ClusterSpec`).
+
+    Now frozen + hashable so a config can key jit-program caches directly:
+    `seeder_kwargs` accepts a mapping but is canonicalised to a sorted
+    tuple of (key, value) pairs.
+    """
+
     k: int
-    seeder: str = "rejection"           # any key of core.seeding.SEEDERS
+    seeder: str = "rejection"           # any registered seeder name
     backend: str = "cpu"                # "cpu" | "device" (jit) | "sharded"
-    lloyd_iters: int = 0                # 0 = seeding only (paper's experiments)
+    lloyd_iters: int = 0                # 0 = seeding only (paper experiments)
     quantize: bool = True               # Appendix-F aspect-ratio control
     c: float = 2.0                      # LSH approximation factor (rejection)
     # Candidate-batch schedule for the device/sharded rejection seeders
@@ -65,7 +93,29 @@ class KMeansConfig:
     # fixed block size).  Ignored by seeders without a speculative batch.
     schedule: Optional[BatchSchedule] = None
     seed: int = 0
-    seeder_kwargs: dict = dataclasses.field(default_factory=dict)
+    seeder_kwargs: Any = ()
+
+    def __post_init__(self):
+        if isinstance(self.seeder_kwargs, dict):
+            object.__setattr__(
+                self, "seeder_kwargs",
+                tuple(sorted(self.seeder_kwargs.items())),
+            )
+        else:
+            object.__setattr__(self, "seeder_kwargs",
+                               tuple(self.seeder_kwargs))
+
+    def to_specs(self) -> tuple[ClusterSpec, ExecutionSpec]:
+        """The plan-API equivalent of this config (migration helper)."""
+        return (
+            ClusterSpec(
+                k=self.k, seeder=self.seeder, c=self.c,
+                schedule=self.schedule, lloyd_iters=self.lloyd_iters,
+                quantize=self.quantize, seed=self.seed,
+                options=self.seeder_kwargs,
+            ),
+            ExecutionSpec(backend=self.backend),
+        )
 
 
 @dataclasses.dataclass
@@ -84,18 +134,33 @@ class KMeans:
 
 
 def fit(points: np.ndarray, config: KMeansConfig) -> KMeans:
+    """Deprecated one-shot facade (use `ClusterPlan` for repeated fits).
+
+    Bit-for-bit compatible with the pre-plan API on fixed seeds; every
+    capability decision (quantise? pass `c`? pass the schedule?) now comes
+    from the typed registry instead of seeder-name special cases.
+    """
+    warnings.warn(
+        "fit(points, KMeansConfig(...)) is deprecated; build a ClusterPlan "
+        "(ClusterSpec + ExecutionSpec) to cache the prepare stage across "
+        "fits — see docs/api.md",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     rng = np.random.default_rng(config.seed)
-    pts = np.asarray(points, dtype=np.float64)
+    pts = ensure_host_f64(points)
     kwargs = dict(config.seeder_kwargs)
     seed_pts = pts
-    if config.quantize and config.seeder in ("fastkmeans++", "rejection"):
+    spec = SEEDER_SPECS.get(config.seeder)
+    caps = spec.caps if spec is not None else registry.SeederCaps()
+    if caps.needs_quantize and config.quantize:
         q = quantize(pts, rng)
         seed_pts = q.points
         kwargs.setdefault("resolution", 1.0)
-    if config.seeder == "rejection":
+    if caps.accepts_c:
         kwargs.setdefault("c", config.c)
-        if config.schedule is not None:
-            kwargs.setdefault("schedule", config.schedule)
+    if caps.accepts_schedule and config.schedule is not None:
+        kwargs.setdefault("schedule", config.schedule)
     seed_fn = resolve_seeder(config.seeder, config.backend)
     result = seed_fn(seed_pts, config.k, rng, **kwargs)
     # Centers are reported in *original* coordinates regardless of the

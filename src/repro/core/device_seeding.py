@@ -56,6 +56,7 @@ import numpy as np
 from repro.core.batch_schedule import BatchSchedule
 from repro.core.lsh import MonotoneLSH
 from repro.core.sample_tree import TiledSampleTree
+from repro.core.tracing import count_trace
 from repro.core.tree_embedding import build_multitree
 from repro.kernels.ops import (
     lsh_bucket_accept,
@@ -133,6 +134,11 @@ def _make_open_center(codes_lo, codes_hi, *, scale, num_levels, tile,
     return open_center
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "scale", "num_levels", "m_init", "tile",
+                     "interpret"),
+)
 def device_fast_kmeanspp(
     codes_lo: jax.Array,     # (T, H-1, n) int32
     codes_hi: jax.Array,
@@ -145,13 +151,16 @@ def device_fast_kmeanspp(
     tile: int = 512,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Algorithm 3.  Returns (k,) int32 chosen indices.  Jit-able end to end.
+    """Algorithm 3.  Returns (k,) int32 chosen indices.  One jit program,
+    cached by (shapes, static args) — repeated fits never re-trace
+    (`tracing.TRACE_COUNTS["fastkmeans++/device"]` counts real traces).
 
     Per opened center the sample structure is fixed *incrementally*: the last
     tree sweep's tile-sum epilogue feeds one `TiledSampleTree.refresh`
     (O(T log T), T = n/tile) — there is no `SampleTreeJax.init` (O(n) heap
     rebuild) anywhere in the loop body.
     """
+    count_trace("fastkmeans++/device")        # trace-time only
     t, h, n = codes_lo.shape
     ts = TiledSampleTree(n, tile=tile)
     clo = _pad_axis(codes_lo, 2, ts.n_pad)
@@ -314,6 +323,7 @@ def device_rejection_sampling(
     Returns ``(chosen (k,) int32, trials (k,) int32)`` — trials per center
     for the Lemma 5.3 statistics.
     """
+    count_trace("rejection/device")           # trace-time only
     t, h, n = codes_lo.shape
     l = keys_lo.shape[0]
     d = points.shape[1]
@@ -425,7 +435,7 @@ def device_rejection_sampling(
 # ---------------------------------------------------------------------------
 
 def device_fast_kmeanspp_seeder(points, k, rng, *, resolution=None,
-                                interpret=None, **_):
+                                tile=512, interpret=None, **_):
     """Algorithm 3 on device; `SeedingResult` facade over the jit program."""
     from repro.core.seeding import SeedingResult
 
@@ -433,18 +443,26 @@ def device_fast_kmeanspp_seeder(points, k, rng, *, resolution=None,
     pts = np.asarray(points, dtype=np.float64)
     lo, hi, meta = prepare_embedding(pts, seed=int(rng.integers(2 ** 31)),
                                      resolution=resolution)
+    t_prep = time.perf_counter() - t0
     key = jax.random.key(int(rng.integers(2 ** 31)))
+    # NOTE: every static is passed explicitly — jax.jit keys its cache on
+    # the bound call, so an omitted default and an explicit equal value
+    # land in different cache entries; this call must bind exactly like
+    # the plan adapter's to share one compiled program.
     chosen = device_fast_kmeanspp(
         lo, hi, k, key,
         scale=meta["scale"], num_levels=meta["num_levels"],
-        m_init=meta["m_init"], interpret=interpret,
+        m_init=meta["m_init"], tile=tile, interpret=interpret,
     )
     idx = np.asarray(jax.block_until_ready(chosen), dtype=np.int64)
+    seconds = time.perf_counter() - t0
     return SeedingResult(
         centers=pts[idx].copy(),
         indices=idx,
-        seconds=time.perf_counter() - t0,
+        seconds=seconds,
         num_candidates=k,
+        prepare_seconds=t_prep,
+        solve_seconds=seconds - t_prep,
         extras={"backend": "device"},
     )
 
@@ -463,7 +481,7 @@ def resolve_schedule(schedule, batch) -> BatchSchedule:
 def device_rejection_seeder(points, k, rng, *, c=1.2, lsh_r=None,
                             num_tables=15, hashes_per_table=1,
                             resolution=None, schedule=None, batch=None,
-                            max_rounds=32, interpret=None, **_):
+                            max_rounds=32, tile=512, interpret=None, **_):
     """Algorithm 4 on device; `SeedingResult` facade over the jit program."""
     from repro.core.seeding import SeedingResult
 
@@ -475,21 +493,26 @@ def device_rejection_seeder(points, k, rng, *, c=1.2, lsh_r=None,
         lsh_r=lsh_r, num_tables=num_tables,
         hashes_per_table=hashes_per_table,
     )
+    t_prep = time.perf_counter() - t0
     key = jax.random.key(int(rng.integers(2 ** 31)))
     chosen, trials = device_rejection_sampling(
         data.codes_lo, data.codes_hi, data.points,
         data.keys_lo, data.keys_hi, k, key,
         scale=data.scale, num_levels=data.num_levels, m_init=data.m_init,
-        c=c, schedule=sched, max_rounds=max_rounds, interpret=interpret,
+        c=c, schedule=sched, max_rounds=max_rounds, tile=tile,
+        interpret=interpret,
     )
     idx = np.asarray(jax.block_until_ready(chosen), dtype=np.int64)
     trials = np.asarray(trials, dtype=np.int64)
     total = int(trials.sum())
+    seconds = time.perf_counter() - t0
     return SeedingResult(
         centers=pts[idx].copy(),
         indices=idx,
-        seconds=time.perf_counter() - t0,
+        seconds=seconds,
         num_candidates=total,
+        prepare_seconds=t_prep,
+        solve_seconds=seconds - t_prep,
         extras={
             "backend": "device",
             "trials_per_center": total / k,
@@ -526,6 +549,7 @@ def device_kmeans_parallel_rounds(
     the set the distance field saw.  The weighted recluster down to k runs
     host-side on the O(ell * rounds) pool (`seeding.kmeans_parallel` doc).
     """
+    count_trace("kmeans||/device")            # trace-time only
     n, d = points.shape
     key, k0 = jax.random.split(key)
     x0 = jax.random.randint(k0, (), 0, n)
@@ -591,11 +615,100 @@ DEVICE_SEEDERS = {
 }
 
 
-def _register():
-    from repro.core import seeding
+# ---------------------------------------------------------------------------
+# Cached prepare/solve split for `core.plan.ClusterPlan` (typed registry).
+#
+# Contract: `prepare` consumes from `rng` exactly the draws the composed
+# legacy seeder would before its jit program key, and `solve` draws the key
+# (plus any post-program host draws) — so prepare-then-solve reproduces the
+# legacy `seed_fn` bit-for-bit while letting the plan cache `prepare`'s
+# artifacts across fits.
+# ---------------------------------------------------------------------------
 
-    for name, fn in DEVICE_SEEDERS.items():
-        seeding.SEEDERS.setdefault(f"{name}/device", fn)
+def _prep_fastkmeanspp(pts, rng, *, resolution, options, execution):
+    return prepare_embedding(pts, seed=int(rng.integers(2 ** 31)),
+                             resolution=resolution)
+
+
+def _solve_fastkmeanspp(artifacts, pts, k, rng, *, c, schedule, options,
+                        execution):
+    lo, hi, meta = artifacts
+    key = jax.random.key(int(rng.integers(2 ** 31)))
+    chosen = device_fast_kmeanspp(
+        lo, hi, k, key,
+        scale=meta["scale"], num_levels=meta["num_levels"],
+        m_init=meta["m_init"], tile=execution.tile,
+        interpret=execution.interpret,
+    )
+    return chosen, {"num_candidates": k}
+
+
+def _prep_rejection(pts, rng, *, resolution, options, execution):
+    return prepare_rejection(
+        pts, seed=int(rng.integers(2 ** 31)), resolution=resolution,
+        lsh_r=options.get("lsh_r"),
+        num_tables=options.get("num_tables", 15),
+        hashes_per_table=options.get("hashes_per_table", 1),
+    )
+
+
+def _solve_rejection(data, pts, k, rng, *, c, schedule, options, execution):
+    sched = resolve_schedule(schedule, options.get("batch"))
+    key = jax.random.key(int(rng.integers(2 ** 31)))
+    chosen, trials = device_rejection_sampling(
+        data.codes_lo, data.codes_hi, data.points,
+        data.keys_lo, data.keys_hi, k, key,
+        scale=data.scale, num_levels=data.num_levels, m_init=data.m_init,
+        c=c, schedule=sched,
+        max_rounds=options.get("max_rounds", 32), tile=execution.tile,
+        interpret=execution.interpret,
+    )
+    return chosen, {"trials": trials, "batch_buckets": sched.buckets()}
+
+
+def _prep_kmeans_parallel(pts, rng, *, resolution, options, execution):
+    # The only reusable artifact is the device upload itself (f32 copy).
+    return jnp.asarray(pts, jnp.float32)
+
+
+def _solve_kmeans_parallel(pts_dev, pts, k, rng, *, c, schedule, options,
+                           execution):
+    from repro.core.seeding import _candidate_pool_to_centers
+
+    n = pts_dev.shape[0]
+    oversample = options.get("oversample")
+    ell = float(oversample) if oversample is not None else 2.0 * k
+    cap = int(min(n, max(8, 4 * ell)))
+    key = jax.random.key(int(rng.integers(2 ** 31)))
+    sel, _ = device_kmeans_parallel_rounds(
+        pts_dev, key, jnp.float32(ell),
+        rounds=options.get("rounds", 5), cap=cap,
+        interpret=execution.interpret,
+    )
+    cand = np.flatnonzero(np.asarray(jax.block_until_ready(sel)))
+    idx, pool = _candidate_pool_to_centers(pts, cand, k, rng)
+    return idx, {"pool_size": pool, "num_candidates": pool}
+
+
+def _register():
+    from repro.core import registry, seeding
+
+    impls = {
+        "fastkmeans++": registry.BackendImpl(
+            run=device_fast_kmeanspp_seeder, device_native=True,
+            prepare=_prep_fastkmeanspp, solve=_solve_fastkmeanspp),
+        "rejection": registry.BackendImpl(
+            run=device_rejection_seeder, device_native=True,
+            prepare=_prep_rejection, solve=_solve_rejection),
+        # kmeans|| is NOT device_native: the oversampling rounds are one jit
+        # program but the weighted recluster runs host-side per fit.
+        "kmeans||": registry.BackendImpl(
+            run=device_kmeans_parallel_seeder, device_native=False,
+            prepare=_prep_kmeans_parallel, solve=_solve_kmeans_parallel),
+    }
+    for name, impl in impls.items():
+        registry.register_backend(name, "device", impl,
+                                  legacy_registry=seeding.SEEDERS)
 
 
 _register()

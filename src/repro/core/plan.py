@@ -1,0 +1,626 @@
+"""Plan/execute API: compile a clustering problem once, fit it many times.
+
+The serving-grade entry point (ROADMAP north star: many problems fitted
+repeatedly on the same data):
+
+    spec = ClusterSpec(k=64, seeder="rejection", seed=0)
+    plan = ClusterPlan(spec, ExecutionSpec(backend="device"))
+    plan.prepare(points)          # host-side artifacts, cached by fingerprint
+    res  = plan.fit()             # bit-for-bit the legacy fit() seeding
+    res2 = plan.refit(seed=7)     # NO re-prep, NO re-trace: solve stage only
+    batch = plan.fit_batch([0, 1, 2, 3])   # one vmapped program, 4 seeds
+
+Three stages:
+
+  * **plan** — `ClusterSpec` (algorithm parameters) + `ExecutionSpec`
+    (backend/mesh/dtype placement) are frozen, hashable dataclasses; a
+    `ClusterPlan` binds them to one `BackendImpl` from the typed registry.
+  * **prepare** — the O(nd log Δ) host work (Appendix-F quantisation,
+    multi-tree embedding codes, LSH bucket keys, device upload/padding) runs
+    once per *data fingerprint* and is cached on the plan.  The rng draws it
+    consumes are snapshotted so `fit()` replays the legacy stream exactly.
+  * **execute** — `fit` / `refit` / `fit_batch` run only the sampling stage:
+    the jit programs are cached by (shapes, statics) so repeated executes
+    never re-trace (`tracing.TRACE_COUNTS` is the test-visible proof).
+
+Results are device-resident `FitResult` pytrees (jax arrays; `.to_numpy()`
+/ `.block_until_ready()` adapters, jitted `.predict`).  The legacy
+`fit(points, KMeansConfig(...))` facade in `core.api` remains bit-for-bit
+compatible and is implemented against the same registry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+import time
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import registry
+from repro.core.batch_schedule import BatchSchedule
+from repro.core.lloyd import lloyd
+from repro.core.preprocess import quantize
+from repro.core.registry import BACKENDS, get_seeder_spec
+
+__all__ = [
+    "ClusterSpec",
+    "ExecutionSpec",
+    "ClusterPlan",
+    "FitResult",
+    "ensure_host_f64",
+    "data_fingerprint",
+]
+
+
+# ---------------------------------------------------------------------------
+# Input adaptation (ISSUE 4 satellite): no unconditional float64 copy.
+# ---------------------------------------------------------------------------
+
+def ensure_host_f64(points) -> np.ndarray:
+    """Float64 C-contiguous host array of `points` without gratuitous copies.
+
+    Already-conforming numpy inputs are returned *as is* (zero copy — the
+    pipelines only ever read them); other numpy inputs pay exactly one
+    dtype/layout conversion; jax arrays pay exactly one device->host
+    transfer (the device-resident original can still be reused on device,
+    see `ClusterPlan`).
+    """
+    if isinstance(points, np.ndarray):
+        if points.dtype == np.float64 and points.flags.c_contiguous:
+            return points
+        return np.ascontiguousarray(points, dtype=np.float64)
+    arr = np.asarray(points)  # one transfer for jax arrays
+    if arr.dtype == np.float64 and arr.flags.c_contiguous:
+        return arr
+    return np.ascontiguousarray(arr, dtype=np.float64)
+
+
+_FULL_HASH_BYTES = 1 << 22          # full-hash threshold for device arrays
+_SAMPLE_ROWS = 4096
+
+
+def data_fingerprint(points) -> str:
+    """Content fingerprint keying the prepare cache.
+
+    Host (numpy) arrays hash their full bytes — blake2b streams at GB/s,
+    negligible next to the O(nd log Δ) prepare work the cache avoids.
+    Device (jax) arrays above 4 MiB avoid a full transfer: a strided row
+    sample crosses to the host, plus per-column and total sums computed
+    on-device — so any row mutation (even off the sample stride) changes
+    the fingerprint.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    shape = tuple(int(s) for s in points.shape)
+    h.update(repr((shape, str(points.dtype))).encode())
+    nbytes = int(np.prod(shape, dtype=np.int64)) * points.dtype.itemsize
+    if isinstance(points, np.ndarray) or nbytes <= _FULL_HASH_BYTES \
+            or not shape:
+        h.update(np.ascontiguousarray(points).tobytes())
+    else:
+        step = max(1, shape[0] // _SAMPLE_ROWS)
+        h.update(np.asarray(points[::step]).tobytes())
+        h.update(np.asarray(jnp.sum(points, axis=0,
+                                    dtype=jnp.float64
+                                    if jax.config.jax_enable_x64
+                                    else jnp.float32)).tobytes())
+        h.update(np.asarray(points[-1]).tobytes())
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Frozen, hashable specs: they key jit-program and prepare caches directly.
+# ---------------------------------------------------------------------------
+
+def _freeze_options(options) -> tuple:
+    if isinstance(options, dict):
+        return tuple(sorted(options.items()))
+    return tuple(options)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """Algorithm parameters: *what* to solve.
+
+    Frozen + hashable (the `options` mapping is canonicalised to a sorted
+    tuple of pairs) so a spec can key program caches directly.
+    """
+
+    k: int
+    seeder: str = "rejection"           # a `registry.SEEDER_SPECS` key
+    c: float = 2.0                      # LSH approximation factor
+    schedule: Optional[BatchSchedule] = None
+    lloyd_iters: int = 0                # 0 = seeding only (paper experiments)
+    quantize: bool = True               # Appendix-F aspect-ratio control
+    seed: int = 0
+    options: tuple = ()                 # extra seeder kwargs, (key, value)*
+
+    def __post_init__(self):
+        object.__setattr__(self, "options", _freeze_options(self.options))
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+
+    def options_dict(self) -> dict:
+        return dict(self.options)
+
+    def replace(self, **changes) -> "ClusterSpec":
+        return dataclasses.replace(self, **changes)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionSpec:
+    """Execution placement: *where/how* to solve.
+
+    Frozen + hashable.  `mesh=None` on the sharded backend resolves to
+    `launch.mesh.make_seeding_mesh()` (all local devices) at plan build.
+    `dtype` is the device coordinate dtype ("float32" is what the Pallas
+    kernels are tuned for).  `donate=True` marks per-fit buffers donatable
+    on TPU builds (advisory off-TPU).
+    """
+
+    backend: str = "cpu"                # "cpu" | "device" | "sharded"
+    mesh: Any = None
+    dtype: str = "float32"
+    tile: int = 512
+    interpret: Optional[bool] = None
+    donate: bool = False
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; expected {BACKENDS}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class _ExecContext:
+    """ExecutionSpec with the mesh resolved — what backend adapters see."""
+
+    backend: str
+    mesh: Any
+    dtype: str
+    tile: int
+    interpret: Optional[bool]
+    donate: bool
+
+
+# ---------------------------------------------------------------------------
+# Device-resident results.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FitResult:
+    """Device-resident clustering result (a registered jax pytree).
+
+    `indices` / `centers` / `cost` are jax arrays living where the solve ran
+    (`fit_batch` stacks a leading batch axis on all three).  Nothing is
+    forced to the host: chain into further jit code directly, or use the
+    adapters below.  `centers` are in *original* coordinates regardless of
+    the quantised seeding space.
+    """
+
+    indices: Any                  # (k,) int32 — or (B, k) from fit_batch
+    centers: Any                  # (k, d)     — or (B, k, d)
+    cost: Any                     # scalar f32 — or (B,)
+    k: int = 0
+    prepare_seconds: float = 0.0  # 0.0 on a cache hit: nothing re-prepped
+    solve_seconds: float = 0.0
+    extras: dict = dataclasses.field(default_factory=dict)
+
+    def block_until_ready(self) -> "FitResult":
+        jax.block_until_ready((self.indices, self.centers, self.cost))
+        return self
+
+    def to_numpy(self) -> "FitResult":
+        """Host copy: same FitResult shape with numpy arrays."""
+        return dataclasses.replace(
+            self,
+            indices=np.asarray(self.indices, dtype=np.int64),
+            centers=np.asarray(self.centers),
+            cost=float(np.asarray(self.cost))
+            if np.ndim(self.cost) == 0 else np.asarray(self.cost),
+        )
+
+    def predict(self, points) -> jax.Array:
+        """Nearest-center assignment as one jit program (cached by shape).
+
+        Distances use the expanded BLAS form in the centers' dtype
+        (float32 by default): on data with large common offsets prefer the
+        float64 host path (`repro.core.lloyd.assign`) — cancellation can
+        flip near-ties.
+        """
+        ctr = self.centers
+        if np.ndim(ctr) != 2:
+            raise ValueError("predict() needs a single-problem FitResult "
+                             "(index into a fit_batch result first)")
+        pts = jnp.asarray(points, dtype=ctr.dtype)
+        return _predict_program(pts, ctr)
+
+
+# Pytree registration: the arrays are children; aux carries only the
+# static, hashable `k` so FitResults work under jit (the jit cache hashes
+# the treedef).  Host metadata (timings, extras) intentionally does NOT
+# round-trip through tree transforms — a mapped/jitted FitResult carries
+# the transformed arrays and fresh empty metadata.
+jax.tree_util.register_pytree_node(
+    FitResult,
+    lambda r: ((r.indices, r.centers, r.cost), (r.k,)),
+    lambda aux, ch: FitResult(indices=ch[0], centers=ch[1], cost=ch[2],
+                              k=aux[0]),
+)
+
+
+def _pairwise_d2(points: jax.Array, centers: jax.Array) -> jax.Array:
+    """(n, k) squared distances, expanded BLAS form (shared by the predict
+    and cost programs so any numerical fix lands in both)."""
+    d2 = (
+        jnp.sum(points ** 2, axis=1, keepdims=True)
+        - 2.0 * points @ centers.T
+        + jnp.sum(centers ** 2, axis=1)[None, :]
+    )
+    return jnp.maximum(d2, 0.0)
+
+
+@jax.jit
+def _predict_program(points: jax.Array, centers: jax.Array) -> jax.Array:
+    return jnp.argmin(_pairwise_d2(points, centers), axis=1).astype(
+        jnp.int32)
+
+
+@jax.jit
+def _cost_program(points: jax.Array, centers: jax.Array) -> jax.Array:
+    return jnp.sum(jnp.min(_pairwise_d2(points, centers), axis=1))
+
+
+# ---------------------------------------------------------------------------
+# Batched (vmapped) device programs for fit_batch.  Outer jit caches by
+# (shapes incl. batch size, statics); the per-lane results are bit-identical
+# to solo refit(seed=s) runs (asserted in tests/test_plan.py).
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "scale", "num_levels", "m_init", "c", "schedule",
+                     "max_rounds", "tile", "interpret"),
+)
+def _batched_rejection(codes_lo, codes_hi, points, keys_lo, keys_hi, k,
+                       key_bits, *, scale, num_levels, m_init, c, schedule,
+                       max_rounds, tile, interpret):
+    from repro.core.device_seeding import device_rejection_sampling
+
+    def lane(bits):
+        return device_rejection_sampling(
+            codes_lo, codes_hi, points, keys_lo, keys_hi, k,
+            jax.random.wrap_key_data(bits),
+            scale=scale, num_levels=num_levels, m_init=m_init, c=c,
+            schedule=schedule, max_rounds=max_rounds, tile=tile,
+            interpret=interpret,
+        )
+
+    return jax.vmap(lane)(key_bits)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "scale", "num_levels", "m_init", "tile",
+                     "interpret"),
+)
+def _batched_fastkmeanspp(codes_lo, codes_hi, k, key_bits, *, scale,
+                          num_levels, m_init, tile, interpret):
+    from repro.core.device_seeding import device_fast_kmeanspp
+
+    def lane(bits):
+        return device_fast_kmeanspp(
+            codes_lo, codes_hi, k, jax.random.wrap_key_data(bits),
+            scale=scale, num_levels=num_levels, m_init=m_init, tile=tile,
+            interpret=interpret,
+        )
+
+    return jax.vmap(lane)(key_bits)
+
+
+# ---------------------------------------------------------------------------
+# The plan.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Prepared:
+    """One data fingerprint's cached prepare-stage output."""
+
+    fingerprint: str
+    pts: np.ndarray                   # original coords, host float64
+    seed_pts: np.ndarray              # seeding-space coords (maybe quantised)
+    resolution: Optional[float]       # quantisation grid passed to seeders
+    artifacts: Any                    # BackendImpl.prepare output (or None)
+    rng_state: dict                   # np.Generator state after prep draws
+    prepare_seconds: float
+    points_dev: Any = None            # lazy device copy for gather/cost
+
+
+def _load_backend(backend: str) -> None:
+    """Importing a backend module registers its impls (idempotent)."""
+    if backend == "device":
+        import repro.core.device_seeding  # noqa: F401
+    elif backend == "sharded":
+        import repro.core.sharded_seeding  # noqa: F401
+    else:
+        import repro.core.seeding  # noqa: F401
+
+
+class ClusterPlan:
+    """A compiled clustering problem: prepare once, execute many times.
+
+    Construction validates the (seeder, backend) pair against the typed
+    registry and resolves the mesh; `prepare` caches host artifacts by data
+    fingerprint; `fit`/`refit`/`fit_batch` run the solve stage against the
+    cached artifacts and the backend's cached jit programs.
+    """
+
+    def __init__(self, cluster: ClusterSpec,
+                 execution: Optional[ExecutionSpec] = None):
+        if not isinstance(cluster, ClusterSpec):
+            raise TypeError(
+                f"expected ClusterSpec, got {type(cluster).__name__} "
+                "(legacy KMeansConfig goes through core.api.fit)"
+            )
+        execution = execution if execution is not None else ExecutionSpec()
+        _load_backend(execution.backend)
+        seeder_spec = get_seeder_spec(cluster.seeder)
+        self.cluster = cluster
+        self.execution = execution
+        self.caps = seeder_spec.caps
+        self.impl = seeder_spec.impl(execution.backend)
+        mesh = execution.mesh
+        if execution.backend == "sharded" and mesh is None:
+            from repro.launch.mesh import make_seeding_mesh
+
+            mesh = make_seeding_mesh()
+        self._ctx = _ExecContext(
+            backend=execution.backend, mesh=mesh, dtype=execution.dtype,
+            tile=execution.tile, interpret=execution.interpret,
+            donate=execution.donate,
+        )
+        self._prepared: dict[str, _Prepared] = {}
+        self._active: Optional[_Prepared] = None
+        self.stats = {"prepare_calls": 0, "prepare_hits": 0,
+                      "prepare_builds": 0, "solves": 0}
+
+    # -- prepare stage ------------------------------------------------------
+
+    def prepare(self, points) -> ClusterPlan:
+        """Build (or fetch) the host-side artifacts for `points`.
+
+        Keyed by `data_fingerprint`: re-preparing the same data is a cache
+        hit that does zero host work.  Returns the plan for chaining.
+        """
+        self.stats["prepare_calls"] += 1
+        fp = data_fingerprint(points)
+        prep = self._prepared.get(fp)
+        if prep is not None:
+            self.stats["prepare_hits"] += 1
+            self._active = prep
+            return self
+        t0 = time.perf_counter()
+        pts = ensure_host_f64(points)
+        rng = np.random.default_rng(self.cluster.seed)
+        options = self.cluster.options_dict()
+        seed_pts, resolution = pts, options.get("resolution")
+        if self.caps.needs_quantize and self.cluster.quantize:
+            q = quantize(pts, rng)
+            seed_pts = q.points
+            resolution = options.get("resolution", 1.0)
+        artifacts = None
+        if self.impl.preparable:
+            artifacts = self.impl.prepare(
+                seed_pts, rng, resolution=resolution, options=options,
+                execution=self._ctx,
+            )
+        prep = _Prepared(
+            fingerprint=fp, pts=pts, seed_pts=seed_pts,
+            resolution=resolution, artifacts=artifacts,
+            rng_state=rng.bit_generator.state,
+            prepare_seconds=time.perf_counter() - t0,
+        )
+        if isinstance(points, jax.Array) and str(points.dtype) == \
+                self._ctx.dtype and points.ndim == 2:
+            prep.points_dev = points       # reuse: no host round-trip
+        self._prepared[fp] = prep
+        self._active = prep
+        self.stats["prepare_builds"] += 1
+        return self
+
+    def cache_info(self) -> dict:
+        """Prepare-cache statistics (tests assert hit/build counts)."""
+        return dict(self.stats, entries=len(self._prepared))
+
+    def _require(self, points) -> _Prepared:
+        if points is not None:
+            self.prepare(points)
+        if self._active is None:
+            raise RuntimeError(
+                "no prepared data: call plan.prepare(points) or "
+                "plan.fit(points) first"
+            )
+        return self._active
+
+    def _points_device(self, prep: _Prepared) -> jax.Array:
+        if prep.points_dev is None:
+            prep.points_dev = jnp.asarray(prep.pts,
+                                          jnp.dtype(self._ctx.dtype))
+        return prep.points_dev
+
+    # -- execute stage ------------------------------------------------------
+
+    def fit(self, points=None, *, seed: Optional[int] = None) -> FitResult:
+        """Seed (+ optional Lloyd) on the prepared data.
+
+        With `seed` unset (or equal to the spec's), the prepare-time rng
+        snapshot is replayed so the result is bit-for-bit the legacy
+        `fit(points, KMeansConfig(...))` seeding.  A different `seed`
+        reseeds the *solve stage only* (prepared structures are part of the
+        plan — same semantics as `refit`).
+        """
+        prep = self._require(points)
+        return self._execute(prep, self.cluster.k, seed)
+
+    def refit(self, *, k: Optional[int] = None,
+              seed: Optional[int] = None) -> FitResult:
+        """Re-run the solve stage on the already-prepared data.
+
+        On backends with a cached prepare split (see the capability table:
+        device/sharded) this does zero host-side re-preparation, and
+        changing only `seed` also re-traces nothing (the jit program is
+        cached — changing `k` compiles one new program per distinct value,
+        then caches).  CPU algorithms intermix structure build and sampling
+        in one pass, so only the quantisation is cached for them and each
+        refit rebuilds its tree/LSH structures.
+        """
+        if self._active is None:
+            raise RuntimeError("refit() needs a prior prepare()/fit(points)")
+        return self._execute(self._active, k or self.cluster.k, seed)
+
+    def _solve_rng(self, prep: _Prepared,
+                   seed: Optional[int]) -> np.random.Generator:
+        rng = np.random.default_rng(
+            self.cluster.seed if seed is None else seed)
+        if seed is None or seed == self.cluster.seed:
+            # Replay: jump to the post-prepare state of the legacy stream.
+            rng.bit_generator.state = prep.rng_state
+        return rng
+
+    def _execute(self, prep: _Prepared, k: int,
+                 seed: Optional[int]) -> FitResult:
+        t0 = time.perf_counter()
+        self.stats["solves"] += 1
+        rng = self._solve_rng(prep, seed)
+        options = self.cluster.options_dict()
+        options.pop("resolution", None)
+        if self.impl.preparable:
+            idx_raw, extras = self.impl.solve(
+                prep.artifacts, prep.seed_pts, k, rng,
+                c=self.cluster.c, schedule=self.cluster.schedule,
+                options=options, execution=self._ctx,
+            )
+        else:
+            # No cached split (cpu algorithms): run the legacy seed_fn with
+            # capability-driven kwargs — identical to the old fit() facade.
+            if prep.resolution is not None:
+                options.setdefault("resolution", prep.resolution)
+            if self.caps.accepts_c:
+                options.setdefault("c", self.cluster.c)
+            if self.caps.accepts_schedule and self.cluster.schedule \
+                    is not None:
+                options.setdefault("schedule", self.cluster.schedule)
+            res = self.impl.run(prep.seed_pts, k, rng, **options)
+            idx_raw = res.indices
+            extras = dict(res.extras)
+            extras.setdefault("num_candidates", res.num_candidates)
+        return self._finish(prep, k, idx_raw, extras, t0)
+
+    def _finish(self, prep: _Prepared, k: int, idx_raw, extras: dict,
+                t0: float) -> FitResult:
+        idx = jnp.asarray(idx_raw, jnp.int32)
+        pts_dev = self._points_device(prep)
+        centers = jnp.take(pts_dev, idx, axis=0)
+        if self.cluster.lloyd_iters > 0:
+            refinement = lloyd(prep.pts,
+                               prep.pts[np.asarray(idx, dtype=np.int64)],
+                               max_iters=self.cluster.lloyd_iters)
+            centers = jnp.asarray(refinement.centers,
+                                  jnp.dtype(self._ctx.dtype))
+            cost = jnp.asarray(refinement.cost, jnp.float32)
+            extras = dict(extras, lloyd_iterations=refinement.iterations)
+        else:
+            cost = _cost_program(pts_dev, centers)
+        return FitResult(
+            indices=idx, centers=centers, cost=cost, k=k,
+            prepare_seconds=prep.prepare_seconds,
+            solve_seconds=time.perf_counter() - t0,
+            extras=extras,
+        )
+
+    # -- multi-problem execution -------------------------------------------
+
+    def fit_batch(self, seeds: Sequence[int], points=None) -> FitResult:
+        """Solve B independent seeding problems on one prepared dataset.
+
+        Returns a stacked `FitResult` (leading batch axis on indices /
+        centers / cost).  Lane i is bit-identical to `refit(seed=seeds[i])`.
+        Device-native seeders run all lanes as ONE vmapped jit program
+        (MoE-router-style multi-problem seeding); other backends loop over
+        the cached solo program — either way nothing is re-prepared and,
+        after the first batch shape, nothing re-traces.
+        """
+        prep = self._require(points)
+        seeds = [int(s) for s in seeds]
+        if not seeds:
+            raise ValueError("fit_batch() needs at least one seed")
+        if (self.impl.device_native and self._ctx.backend == "device"
+                and self.cluster.lloyd_iters == 0):
+            return self._fit_batch_vmapped(prep, seeds)
+        return _stack_results([self.refit(seed=s) for s in seeds], seeds)
+
+    def _fit_batch_vmapped(self, prep: _Prepared,
+                           seeds: list[int]) -> FitResult:
+        t0 = time.perf_counter()
+        self.stats["solves"] += len(seeds)
+        key_bits = jnp.stack([
+            jax.random.key_data(jax.random.key(
+                int(self._solve_rng(prep, s).integers(2 ** 31))))
+            for s in seeds
+        ])
+        k = self.cluster.k
+        options = self.cluster.options_dict()
+        extras: dict = {"seeds": tuple(seeds), "vmapped": True}
+        if self.cluster.seeder == "rejection":
+            data = prep.artifacts
+            sched = _resolve_schedule(self.cluster.schedule,
+                                      options.get("batch"))
+            idx, trials = _batched_rejection(
+                data.codes_lo, data.codes_hi, data.points,
+                data.keys_lo, data.keys_hi, k, key_bits,
+                scale=data.scale, num_levels=data.num_levels,
+                m_init=data.m_init, c=self.cluster.c, schedule=sched,
+                max_rounds=options.get("max_rounds", 32),
+                tile=self._ctx.tile, interpret=self._ctx.interpret,
+            )
+            extras["trials"] = trials
+        else:  # fastkmeans++
+            lo, hi, meta = prep.artifacts
+            idx = _batched_fastkmeanspp(
+                lo, hi, k, key_bits,
+                scale=meta["scale"], num_levels=meta["num_levels"],
+                m_init=meta["m_init"], tile=self._ctx.tile,
+                interpret=self._ctx.interpret,
+            )
+        pts_dev = self._points_device(prep)
+        centers = jnp.take(pts_dev, idx, axis=0)        # (B, k, d)
+        cost = jax.vmap(lambda c: _cost_program(pts_dev, c))(centers)
+        return FitResult(
+            indices=idx, centers=centers, cost=cost, k=k,
+            prepare_seconds=prep.prepare_seconds,
+            solve_seconds=time.perf_counter() - t0,
+            extras=extras,
+        )
+
+
+def _resolve_schedule(schedule, batch):
+    from repro.core.device_seeding import resolve_schedule
+
+    return resolve_schedule(schedule, batch)
+
+
+def _stack_results(results: list[FitResult], seeds: list[int]) -> FitResult:
+    return FitResult(
+        indices=jnp.stack([r.indices for r in results]),
+        centers=jnp.stack([r.centers for r in results]),
+        cost=jnp.stack([jnp.asarray(r.cost) for r in results]),
+        k=results[0].k,
+        prepare_seconds=results[0].prepare_seconds,
+        solve_seconds=float(sum(r.solve_seconds for r in results)),
+        extras={"seeds": tuple(seeds), "vmapped": False},
+    )

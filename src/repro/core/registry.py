@@ -1,0 +1,182 @@
+"""Typed seeder registry: one `SeederSpec` per algorithm, declaring its
+per-backend implementations and capabilities.
+
+This replaces the string-keyed ``SEEDERS["<name>/<backend>"]`` composite-key
+dispatch plus the per-call ``config.seeder == "rejection"`` special-casing
+that used to live in `core.api.fit`: an algorithm *declares* whether it
+wants the Appendix-F quantisation, whether it takes the LSH approximation
+factor ``c`` or a `BatchSchedule`, and — per backend — whether it runs as a
+single device-native jit program and whether it exposes a cached
+prepare/solve split for the `ClusterPlan` path.
+
+Registration happens where the implementations live: `core.seeding`
+registers the faithful CPU algorithms, `core.device_seeding` the
+single-device jit programs, `core.sharded_seeding` the shard_map programs.
+This module has no dependencies on any of them, so it can be imported from
+everywhere without cycles.
+
+The legacy ``SEEDERS`` dict (including the composite ``"<name>/<backend>"``
+keys) is still populated by the same registration calls, so existing
+callers and the identity assertions in the test suite keep working.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+__all__ = [
+    "BACKENDS",
+    "SeederCaps",
+    "BackendImpl",
+    "SeederSpec",
+    "SEEDER_SPECS",
+    "register_seeder",
+    "register_backend",
+    "get_seeder_spec",
+    "resolve",
+    "capability_table",
+]
+
+BACKENDS = ("cpu", "device", "sharded")
+
+
+@dataclasses.dataclass(frozen=True)
+class SeederCaps:
+    """Algorithm-level capabilities (identical across backends).
+
+    needs_quantize:
+        The algorithm runs in the Appendix-F quantised space when the caller
+        enables quantisation (the paper's two tree-embedding algorithms).
+    accepts_c:
+        Takes the LSH approximation factor ``c`` (rejection sampling).
+    accepts_schedule:
+        Takes a `BatchSchedule` for its speculative candidate batches.
+    """
+
+    needs_quantize: bool = False
+    accepts_c: bool = False
+    accepts_schedule: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendImpl:
+    """One backend's implementation of a seeder.
+
+    run:
+        The host-facing ``seed_fn(points, k, rng, **kw) -> SeedingResult``
+        every backend provides; the legacy `fit` facade calls this.
+    device_native:
+        The solve stage is one jit device program (no host round-trips).
+    prepare / solve:
+        The cached-plan split.  ``prepare(pts, rng, *, resolution, options,
+        execution) -> artifacts`` builds the host-side structures (tree
+        embedding codes, LSH bucket keys, device uploads), consuming from
+        ``rng`` exactly the draws the composed ``run`` would, so
+        `ClusterPlan.fit` reproduces ``run`` bit-for-bit.  ``solve(
+        artifacts, k, rng, *, c, schedule, options, execution) ->
+        (indices, extras)`` runs the sampling stage only.  ``None`` means
+        the backend has no cached split (the plan falls back to ``run``).
+    """
+
+    run: Callable
+    device_native: bool = False
+    prepare: Optional[Callable] = None
+    solve: Optional[Callable] = None
+
+    @property
+    def preparable(self) -> bool:
+        return self.prepare is not None and self.solve is not None
+
+
+@dataclasses.dataclass
+class SeederSpec:
+    """An algorithm plus its per-backend implementations."""
+
+    name: str
+    caps: SeederCaps
+    doc: str = ""
+    impls: dict = dataclasses.field(default_factory=dict)
+
+    def impl(self, backend: str) -> BackendImpl:
+        if backend not in BACKENDS:
+            raise KeyError(
+                f"unknown backend {backend!r}; expected {BACKENDS}"
+            )
+        found = self.impls.get(backend)
+        if found is None:
+            raise KeyError(
+                f"seeder {self.name!r} has no {backend} implementation; "
+                f"available: {sorted(self.impls)}"
+            )
+        return found
+
+    @property
+    def backends(self) -> tuple[str, ...]:
+        return tuple(b for b in BACKENDS if b in self.impls)
+
+
+SEEDER_SPECS: dict[str, SeederSpec] = {}
+
+
+def register_seeder(name: str, caps: SeederCaps | None = None,
+                    doc: str = "") -> SeederSpec:
+    """Create (or fetch) the spec for `name`."""
+    spec = SEEDER_SPECS.get(name)
+    if spec is None:
+        spec = SeederSpec(name=name, caps=caps or SeederCaps(), doc=doc)
+        SEEDER_SPECS[name] = spec
+    return spec
+
+
+def register_backend(name: str, backend: str, impl: BackendImpl,
+                     *, legacy_registry: dict | None = None) -> None:
+    """Attach one backend implementation to seeder `name`.
+
+    `legacy_registry` (the flat ``SEEDERS`` dict) also receives the
+    composite ``"<name>/<backend>"`` key (bare ``name`` for cpu) so the
+    string-keyed lookups stay valid during the deprecation window.
+    """
+    if backend not in BACKENDS:
+        raise KeyError(f"unknown backend {backend!r}; expected {BACKENDS}")
+    spec = register_seeder(name)
+    spec.impls.setdefault(backend, impl)
+    if legacy_registry is not None:
+        key = name if backend == "cpu" else f"{name}/{backend}"
+        legacy_registry.setdefault(key, impl.run)
+
+
+def get_seeder_spec(name: str) -> SeederSpec:
+    spec = SEEDER_SPECS.get(name)
+    if spec is None:
+        raise KeyError(
+            f"unknown seeder {name!r}; available: {sorted(SEEDER_SPECS)}"
+        )
+    return spec
+
+
+def resolve(name: str, backend: str = "cpu") -> Callable:
+    """The host-facing ``seed_fn`` for (algorithm, backend)."""
+    return get_seeder_spec(name).impl(backend).run
+
+
+def capability_table() -> str:
+    """Markdown capability matrix generated from the live registry
+    (docs/api.md embeds the output; a test keeps the doc in sync)."""
+    header = ("| seeder | backends | device-native | cached prepare "
+              "| quantize | accepts `c` | accepts schedule |")
+    sep = "|---" * 7 + "|"
+    rows = [header, sep]
+    for name in sorted(SEEDER_SPECS):
+        spec = SEEDER_SPECS[name]
+        native = [b for b in spec.backends if spec.impls[b].device_native]
+        prep = [b for b in spec.backends if spec.impls[b].preparable]
+        rows.append(
+            f"| `{name}` | {', '.join(spec.backends)} "
+            f"| {', '.join(native) or '—'} "
+            f"| {', '.join(prep) or '—'} "
+            f"| {'yes' if spec.caps.needs_quantize else '—'} "
+            f"| {'yes' if spec.caps.accepts_c else '—'} "
+            f"| {'yes' if spec.caps.accepts_schedule else '—'} |"
+        )
+    return "\n".join(rows)

@@ -40,9 +40,20 @@ __all__ = [
 class SeedingResult:
     centers: np.ndarray          # (k, d) chosen center coordinates.
     indices: np.ndarray          # (k,) indices into the input point set.
-    seconds: float               # wall-clock seeding time.
+    seconds: float               # wall-clock seeding time (prepare + solve).
     num_candidates: int = 0      # rejection loop iterations (paper Lemma 5.3).
+    # Stage split (ISSUE 4): `prepare_seconds` is the host-side structure
+    # build (multi-tree embedding, LSH keys, device upload) that
+    # `ClusterPlan.prepare` caches across fits; `solve_seconds` is the
+    # sampling stage that repeats per fit.  They sum to `seconds`.
+    prepare_seconds: float = 0.0
+    solve_seconds: float = 0.0
     extras: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        # Seeders without a meaningful split report everything as solve.
+        if self.prepare_seconds == 0.0 and self.solve_seconds == 0.0:
+            self.solve_seconds = self.seconds
 
 
 def clustering_cost(
@@ -132,16 +143,20 @@ def fast_kmeanspp(
     pts = np.asarray(points, dtype=np.float64)
     mt = sampler or MultiTreeSampler(pts, seed=int(rng.integers(2 ** 31)),
                                      resolution=resolution)
+    t_prep = time.perf_counter() - t0
     chosen = np.empty(k, dtype=np.int64)
     for i in range(k):
         x = int(rng.integers(mt.n)) if i == 0 else mt.sample(rng)
         chosen[i] = x
         mt.open(x)
+    seconds = time.perf_counter() - t0
     return SeedingResult(
         centers=pts[chosen].copy(),
         indices=chosen,
-        seconds=time.perf_counter() - t0,
+        seconds=seconds,
         num_candidates=k,
+        prepare_seconds=t_prep,
+        solve_seconds=seconds - t_prep,
     )
 
 
@@ -204,6 +219,7 @@ def rejection_sampling(
         seed=int(rng.integers(2 ** 31)),
         capacity=max(k, 16),
     )
+    t_prep = time.perf_counter() - t0
     chosen = np.empty(k, dtype=np.int64)
     c2 = float(c) ** 2
     trials = 0
@@ -268,11 +284,14 @@ def rejection_sampling(
             opened += 1
             mt.open(x)
             lsh.insert(pts[x])
+    seconds = time.perf_counter() - t0
     return SeedingResult(
         centers=pts[chosen].copy(),
         indices=chosen,
-        seconds=time.perf_counter() - t0,
+        seconds=seconds,
         num_candidates=trials,
+        prepare_seconds=t_prep,
+        solve_seconds=seconds - t_prep,
         extras={"trials_per_center": trials / k},
     )
 
@@ -498,3 +517,35 @@ SEEDERS: dict[str, Callable[..., SeedingResult]] = {
     "afkmc2": afkmc2,
     "uniform": uniform_sampling,
 }
+
+
+# -- typed registry (core.registry): declare each algorithm's capabilities
+# once, attach the faithful CPU implementations.  The device / sharded
+# modules attach their backends (and prepare/solve splits) on import.
+
+def _register_cpu():
+    from repro.core import registry
+
+    register = registry.register_seeder
+    register("kmeans++", registry.SeederCaps(),
+             doc="exact D^2 sampling (Arthur & Vassilvitskii 2007)")
+    register("fastkmeans++",
+             registry.SeederCaps(needs_quantize=True),
+             doc="Algorithm 3: D^2 sampling in the multi-tree metric")
+    register("rejection",
+             registry.SeederCaps(needs_quantize=True, accepts_c=True,
+                                 accepts_schedule=True),
+             doc="Algorithm 4: multi-tree proposal + LSH-corrected accept")
+    register("kmeans||", registry.SeederCaps(),
+             doc="k-means|| oversampling + weighted recluster (Bahmani 2012)")
+    register("afkmc2", registry.SeederCaps(),
+             doc="AFK-MC^2 MCMC approximate D^2 seeding (Bachem 2016)")
+    register("uniform", registry.SeederCaps(), doc="uniform baseline")
+    for name, fn in list(SEEDERS.items()):
+        if "/" not in name:
+            registry.register_backend(name, "cpu",
+                                      registry.BackendImpl(run=fn),
+                                      legacy_registry=SEEDERS)
+
+
+_register_cpu()

@@ -42,7 +42,6 @@ in lockstep.
 
 from __future__ import annotations
 
-import collections
 import functools
 import time
 
@@ -62,6 +61,7 @@ from repro.core.device_seeding import (
     resolve_schedule,
 )
 from repro.core.sample_tree import TiledSampleTree
+from repro.core.tracing import TRACE_COUNTS
 from repro.distributed.sharding import _mesh_size, points_axis
 from repro.kernels.ops import (
     lsh_bucket_accept,
@@ -83,11 +83,11 @@ __all__ = [
     "program_cache_info",
 ]
 
-# Incremented inside the shard_map program bodies, which only execute while
-# jax traces them — so this counts *traces*, not calls.  Tests use it to
-# assert that repeated fits with identical static args reuse the cached
-# compiled program instead of re-tracing.
-TRACE_COUNTS: collections.Counter = collections.Counter()
+# TRACE_COUNTS (re-exported from `repro.core.tracing`, shared with the
+# single-device programs): incremented inside the shard_map program bodies,
+# which only execute while jax traces them — so each key counts *traces*,
+# not calls.  Tests use it to assert that repeated fits with identical
+# static args reuse the cached compiled program instead of re-tracing.
 
 
 def program_cache_info():
@@ -542,6 +542,7 @@ def sharded_fast_kmeanspp_seeder(points, k, rng, *, resolution=None,
     n_pad = _padded_for_mesh(n, mesh, tile)
     lo = _pad_axis(lo, 2, n_pad)
     hi = _pad_axis(hi, 2, n_pad)
+    t_prep = time.perf_counter() - t0
     bits = jax.random.key_data(jax.random.key(int(rng.integers(2 ** 31))))
     chosen = sharded_fast_kmeanspp(
         lo, hi, k, bits, mesh=mesh,
@@ -549,11 +550,14 @@ def sharded_fast_kmeanspp_seeder(points, k, rng, *, resolution=None,
         m_init=meta["m_init"], n_real=n, tile=tile, interpret=interpret,
     )
     idx = np.asarray(jax.block_until_ready(chosen), dtype=np.int64)
+    seconds = time.perf_counter() - t0
     return SeedingResult(
         centers=pts[idx].copy(),
         indices=idx,
-        seconds=time.perf_counter() - t0,
+        seconds=seconds,
         num_candidates=k,
+        prepare_seconds=t_prep,
+        solve_seconds=seconds - t_prep,
         extras={"backend": "sharded", "devices": mesh.devices.size},
     )
 
@@ -582,6 +586,7 @@ def sharded_rejection_seeder(points, k, rng, *, c=1.2, lsh_r=None,
     pp = _pad_axis(data.points, 0, n_pad)
     klo = _pad_axis(data.keys_lo, 1, n_pad)
     khi = _pad_axis(data.keys_hi, 1, n_pad)
+    t_prep = time.perf_counter() - t0
     bits = jax.random.key_data(jax.random.key(int(rng.integers(2 ** 31))))
     chosen, trials = sharded_rejection_sampling(
         lo, hi, pp, klo, khi, k, bits, mesh=mesh,
@@ -592,11 +597,14 @@ def sharded_rejection_seeder(points, k, rng, *, c=1.2, lsh_r=None,
     idx = np.asarray(jax.block_until_ready(chosen), dtype=np.int64)
     trials = np.asarray(trials, dtype=np.int64)
     total = int(trials.sum())
+    seconds = time.perf_counter() - t0
     return SeedingResult(
         centers=pts[idx].copy(),
         indices=idx,
-        seconds=time.perf_counter() - t0,
+        seconds=seconds,
         num_candidates=total,
+        prepare_seconds=t_prep,
+        solve_seconds=seconds - t_prep,
         extras={
             "backend": "sharded",
             "devices": mesh.devices.size,
@@ -655,11 +663,121 @@ SHARDED_SEEDERS = {
 }
 
 
-def _register():
-    from repro.core import seeding
+# ---------------------------------------------------------------------------
+# Cached prepare/solve split for `core.plan.ClusterPlan` (typed registry).
+# Same rng-draw contract as the device adapters: prepare consumes exactly
+# the draws the composed legacy seeder makes before its program key; solve
+# draws the key (and any post-program host draws).  The mesh/tile come from
+# the plan's resolved execution context, so the padded artifacts — and the
+# lru-cached shard_map programs keyed on them — are reused across fits.
+# ---------------------------------------------------------------------------
 
-    for name, fn in SHARDED_SEEDERS.items():
-        seeding.SEEDERS.setdefault(f"{name}/sharded", fn)
+def _prep_fastkmeanspp_sh(pts, rng, *, resolution, options, execution):
+    lo, hi, meta = prepare_embedding(pts, seed=int(rng.integers(2 ** 31)),
+                                     resolution=resolution)
+    n_pad = _padded_for_mesh(len(pts), execution.mesh, execution.tile)
+    return (_pad_axis(lo, 2, n_pad), _pad_axis(hi, 2, n_pad), meta, len(pts))
+
+
+def _solve_fastkmeanspp_sh(artifacts, pts, k, rng, *, c, schedule, options,
+                           execution):
+    lo, hi, meta, n = artifacts
+    bits = jax.random.key_data(jax.random.key(int(rng.integers(2 ** 31))))
+    chosen = sharded_fast_kmeanspp(
+        lo, hi, k, bits, mesh=execution.mesh,
+        scale=meta["scale"], num_levels=meta["num_levels"],
+        m_init=meta["m_init"], n_real=n, tile=execution.tile,
+        interpret=execution.interpret,
+    )
+    return chosen, {"num_candidates": k,
+                    "devices": execution.mesh.devices.size}
+
+
+def _prep_rejection_sh(pts, rng, *, resolution, options, execution):
+    data = prepare_rejection(
+        pts, seed=int(rng.integers(2 ** 31)), resolution=resolution,
+        lsh_r=options.get("lsh_r"),
+        num_tables=options.get("num_tables", 15),
+        hashes_per_table=options.get("hashes_per_table", 1),
+    )
+    n_pad = _padded_for_mesh(len(pts), execution.mesh, execution.tile)
+    import dataclasses as _dc
+
+    padded = _dc.replace(
+        data,
+        codes_lo=_pad_axis(data.codes_lo, 2, n_pad),
+        codes_hi=_pad_axis(data.codes_hi, 2, n_pad),
+        points=_pad_axis(data.points, 0, n_pad),
+        keys_lo=_pad_axis(data.keys_lo, 1, n_pad),
+        keys_hi=_pad_axis(data.keys_hi, 1, n_pad),
+    )
+    return padded, len(pts)
+
+
+def _solve_rejection_sh(artifacts, pts, k, rng, *, c, schedule, options,
+                        execution):
+    data, n = artifacts
+    sched = resolve_schedule(schedule, options.get("batch"))
+    bits = jax.random.key_data(jax.random.key(int(rng.integers(2 ** 31))))
+    chosen, trials = sharded_rejection_sampling(
+        data.codes_lo, data.codes_hi, data.points,
+        data.keys_lo, data.keys_hi, k, bits, mesh=execution.mesh,
+        scale=data.scale, num_levels=data.num_levels, m_init=data.m_init,
+        n_real=n, c=c, schedule=sched,
+        max_rounds=options.get("max_rounds", 32), tile=execution.tile,
+        interpret=execution.interpret,
+    )
+    return chosen, {"trials": trials, "batch_buckets": sched.buckets(),
+                    "devices": execution.mesh.devices.size}
+
+
+def _prep_kmeans_parallel_sh(pts, rng, *, resolution, options, execution):
+    n_pad = _padded_for_mesh(len(pts), execution.mesh, execution.tile)
+    pp = _pad_axis(jnp.asarray(pts, jnp.float32), 0, n_pad)
+    return pp, len(pts)
+
+
+def _solve_kmeans_parallel_sh(artifacts, pts, k, rng, *, c, schedule,
+                              options, execution):
+    from repro.core.seeding import _candidate_pool_to_centers
+
+    pp, n = artifacts
+    mesh = execution.mesh
+    d_ax = _mesh_size(mesh, points_axis(mesh))
+    oversample = options.get("oversample")
+    ell = float(oversample) if oversample is not None else 2.0 * k
+    n_loc = pp.shape[0] // d_ax
+    cap_loc = int(min(n_loc, max(8, 2 * ell)))
+    bits = jax.random.key_data(jax.random.key(int(rng.integers(2 ** 31))))
+    sel = sharded_kmeans_parallel_rounds(
+        pp, ell, bits, mesh=mesh, rounds=options.get("rounds", 5),
+        cap_loc=cap_loc, n_real=n, interpret=execution.interpret,
+    )
+    cand = np.flatnonzero(np.asarray(jax.block_until_ready(sel))[:n])
+    idx, pool = _candidate_pool_to_centers(pts, cand, k, rng)
+    return idx, {"pool_size": pool, "num_candidates": pool,
+                 "devices": mesh.devices.size}
+
+
+def _register():
+    from repro.core import registry, seeding
+
+    impls = {
+        "fastkmeans++": registry.BackendImpl(
+            run=sharded_fast_kmeanspp_seeder, device_native=True,
+            prepare=_prep_fastkmeanspp_sh, solve=_solve_fastkmeanspp_sh),
+        "rejection": registry.BackendImpl(
+            run=sharded_rejection_seeder, device_native=True,
+            prepare=_prep_rejection_sh, solve=_solve_rejection_sh),
+        # host-side weighted recluster per fit => not device_native
+        "kmeans||": registry.BackendImpl(
+            run=sharded_kmeans_parallel_seeder, device_native=False,
+            prepare=_prep_kmeans_parallel_sh,
+            solve=_solve_kmeans_parallel_sh),
+    }
+    for name, impl in impls.items():
+        registry.register_backend(name, "sharded", impl,
+                                  legacy_registry=seeding.SEEDERS)
 
 
 _register()

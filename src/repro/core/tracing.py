@@ -1,0 +1,23 @@
+"""Shared trace accounting for every jit seeding program.
+
+`TRACE_COUNTS` is incremented *inside* the program bodies — code that only
+executes while jax traces them — so each key counts real traces, never
+calls.  Serving-grade invariant (ROADMAP): repeated fits with identical
+static configuration must reuse the compiled program, i.e. leave every
+counter untouched.  Tests assert exactly that, for the single-device
+programs (keys ``"<seeder>/device"``) and the shard_map programs (bare
+``"<seeder>"`` keys, kept for backward compatibility with the PR-3 tests).
+"""
+
+from __future__ import annotations
+
+import collections
+
+__all__ = ["TRACE_COUNTS", "count_trace"]
+
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def count_trace(name: str) -> None:
+    """Record one trace of program `name` (call from inside the traced body)."""
+    TRACE_COUNTS[name] += 1

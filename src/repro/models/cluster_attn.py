@@ -81,7 +81,7 @@ def build_clustered_cache(
     `info={}` to receive the measured drop fraction — raise
     `capacity_slack` or `num_clusters` if it is non-negligible.
     """
-    from repro.core import KMeansConfig, fit
+    from repro.core import ClusterPlan, ClusterSpec
     from repro.core.lloyd import assign
 
     b, s, hk, dh = keys.shape
@@ -92,15 +92,21 @@ def build_clustered_cache(
     v_slots = np.zeros((b, hk, c, cap, dv), values.dtype)
     valid = np.zeros((b, hk, c, cap), bool)
     dropped = 0
+    base = ClusterSpec(k=c, seeder=cfg.seeder, lloyd_iters=cfg.lloyd_iters,
+                       seed=seed)
     for bi in range(b):
         for h in range(hk):
             pts = keys[bi, :, h, :].astype(np.float64)
-            km = fit(pts, KMeansConfig(
-                k=c, seeder=cfg.seeder, lloyd_iters=cfg.lloyd_iters,
-                seed=seed + 131 * bi + h,
-            ))
-            centroids[bi, h] = km.centers.astype(keys.dtype)
-            idx, _ = assign(pts, km.centers)
+            # One plan per head: heads are independent seeding problems
+            # (MoE-router-style) with their own seed.  The token->cluster
+            # assignment stays on the float64 host path: attention keys can
+            # carry large common offsets, where FitResult.predict's f32
+            # expanded form could flip near-tie assignments.
+            plan = ClusterPlan(base.replace(seed=seed + 131 * bi + h))
+            res = plan.fit(pts)
+            centers = np.asarray(res.centers, dtype=np.float64)
+            centroids[bi, h] = centers.astype(keys.dtype)
+            idx, _ = assign(pts, centers)
             for ci in range(c):
                 all_members = np.nonzero(idx == ci)[0]
                 members = all_members[:cap]

@@ -1,0 +1,249 @@
+"""Plan/execute API: shim equivalence, cached prepare, zero re-trace.
+
+The acceptance contract of ISSUE 4:
+
+  * legacy `fit(points, KMeansConfig(...))` and `ClusterPlan.fit()` choose
+    identical indices on fixed seeds for every seeder x backend;
+  * `refit` / `fit_batch` after one `prepare` do zero host-side
+    embedding/LSH recomputation (fingerprint cache hits) and zero re-traces
+    (`TRACE_COUNTS`);
+  * results are device-resident pytrees with working adapters.
+"""
+
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    ClusterPlan,
+    ClusterSpec,
+    ExecutionSpec,
+    FitResult,
+    KMeansConfig,
+    TRACE_COUNTS,
+    fit,
+)
+from repro.core.plan import data_fingerprint, ensure_host_f64
+
+
+def _mixture(n=600, d=4, k_true=10, seed=0):
+    rng = np.random.default_rng(seed)
+    ctr = rng.normal(size=(k_true, d)) * 25
+    return ctr[rng.integers(k_true, size=n)] + rng.normal(size=(n, d))
+
+
+def _legacy_fit(pts, **kw):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return fit(pts, KMeansConfig(**kw))
+
+
+PAIRS = [
+    ("kmeans++", "cpu"), ("afkmc2", "cpu"), ("uniform", "cpu"),
+    ("fastkmeans++", "cpu"), ("rejection", "cpu"), ("kmeans||", "cpu"),
+    ("fastkmeans++", "device"), ("rejection", "device"),
+    ("kmeans||", "device"),
+    ("fastkmeans++", "sharded"), ("rejection", "sharded"),
+    ("kmeans||", "sharded"),
+]
+
+
+@pytest.mark.parametrize("seeder,backend", PAIRS)
+def test_shim_and_plan_identical_indices(seeder, backend):
+    """Legacy facade vs ClusterPlan: same indices on the same seed."""
+    pts = _mixture(seed=3)
+    old = _legacy_fit(pts, k=6, seeder=seeder, backend=backend, seed=7)
+    plan = ClusterPlan(ClusterSpec(k=6, seeder=seeder, seed=7),
+                       ExecutionSpec(backend=backend))
+    new = plan.fit(pts)
+    np.testing.assert_array_equal(
+        np.asarray(new.indices, dtype=np.int64), old.seeding.indices
+    )
+
+
+def test_shim_is_deprecated_but_works():
+    pts = _mixture(n=200)
+    with pytest.warns(DeprecationWarning, match="ClusterPlan"):
+        km = fit(pts, KMeansConfig(k=4, seeder="kmeans++"))
+    assert km.centers.shape == (4, 4)
+
+
+def test_refit_and_fit_batch_zero_reprep_zero_retrace():
+    """After one prepare + one warm fit: refits and repeated fit_batch
+    touch neither the host prepare stage nor the jit tracer."""
+    pts = _mixture(seed=5)
+    plan = ClusterPlan(ClusterSpec(k=5, seeder="rejection", seed=1),
+                       ExecutionSpec(backend="device"))
+    plan.prepare(pts)
+    assert plan.cache_info()["prepare_builds"] == 1
+    plan.fit()                                   # warm: trace + compile once
+    first_batch = plan.fit_batch([3, 4])         # warm the batched program
+    traces = dict(TRACE_COUNTS)
+    r1 = plan.refit(seed=2)
+    r2 = plan.refit(seed=3)
+    b = plan.fit_batch([2, 3])
+    assert dict(TRACE_COUNTS) == traces, "solve stage re-traced"
+    info = plan.cache_info()
+    assert info["prepare_builds"] == 1, "prepare stage re-ran"
+    assert info["entries"] == 1
+    # prepare() on the same data is a fingerprint cache hit
+    plan.prepare(pts)
+    assert plan.cache_info()["prepare_hits"] == 1
+    assert plan.cache_info()["prepare_builds"] == 1
+    # fit_batch lanes are bit-identical to solo refits
+    assert first_batch.extras["vmapped"]
+    np.testing.assert_array_equal(np.asarray(b.indices[0]),
+                                  np.asarray(r1.indices))
+    np.testing.assert_array_equal(np.asarray(b.indices[1]),
+                                  np.asarray(r2.indices))
+
+
+def test_sharded_refit_zero_retrace():
+    pts = _mixture(seed=6)
+    plan = ClusterPlan(ClusterSpec(k=5, seeder="rejection", seed=1),
+                       ExecutionSpec(backend="sharded"))
+    plan.fit(pts)                                # prepare + warm program
+    traces = dict(TRACE_COUNTS)
+    plan.refit(seed=9)
+    b = plan.fit_batch([4, 5])
+    assert dict(TRACE_COUNTS) == traces
+    assert plan.cache_info()["prepare_builds"] == 1
+    assert np.asarray(b.indices).shape == (2, 5)
+
+
+def test_fit_batch_cpu_stacks_results():
+    pts = _mixture(seed=8)
+    plan = ClusterPlan(ClusterSpec(k=4, seeder="kmeans++", seed=0))
+    b = plan.fit_batch([1, 2, 3], pts)
+    assert np.asarray(b.indices).shape == (3, 4)
+    assert np.asarray(b.centers).shape == (3, 4, 4)
+    assert np.asarray(b.cost).shape == (3,)
+    lane = plan.refit(seed=2)
+    np.testing.assert_array_equal(np.asarray(b.indices[1]),
+                                  np.asarray(lane.indices))
+
+
+def test_specs_frozen_and_hashable():
+    spec = ClusterSpec(k=3, options={"num_tables": 5})
+    exe = ExecutionSpec(backend="device")
+    cfg = KMeansConfig(k=3, seeder_kwargs={"m": 10})
+    assert isinstance(spec.options, tuple)
+    assert isinstance(cfg.seeder_kwargs, tuple)
+    # hashable => usable as jit-cache / dict keys directly
+    assert len({spec, spec.replace(k=4)}) == 2
+    assert len({exe, ExecutionSpec(backend="cpu")}) == 2
+    assert len({cfg, KMeansConfig(k=3)}) == 2
+    for frozen in (spec, exe, cfg):
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            frozen.k = 9
+
+
+def test_ensure_host_f64_no_gratuitous_copy():
+    pts = np.ascontiguousarray(_mixture(n=50))
+    assert ensure_host_f64(pts) is pts          # conforming: zero copy
+    f32 = pts.astype(np.float32)
+    out = ensure_host_f64(f32)
+    assert out.dtype == np.float64 and out.flags.c_contiguous
+    dev = jnp.asarray(f32)
+    out = ensure_host_f64(dev)                  # jax array: one transfer
+    assert isinstance(out, np.ndarray) and out.dtype == np.float64
+
+
+def test_jax_array_input_device_buffer_reused():
+    pts = jnp.asarray(_mixture(n=300, seed=2), jnp.float32)
+    plan = ClusterPlan(ClusterSpec(k=4, seeder="rejection", seed=0),
+                       ExecutionSpec(backend="device"))
+    res = plan.fit(pts)
+    prep = plan._active
+    assert prep.points_dev is pts               # no host round-trip
+    assert res.centers.dtype == jnp.float32
+
+
+def test_data_fingerprint_keys_content():
+    a = _mixture(n=100, seed=1)
+    b = _mixture(n=100, seed=2)
+    assert data_fingerprint(a) == data_fingerprint(a.copy())
+    assert data_fingerprint(a) != data_fingerprint(b)
+    assert data_fingerprint(a) != data_fingerprint(a.astype(np.float32))
+    a32 = a.astype(np.float32)
+    assert data_fingerprint(a32) == data_fingerprint(jnp.asarray(a32))
+
+
+def test_data_fingerprint_large_device_array_sees_any_row():
+    """Above the full-hash threshold jax arrays are sampled, but the
+    on-device column sums must still catch a mutation off the stride."""
+    rng = np.random.default_rng(0)
+    big = rng.normal(size=(70_000, 16)).astype(np.float32)  # > 4 MiB
+    mutated = big.copy()
+    mutated[7] += 1.0       # row 7: off the ~17-row sample stride
+    assert data_fingerprint(jnp.asarray(big)) != \
+        data_fingerprint(jnp.asarray(mutated))
+    # numpy arrays full-hash regardless of size
+    assert data_fingerprint(big) != data_fingerprint(mutated)
+    assert data_fingerprint(big) == data_fingerprint(big.copy())
+
+
+def test_fit_result_is_pytree_with_adapters():
+    pts = _mixture(n=300, seed=4)
+    plan = ClusterPlan(ClusterSpec(k=4, seeder="fastkmeans++", seed=0))
+    res = plan.fit(pts).block_until_ready()
+    assert isinstance(res.indices, jax.Array)
+    # registered pytree: jax.tree transformations AND jit work on the
+    # result (aux carries only the hashable static k; host metadata like
+    # extras/timings intentionally does not round-trip)
+    doubled = jax.tree.map(lambda x: x * 2, res)
+    assert isinstance(doubled, FitResult)
+    twice = jax.jit(lambda r: r.cost * 2)(res)
+    np.testing.assert_allclose(float(twice), 2 * float(np.asarray(res.cost)),
+                               rtol=1e-6)
+    host = res.to_numpy()
+    assert isinstance(host.indices, np.ndarray)
+    assert host.indices.dtype == np.int64
+    # jitted predict agrees with the host assignment on the same centers
+    from repro.core.lloyd import assign
+
+    pred = np.asarray(res.predict(pts))
+    ref, _ = assign(pts, np.asarray(res.centers, dtype=np.float64))
+    # f32 device distances vs f64 host distances: ties may flip on a
+    # handful of points, never more.
+    assert (pred == ref).mean() >= 0.99
+
+
+def test_refit_with_new_k_reuses_prepare():
+    pts = _mixture(seed=9)
+    plan = ClusterPlan(ClusterSpec(k=4, seeder="rejection", seed=0),
+                       ExecutionSpec(backend="device"))
+    plan.fit(pts)
+    res = plan.refit(k=6)
+    assert np.asarray(res.indices).shape == (6,)
+    assert plan.cache_info()["prepare_builds"] == 1
+
+
+def test_lloyd_through_plan_matches_shim():
+    pts = _mixture(seed=11)
+    old = _legacy_fit(pts, k=5, seeder="rejection", lloyd_iters=3, seed=2)
+    plan = ClusterPlan(ClusterSpec(k=5, seeder="rejection", lloyd_iters=3,
+                                   seed=2))
+    new = plan.fit(pts)
+    assert new.extras["lloyd_iterations"] == old.refinement.iterations
+    np.testing.assert_allclose(np.asarray(new.centers), old.centers,
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_plan_rejects_bad_pairs():
+    with pytest.raises(KeyError):
+        ClusterPlan(ClusterSpec(k=3, seeder="kmeans++"),
+                    ExecutionSpec(backend="device"))
+    with pytest.raises(KeyError):
+        ClusterPlan(ClusterSpec(k=3, seeder="nope"))
+    with pytest.raises(ValueError):
+        ExecutionSpec(backend="gpu-cluster")
+    with pytest.raises(ValueError):
+        ClusterSpec(k=0)
+    with pytest.raises(TypeError):
+        ClusterPlan(KMeansConfig(k=3))

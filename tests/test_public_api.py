@@ -1,0 +1,84 @@
+"""Public-API snapshot: lock `repro.core.__all__`, the `ClusterPlan`
+method signatures, and the doc's capability table against silent drift.
+
+Changing the public surface is allowed — but it must be a deliberate,
+reviewed edit of BOTH the code and this snapshot (and docs/api.md for the
+capability matrix), never an accident.
+"""
+
+import inspect
+from pathlib import Path
+
+import repro.core as core
+from repro.core import ClusterPlan, SEEDER_SPECS, capability_table
+
+EXPECTED_ALL = sorted([
+    "BACKENDS",
+    "BatchSchedule",
+    "ClusterPlan",
+    "ClusterSpec",
+    "ExecutionSpec",
+    "FitResult",
+    "KMeans",
+    "KMeansConfig",
+    "MultiTreeEmbedding",
+    "MultiTreeSampler",
+    "SEEDERS",
+    "SEEDER_SPECS",
+    "SeederSpec",
+    "SeedingResult",
+    "TRACE_COUNTS",
+    "afkmc2",
+    "assign",
+    "build_multitree",
+    "capability_table",
+    "clustering_cost",
+    "data_fingerprint",
+    "ensure_host_f64",
+    "fast_kmeanspp",
+    "fit",
+    "kmeans_parallel",
+    "kmeanspp",
+    "lloyd",
+    "rejection_sampling",
+    "resolve_seeder",
+    "uniform_sampling",
+])
+
+# PEP-563 postponed annotations: signature strings carry quoted types.
+EXPECTED_SIGNATURES = {
+    "prepare": "(self, points) -> 'ClusterPlan'",
+    "fit": "(self, points=None, *, seed: 'Optional[int]' = None) "
+           "-> 'FitResult'",
+    "refit": "(self, *, k: 'Optional[int]' = None, "
+             "seed: 'Optional[int]' = None) -> 'FitResult'",
+    "fit_batch": "(self, seeds: 'Sequence[int]', points=None) "
+                 "-> 'FitResult'",
+    "cache_info": "(self) -> 'dict'",
+}
+
+
+def test_core_all_is_locked():
+    assert sorted(core.__all__) == EXPECTED_ALL
+    for name in core.__all__:
+        assert hasattr(core, name), name
+
+
+def test_cluster_plan_signatures_are_locked():
+    for name, expected in EXPECTED_SIGNATURES.items():
+        sig = str(inspect.signature(getattr(ClusterPlan, name)))
+        assert sig == expected, f"ClusterPlan.{name}: {sig!r}"
+
+
+def test_every_registered_seeder_has_cpu_impl_and_doc():
+    for name, spec in SEEDER_SPECS.items():
+        assert "cpu" in spec.impls, name
+        assert spec.doc, f"seeder {name!r} has no one-line doc"
+
+
+def test_docs_capability_table_in_sync():
+    """docs/api.md embeds the generated registry table verbatim."""
+    doc = (Path(__file__).resolve().parents[1] / "docs" / "api.md"
+           ).read_text()
+    for line in capability_table().splitlines():
+        assert line in doc, f"docs/api.md out of sync with registry: {line}"
