@@ -1,12 +1,18 @@
 """Clustered-KV long-context decode: the paper's seeder as a serving feature.
 
-    PYTHONPATH=src python examples/serve_cluster_kv.py [--seq 16384]
+    PYTHONPATH=src python examples/serve_cluster_kv.py [--seq 16384] [--engine]
 
 Builds a synthetic long KV cache, clusters the keys per head with
 FASTK-MEANS++ (+Lloyd), and compares clustered two-level attention against
 exact full attention: output error, attention-mass recall, and the
 bytes-read reduction that drives the memory-roofline win (EXPERIMENTS.md
 §Perf, cell qwen3-32b x long-context).
+
+`--engine` serves the per-head codebook rebuilds through the async
+`ClusterEngine` pipeline (docs/architecture.md): while one head's codebook
+solves on device, the next head's embedding/prepare runs on the host
+thread pool — the rebuild pattern of a live serving loop, bit-identical
+to the serial build.
 """
 
 import argparse
@@ -27,6 +33,10 @@ def main():
     ap.add_argument("--clusters", type=int, default=256)
     ap.add_argument("--topc", type=int, default=24)
     ap.add_argument("--queries", type=int, default=16)
+    ap.add_argument("--engine", action="store_true",
+                    help="pipeline the per-head codebook rebuilds through "
+                         "ClusterEngine (overlap host prepare with device "
+                         "solve; bit-identical results)")
     args = ap.parse_args()
 
     import jax.numpy as jnp
@@ -50,9 +60,26 @@ def main():
                           lloyd_iters=2, capacity_slack=3.0)
     t0 = time.time()
     info = {}
-    cache = build_clustered_cache(keys, values, cfg, info=info)
-    print(f"codebook build (fastkmeans++ x {hk} heads): {time.time()-t0:.1f}s; "
-          f"capacity-dropped tokens: {100*info['dropped_frac']:.2f}%")
+    if args.engine:
+        from repro.core import ClusterEngine
+
+        # Every head is a fresh dataset submitted exactly once:
+        # retain_prepared=False keeps the prepare cache at pipeline depth
+        # instead of accumulating all heads' artifacts until close.
+        with ClusterEngine(retain_prepared=False) as engine:
+            cache = build_clustered_cache(keys, values, cfg, info=info,
+                                          engine=engine)
+            st = engine.stats()
+        print(f"codebook rebuild via ClusterEngine x {hk} heads: "
+              f"{time.time()-t0:.1f}s wall "
+              f"(host prepare {st['prepare_seconds']:.1f}s overlapped with "
+              f"device solve {st['solve_seconds']:.1f}s; "
+              f"capacity-dropped tokens: {100*info['dropped_frac']:.2f}%)")
+    else:
+        cache = build_clustered_cache(keys, values, cfg, info=info)
+        print(f"codebook build (fastkmeans++ x {hk} heads): "
+              f"{time.time()-t0:.1f}s; "
+              f"capacity-dropped tokens: {100*info['dropped_frac']:.2f}%")
 
     scale = 1.0 / np.sqrt(dh)
     kf = keys.transpose(0, 2, 1, 3)          # (B, Hk, S, Dh)

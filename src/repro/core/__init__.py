@@ -4,18 +4,23 @@ Faithful CPU algorithms (`seeding`, `multitree`, `lsh`) reproduce the paper;
 `device_seeding` is the TPU-native vectorised twin used inside jit/pjit;
 `sharded_seeding` the multi-chip shard_map twin.  `plan` is the serving
 entry point: `ClusterSpec` + `ExecutionSpec` compile into a `ClusterPlan`
-with a cached prepare stage and device-resident `FitResult`s; the typed
-per-backend seeder registry lives in `registry`.
+with a cached prepare stage and device-resident `FitResult`s; `engine`
+pipelines many such problems (host prepare of request i+1 overlapped with
+the device solve of request i); the typed per-backend seeder registry
+lives in `registry`.  See docs/architecture.md for the end-to-end tour.
 """
 
 from repro.core.api import (
     BACKENDS,
+    ClusterEngine,
     ClusterPlan,
     ClusterSpec,
     ExecutionSpec,
     FitResult,
+    FitTicket,
     KMeans,
     KMeansConfig,
+    PreparedData,
     SEEDER_SPECS,
     SeederSpec,
     capability_table,
@@ -24,7 +29,7 @@ from repro.core.api import (
     fit,
     resolve_seeder,
 )
-from repro.core.batch_schedule import BatchSchedule
+from repro.core.batch_schedule import BatchSchedule, shape_bucket
 from repro.core.lloyd import assign, lloyd
 from repro.core.multitree import MultiTreeSampler
 from repro.core.seeding import (
@@ -44,12 +49,16 @@ from repro.core.tree_embedding import MultiTreeEmbedding, build_multitree
 __all__ = [
     "BACKENDS",
     "BatchSchedule",
+    "ClusterEngine",
     "ClusterPlan",
     "ClusterSpec",
     "ExecutionSpec",
     "FitResult",
+    "FitTicket",
     "KMeans",
     "KMeansConfig",
+    "PreparedData",
+    "shape_bucket",
     "SEEDER_SPECS",
     "SeederSpec",
     "TRACE_COUNTS",

@@ -30,11 +30,13 @@ from repro.core import sharded_seeding  # noqa: F401  registers "sharded"
 from repro.core import registry
 from repro.core.batch_schedule import BatchSchedule
 from repro.core.lloyd import LloydResult, lloyd
+from repro.core.engine import ClusterEngine, FitTicket
 from repro.core.plan import (
     ClusterPlan,
     ClusterSpec,
     ExecutionSpec,
     FitResult,
+    PreparedData,
     data_fingerprint,
     ensure_host_f64,
 )
@@ -49,8 +51,9 @@ from repro.core.seeding import SEEDERS, SeedingResult, clustering_cost
 
 __all__ = [
     "KMeansConfig", "KMeans", "fit", "resolve_seeder", "BACKENDS",
-    "BatchSchedule", "ClusterPlan", "ClusterSpec", "ExecutionSpec",
-    "FitResult", "SEEDER_SPECS", "SeederSpec", "capability_table",
+    "BatchSchedule", "ClusterEngine", "ClusterPlan", "ClusterSpec",
+    "ExecutionSpec", "FitResult", "FitTicket", "PreparedData",
+    "SEEDER_SPECS", "SeederSpec", "capability_table",
     "data_fingerprint", "ensure_host_f64",
 ]
 

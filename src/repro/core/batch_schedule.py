@@ -34,6 +34,13 @@ reproduces the old ``batch: int`` behaviour exactly.
 `BatchSchedule` is a frozen (hashable) dataclass so it can ride through
 ``jax.jit`` static arguments and act as part of the sharded program-cache
 key.
+
+The same power-of-two ladder doubles as the **shape-bucket** policy of the
+stacked multi-dataset ``fit_batch`` path (`shape_bucket` below): padding a
+dataset's point count up to the next ladder rung bounds the number of
+distinct traced programs at ``O(log(n_max / min_bucket))`` instead of one
+per distinct ``n`` — the same trace-count argument as the candidate-batch
+``lax.switch`` buckets.
 """
 
 from __future__ import annotations
@@ -43,7 +50,27 @@ import math
 
 import jax.numpy as jnp
 
-__all__ = ["BatchSchedule"]
+__all__ = ["BatchSchedule", "shape_bucket"]
+
+
+def shape_bucket(n: int, *, min_bucket: int = 1024) -> int:
+    """Smallest power-of-two ladder rung ``>= n`` (floored at `min_bucket`).
+
+    This is `BatchSchedule.buckets`' ladder applied to *array shapes*: the
+    stacked ``fit_batch`` pads every dataset's point count up to
+    ``shape_bucket(n)`` so that B different datasets share one traced jit
+    program per rung.  The cost model is the usual padding trade-off — at
+    most 2x wasted lanes (all carrying weight 0, so they are never sampled
+    and only cost dense-sweep FLOPs) against an ``O(log(n_max/min_bucket))``
+    bound on compilations.
+    """
+    if n < 1:
+        raise ValueError(f"n must be >= 1, got {n}")
+    ladder = BatchSchedule(
+        min_batch=min_bucket,
+        max_batch=max(min_bucket, 1 << math.ceil(math.log2(n))),
+    )
+    return ladder.buckets()[ladder.index_of(n)]
 
 
 @dataclasses.dataclass(frozen=True)

@@ -46,6 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 import time
 from typing import Optional
 
@@ -53,11 +54,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.batch_schedule import BatchSchedule
+from repro.core.batch_schedule import BatchSchedule, shape_bucket
 from repro.core.lsh import MonotoneLSH
 from repro.core.sample_tree import TiledSampleTree
 from repro.core.tracing import count_trace
-from repro.core.tree_embedding import build_multitree
+from repro.core.tree_embedding import build_multitree, compute_max_dist
 from repro.kernels.ops import (
     lsh_bucket_accept,
     pairwise_argmin,
@@ -73,6 +74,10 @@ __all__ = [
     "prepare_embedding",
     "prepare_rejection",
     "DeviceSeedingData",
+    "StackedLane",
+    "stacked_rejection_sampling",
+    "stacked_fast_kmeanspp",
+    "canonical_pow2_scale",
     "device_fast_kmeanspp_seeder",
     "device_rejection_seeder",
     "device_kmeans_parallel_seeder",
@@ -83,9 +88,16 @@ _FAR = 1.0e17  # "no center yet" coordinate sentinel (distance^2 f32-finite)
 
 
 def prepare_embedding(points: np.ndarray, *, seed: int = 0,
-                      resolution: Optional[float] = None):
-    """Host-side MULTITREEINIT -> device tensors (codes as int32 planes)."""
-    emb = build_multitree(points, seed=seed, resolution=resolution)
+                      resolution: Optional[float] = None,
+                      max_dist: Optional[float] = None):
+    """Host-side MULTITREEINIT -> device tensors (codes as int32 planes).
+
+    `max_dist` forwards the diameter-bound override of `build_multitree`
+    (the stacked multi-dataset path forces 1.0 after its exact power-of-two
+    rescale so `meta` is bit-identical across datasets).
+    """
+    emb = build_multitree(points, seed=seed, resolution=resolution,
+                          max_dist=max_dist)
     # drop the trivial root level (height 0)
     codes = emb.codes_array()[:, 1:, :]            # (T, H-1, n)
     lo, hi = split_codes_u64(codes)
@@ -150,6 +162,7 @@ def device_fast_kmeanspp(
     m_init: float,
     tile: int = 512,
     interpret: bool | None = None,
+    n_real: jax.Array | None = None,
 ) -> jax.Array:
     """Algorithm 3.  Returns (k,) int32 chosen indices.  One jit program,
     cached by (shapes, static args) — repeated fits never re-trace
@@ -159,9 +172,16 @@ def device_fast_kmeanspp(
     tree sweep's tile-sum epilogue feeds one `TiledSampleTree.refresh`
     (O(T log T), T = n/tile) — there is no `SampleTreeJax.init` (O(n) heap
     rebuild) anywhere in the loop body.
+
+    `n_real` (a *traced* int32 scalar) marks only the first `n_real` rows
+    live: rows beyond it start at weight 0 (never sampled) and the uniform
+    first draw is bounded by it.  The stacked multi-dataset path pads every
+    lane to a common shape bucket and passes each lane's true row count
+    here; `None` (the solo path) means all `n` rows are live.
     """
     count_trace("fastkmeans++/device")        # trace-time only
     t, h, n = codes_lo.shape
+    live = n if n_real is None else n_real
     ts = TiledSampleTree(n, tile=tile)
     clo = _pad_axis(codes_lo, 2, ts.n_pad)
     chi = _pad_axis(codes_hi, 2, ts.n_pad)
@@ -174,7 +194,7 @@ def device_fast_kmeanspp(
         key, k1 = jax.random.split(key)
         x = jnp.where(
             i == 0,
-            jax.random.randint(k1, (), 0, n),
+            jax.random.randint(k1, (), 0, live),
             ts.sample(coarse, weights, k1, 1)[0],
         ).astype(jnp.int32)
         weights, tsums = open_center(weights, x)
@@ -183,7 +203,7 @@ def device_fast_kmeanspp(
         return weights, coarse, chosen, key
 
     # Padded tail lanes start (and stay) at weight 0: never sampled.
-    weights0 = jnp.where(jnp.arange(ts.n_pad) < n, m_init, 0.0).astype(
+    weights0 = jnp.where(jnp.arange(ts.n_pad) < live, m_init, 0.0).astype(
         jnp.float32
     )
     coarse0 = ts.init(weights0)
@@ -220,6 +240,7 @@ def prepare_rejection(
     lsh_r: Optional[float] = None,
     num_tables: int = 15,
     hashes_per_table: int = 1,
+    max_dist: Optional[float] = None,
 ) -> DeviceSeedingData:
     """Host-side init of Algorithm 4's two structures as device tensors.
 
@@ -234,7 +255,8 @@ def prepare_rejection(
     n, d = pts.shape
     rng = np.random.default_rng(seed)
     lo, hi, meta = prepare_embedding(
-        pts, seed=int(rng.integers(2 ** 31)), resolution=resolution
+        pts, seed=int(rng.integers(2 ** 31)), resolution=resolution,
+        max_dist=max_dist,
     )
     if lsh_r is None:
         from repro.core.seeding import _estimate_scale
@@ -285,6 +307,7 @@ def device_rejection_sampling(
     max_rounds: int = 32,
     tile: int = 512,
     interpret: bool | None = None,
+    n_real: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Algorithm 4 as one device program (jit-able end to end).
 
@@ -322,9 +345,14 @@ def device_rejection_sampling(
 
     Returns ``(chosen (k,) int32, trials (k,) int32)`` — trials per center
     for the Lemma 5.3 statistics.
+
+    `n_real` (a *traced* int32 scalar, `None` on the solo path) bounds the
+    live rows for the stacked multi-dataset lanes — see
+    `device_fast_kmeanspp`.
     """
     count_trace("rejection/device")           # trace-time only
     t, h, n = codes_lo.shape
+    live = n if n_real is None else n_real
     l = keys_lo.shape[0]
     d = points.shape[1]
     ts = TiledSampleTree(n, tile=tile)
@@ -346,7 +374,7 @@ def device_rejection_sampling(
         (weights, coarse, chosen, ctr_pts, ck_lo, ck_hi, trials, b_idx,
          acc_ema, key) = state
         key, k_unif = jax.random.split(key)
-        x_unif = jax.random.randint(k_unif, (), 0, n).astype(jnp.int32)
+        x_unif = jax.random.randint(k_unif, (), 0, live).astype(jnp.int32)
 
         def round_cond(carry):
             key, x_sel, done, t_i, rounds, b_idx, acc_ema = carry
@@ -412,7 +440,7 @@ def device_rejection_sampling(
         return (weights, coarse, chosen, ctr_pts, ck_lo, ck_hi, trials,
                 b_idx, acc_ema, key)
 
-    weights0 = jnp.where(jnp.arange(ts.n_pad) < n, m_init, 0.0).astype(
+    weights0 = jnp.where(jnp.arange(ts.n_pad) < live, m_init, 0.0).astype(
         jnp.float32
     )
     coarse0 = ts.init(weights0)
@@ -427,6 +455,208 @@ def device_rejection_sampling(
          jnp.int32(b_idx0), jnp.float32(schedule.prior_accept), key),
     )
     return out[2], out[6]
+
+
+# ---------------------------------------------------------------------------
+# Stacked multi-dataset lanes: ONE vmapped jit program solving B *different*
+# datasets (`ClusterPlan.fit_batch(datasets=...)`, ISSUE 5).
+#
+# The blocker for stacking is that `scale` / `num_levels` / `m_init` are
+# trace-time statics derived from each dataset's diameter — naive stacking
+# would compile one program per dataset.  The canonical prepare removes the
+# data dependence: every dataset is rescaled into the unit ball by an EXACT
+# power-of-two factor (mantissas untouched, so distance *ratios* — all that
+# D^2 sampling and the scale-free acceptance test d2_lsh/(c^2 mtd2) consume
+# — are preserved bit-for-bit), and the embedding is built with the forced
+# diameter bound max_dist=1.0 and a fixed canonical resolution.  The statics
+# then depend only on (d, resolution): every same-d dataset shares them.
+#
+# Shapes are bucketed on `batch_schedule.shape_bucket`'s power-of-two
+# ladder: each lane's row count pads up to the next rung, so B datasets in
+# one bucket run as one `jax.vmap` over `device_rejection_sampling` /
+# `device_fast_kmeanspp` with a traced per-lane `n_real` masking the padded
+# tail (padded rows carry weight 0 — never sampled).  `TRACE_COUNTS`
+# (keys "<seeder>/device/stacked") proves one trace per bucket.
+#
+# Donation: the `_donated` jit variants donate the stacked code/point/key
+# block, letting XLA alias its pages for the programs' weight/loop buffers
+# instead of holding both alive — the ROADMAP's "donate the per-fit weight
+# buffers".  Only meaningful off-CPU (the plan gates on the backend).
+# ---------------------------------------------------------------------------
+
+_STACK_RESOLUTION = 2.0 ** -10   # canonical leaf side => H = 12 fixed levels
+
+
+def canonical_pow2_scale(points: np.ndarray) -> float:
+    """Exact power-of-two factor mapping `points` into the unit ball.
+
+    ``s = 2^-ceil(log2(compute_max_dist(points)))`` guarantees
+    ``compute_max_dist(points * s) <= 1.0``; because s is a power of two the
+    rescale only shifts exponents (no mantissa rounding), so every pairwise
+    distance ratio — and therefore the D^2 sampling distribution and the
+    Algorithm-4 acceptance ratio — is preserved exactly.
+    """
+    md = compute_max_dist(np.asarray(points, dtype=np.float64))
+    return 2.0 ** -math.ceil(math.log2(md)) if md > 0 else 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class StackedLane:
+    """One dataset's canonically-rescaled, bucket-padded lane artifacts.
+
+    `arrays` are the per-lane device tensors (row axis padded to a
+    `shape_bucket` rung); `statics` the jit static kwargs, bit-identical
+    across every lane of a shape bucket; `n_real` the live row count the
+    traced mask sees.  Lanes stack (via `jnp.stack`) iff their `shape_key`s
+    are equal — the plan groups by it, one vmapped program per group.
+    """
+
+    arrays: tuple
+    n_real: int
+    statics: tuple
+
+    @property
+    def shape_key(self) -> tuple:
+        return (tuple(a.shape for a in self.arrays), self.statics)
+
+
+def _canonical_rejection_lane(points, rng, *, options, execution):
+    """`BackendImpl.prepare_stacked` for the rejection seeder."""
+    pts = np.asarray(points, dtype=np.float64)
+    n = pts.shape[0]
+    s = canonical_pow2_scale(pts)
+    resolution = float(options.get("stack_resolution", _STACK_RESOLUTION))
+    # A user lsh_r is expressed in ORIGINAL data units: rescale it with the
+    # points, or the canonical lane's collision radius is off by 1/s.
+    lsh_r = options.get("lsh_r")
+    data = prepare_rejection(
+        pts * s,
+        seed=int(rng.integers(2 ** 31)), resolution=resolution,
+        max_dist=1.0, lsh_r=None if lsh_r is None else float(lsh_r) * s,
+        num_tables=options.get("num_tables", 15),
+        hashes_per_table=options.get("hashes_per_table", 1),
+    )
+    bucket = shape_bucket(n, min_bucket=max(1024, execution.tile))
+    return StackedLane(
+        arrays=(
+            _pad_axis(data.codes_lo, 2, bucket),
+            _pad_axis(data.codes_hi, 2, bucket),
+            _pad_axis(data.points, 0, bucket),
+            _pad_axis(data.keys_lo, 1, bucket),
+            _pad_axis(data.keys_hi, 1, bucket),
+        ),
+        n_real=n,
+        statics=(data.scale, data.num_levels, data.m_init),
+    )
+
+
+def _canonical_fastkmeanspp_lane(points, rng, *, options, execution):
+    """`BackendImpl.prepare_stacked` for the fastkmeans++ seeder."""
+    pts = np.asarray(points, dtype=np.float64)
+    n = pts.shape[0]
+    resolution = float(options.get("stack_resolution", _STACK_RESOLUTION))
+    lo, hi, meta = prepare_embedding(
+        pts * canonical_pow2_scale(pts),
+        seed=int(rng.integers(2 ** 31)), resolution=resolution,
+        max_dist=1.0,
+    )
+    bucket = shape_bucket(n, min_bucket=max(1024, execution.tile))
+    return StackedLane(
+        arrays=(_pad_axis(lo, 2, bucket), _pad_axis(hi, 2, bucket)),
+        n_real=n,
+        statics=(meta["scale"], meta["num_levels"], meta["m_init"]),
+    )
+
+
+def _stacked_rejection_body(codes_lo, codes_hi, points, keys_lo, keys_hi,
+                            n_real, key_bits, *, k, scale, num_levels,
+                            m_init, c, schedule, max_rounds, tile,
+                            interpret):
+    count_trace("rejection/device/stacked")   # trace-time only
+
+    def lane(cl, ch, p, klo, khi, nr, bits):
+        return device_rejection_sampling(
+            cl, ch, p, klo, khi, k, jax.random.wrap_key_data(bits),
+            scale=scale, num_levels=num_levels, m_init=m_init, c=c,
+            schedule=schedule, max_rounds=max_rounds, tile=tile,
+            interpret=interpret, n_real=nr,
+        )
+
+    return jax.vmap(lane)(codes_lo, codes_hi, points, keys_lo, keys_hi,
+                          n_real, key_bits)
+
+
+def _stacked_fastkmeanspp_body(codes_lo, codes_hi, n_real, key_bits, *, k,
+                               scale, num_levels, m_init, tile, interpret):
+    count_trace("fastkmeans++/device/stacked")  # trace-time only
+
+    def lane(cl, ch, nr, bits):
+        return device_fast_kmeanspp(
+            cl, ch, k, jax.random.wrap_key_data(bits),
+            scale=scale, num_levels=num_levels, m_init=m_init, tile=tile,
+            interpret=interpret, n_real=nr,
+        )
+
+    return jax.vmap(lane)(codes_lo, codes_hi, n_real, key_bits)
+
+
+_STACKED_REJ_STATICS = ("k", "scale", "num_levels", "m_init", "c",
+                        "schedule", "max_rounds", "tile", "interpret")
+_STACKED_FKM_STATICS = ("k", "scale", "num_levels", "m_init", "tile",
+                        "interpret")
+
+stacked_rejection_sampling = jax.jit(
+    _stacked_rejection_body, static_argnames=_STACKED_REJ_STATICS)
+stacked_rejection_sampling_donated = jax.jit(
+    _stacked_rejection_body, static_argnames=_STACKED_REJ_STATICS,
+    donate_argnums=(0, 1, 2, 3, 4))
+stacked_fast_kmeanspp = jax.jit(
+    _stacked_fastkmeanspp_body, static_argnames=_STACKED_FKM_STATICS)
+stacked_fast_kmeanspp_donated = jax.jit(
+    _stacked_fastkmeanspp_body, static_argnames=_STACKED_FKM_STATICS,
+    donate_argnums=(0, 1))
+
+
+def use_donation(execution) -> bool:
+    """Donation policy: only when asked for AND the backend honours it
+    (XLA:CPU ignores donations with a warning, so `donate=True` stays
+    advisory there — the documented ExecutionSpec semantics)."""
+    return bool(execution.donate) and jax.default_backend() != "cpu"
+
+
+def _solve_stacked_rejection(lanes, k, key_bits, *, c, schedule, options,
+                             execution):
+    """`BackendImpl.solve_stacked`: one vmapped program per shape bucket."""
+    arrs = [jnp.stack([lane.arrays[j] for lane in lanes])
+            for j in range(len(lanes[0].arrays))]
+    n_real = jnp.asarray([lane.n_real for lane in lanes], jnp.int32)
+    scale, num_levels, m_init = lanes[0].statics
+    sched = resolve_schedule(schedule, options.get("batch"))
+    donate = use_donation(execution)
+    fn = stacked_rejection_sampling_donated if donate \
+        else stacked_rejection_sampling
+    idx, trials = fn(
+        *arrs, n_real, key_bits, k=k, scale=scale, num_levels=num_levels,
+        m_init=m_init, c=c, schedule=sched,
+        max_rounds=options.get("max_rounds", 32), tile=execution.tile,
+        interpret=execution.interpret,
+    )
+    return idx, {"trials": trials, "batch_buckets": sched.buckets(),
+                 "donated": donate}
+
+
+def _solve_stacked_fastkmeanspp(lanes, k, key_bits, *, c, schedule, options,
+                                execution):
+    arrs = [jnp.stack([lane.arrays[j] for lane in lanes])
+            for j in range(len(lanes[0].arrays))]
+    n_real = jnp.asarray([lane.n_real for lane in lanes], jnp.int32)
+    scale, num_levels, m_init = lanes[0].statics
+    donate = use_donation(execution)
+    fn = stacked_fast_kmeanspp_donated if donate else stacked_fast_kmeanspp
+    idx = fn(*arrs, n_real, key_bits, k=k, scale=scale,
+             num_levels=num_levels, m_init=m_init, tile=execution.tile,
+             interpret=execution.interpret)
+    return idx, {"donated": donate}
 
 
 # ---------------------------------------------------------------------------
@@ -696,10 +926,14 @@ def _register():
     impls = {
         "fastkmeans++": registry.BackendImpl(
             run=device_fast_kmeanspp_seeder, device_native=True,
-            prepare=_prep_fastkmeanspp, solve=_solve_fastkmeanspp),
+            prepare=_prep_fastkmeanspp, solve=_solve_fastkmeanspp,
+            prepare_stacked=_canonical_fastkmeanspp_lane,
+            solve_stacked=_solve_stacked_fastkmeanspp),
         "rejection": registry.BackendImpl(
             run=device_rejection_seeder, device_native=True,
-            prepare=_prep_rejection, solve=_solve_rejection),
+            prepare=_prep_rejection, solve=_solve_rejection,
+            prepare_stacked=_canonical_rejection_lane,
+            solve_stacked=_solve_stacked_rejection),
         # kmeans|| is NOT device_native: the oversampling rounds are one jit
         # program but the weighted recluster runs host-side per fit.
         "kmeans||": registry.BackendImpl(

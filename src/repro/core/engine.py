@@ -1,0 +1,308 @@
+"""Async pipelined execution engine: overlap host prepare with device solve.
+
+The plan/execute split (`core.plan`) made the expensive O(nd log Δ) host
+work — quantisation, multi-tree embedding codes, LSH bucket keys, device
+upload — a cacheable stage, but a serial caller still runs it back-to-back
+with the device solve:
+
+    serial:     [prep 0][solve 0][prep 1][solve 1][prep 2][solve 2] ...
+    pipelined:  [prep 0][prep 1 ][prep 2 ] ...          (prepare pool)
+                        [solve 0][solve 1][solve 2] ...  (solve worker)
+
+`ClusterEngine` is that pipeline.  `submit(points)` enqueues a fit request
+and returns a `FitTicket` future immediately: the host prepare of request
+i+1 runs on a thread pool (NumPy/hashing release the GIL; the artifact
+upload is `jax.device_put`-style work that overlaps XLA execution) while a
+single dedicated solve worker drains requests **in submission order** —
+which is what makes the pipeline deterministic: every request's solve
+consumes only its own `PreparedData` and rng stream, so results are
+bit-for-bit identical to the serial `plan.prepare(points); plan.fit()`
+loop (tests/test_engine.py asserts exactly that).
+
+Throughput model: with per-request host cost P and device cost S, the
+serial loop takes ``B (P + S)`` while the pipeline takes
+``~ P + B max(P / W, S)`` for W prepare workers — an overlapped speedup
+approaching ``(P + S) / max(P / W, S)`` (and in practice more when the
+device runtime itself overlaps dispatched solves), tracked per PR in
+``BENCH_seeding.json["pipeline"]``.
+
+Donation composes: with ``ExecutionSpec(donate=True)`` on a non-CPU
+backend the stacked/solo programs donate their per-fit input blocks (see
+`device_seeding.use_donation`), so a retired request's buffers are reused
+for the next one instead of accumulating while the pipeline is full.
+
+Plans are cached per `ClusterSpec` — requests sharing a spec share one
+`ClusterPlan` (so repeated datasets are fingerprint cache hits and every
+request shares the cached jit programs).  The engine is a context manager;
+`close()` drains the queue and joins the workers.
+"""
+
+from __future__ import annotations
+
+import collections
+import concurrent.futures as cf
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Iterable, Iterator, Optional, Sequence
+
+from repro.core.plan import ClusterPlan, ClusterSpec, ExecutionSpec, FitResult
+
+__all__ = ["ClusterEngine", "FitTicket"]
+
+
+@dataclasses.dataclass(eq=False)
+class FitTicket:
+    """A submitted fit request: a future over a device-resident `FitResult`.
+
+    `result()` blocks until the pipelined solve finished (the arrays it
+    returns are device-resident — chain into jit code without host sync,
+    or `.block_until_ready()` / `.to_numpy()` them).  Tickets compare
+    (and hash) by identity — two requests are two tickets — and remember
+    their submission `index` (the engine solves in index order).
+    """
+
+    index: int
+    cluster: ClusterSpec
+    seed: Optional[int]
+    tag: Any = None
+    _future: cf.Future = dataclasses.field(default_factory=cf.Future,
+                                           repr=False, compare=False)
+
+    def result(self, timeout: Optional[float] = None) -> FitResult:
+        """The `FitResult` (blocks up to `timeout` seconds)."""
+        return self._future.result(timeout)
+
+    def exception(self, timeout: Optional[float] = None):
+        """The solve/prepare exception, if the request failed."""
+        return self._future.exception(timeout)
+
+    def done(self) -> bool:
+        """True once the result (or an exception) is available."""
+        return self._future.done()
+
+    def add_done_callback(self, fn) -> None:
+        """Call ``fn(ticket)`` when the request completes."""
+        self._future.add_done_callback(lambda _f: fn(self))
+
+
+_SHUTDOWN = object()
+
+
+class ClusterEngine:
+    """Pipelined fit executor over one `ExecutionSpec` placement.
+
+    ::
+
+        engine = ClusterEngine(ClusterSpec(k=64, seeder="rejection"),
+                               ExecutionSpec(backend="device"))
+        with engine:
+            tickets = [engine.submit(ds) for ds in datasets]   # returns now
+            for t in engine.as_completed(tickets):
+                serve(t.result())                # completion order
+        # or, in submission order, one call:
+        results = engine.map_fit(datasets)
+
+    `prepare_workers` bounds the host-side look-ahead (2 is usually enough
+    to hide prepare behind solve; more helps only while prepare is the
+    bottleneck).  All submissions against one engine share its plan cache:
+    a request for already-seen data skips prepare entirely.
+
+    `retain_prepared` controls cache *memory*, not concurrency: the
+    default True keeps every dataset's `PreparedData` for the engine's
+    lifetime (right for a bounded working set that re-submits data);
+    False evicts each request's entry once its solve completes, so a
+    serving loop over a stream of fresh datasets holds O(pipeline depth)
+    prepared artifacts instead of O(requests ever).
+    """
+
+    def __init__(self, cluster: Optional[ClusterSpec] = None,
+                 execution: Optional[ExecutionSpec] = None, *,
+                 prepare_workers: int = 2, retain_prepared: bool = True):
+        if prepare_workers < 1:
+            raise ValueError(
+                f"prepare_workers must be >= 1, got {prepare_workers}")
+        self.cluster = cluster
+        self.execution = execution if execution is not None \
+            else ExecutionSpec()
+        self.retain_prepared = retain_prepared
+        self._plans: dict[ClusterSpec, ClusterPlan] = {}
+        self._pool = cf.ThreadPoolExecutor(
+            max_workers=prepare_workers,
+            thread_name_prefix="cluster-engine-prepare")
+        self._queue: queue.SimpleQueue = queue.SimpleQueue()
+        self._lock = threading.Lock()
+        self._closed = False
+        self._cancel = False
+        self._next_index = 0
+        self._stats = collections.Counter()
+        self._times = {"prepare_seconds": 0.0, "solve_seconds": 0.0}
+        self._solver = threading.Thread(
+            target=self._solve_loop, name="cluster-engine-solve",
+            daemon=True)
+        self._solver.start()
+
+    # -- submission ---------------------------------------------------------
+
+    def plan_for(self, cluster: Optional[ClusterSpec] = None) -> ClusterPlan:
+        """The engine's shared `ClusterPlan` for a spec (built on first use).
+
+        Requests with equal (hashable) specs share one plan — and with it
+        the prepare fingerprint cache and the jit program cache.
+        """
+        spec = cluster if cluster is not None else self.cluster
+        if spec is None:
+            raise ValueError(
+                "no ClusterSpec: pass one to submit()/map_fit() or to the "
+                "engine constructor")
+        with self._lock:
+            plan = self._plans.get(spec)
+            if plan is None:
+                plan = ClusterPlan(spec, self.execution)
+                self._plans[spec] = plan
+            return plan
+
+    def submit(self, points, *, cluster: Optional[ClusterSpec] = None,
+               seed: Optional[int] = None, tag: Any = None) -> FitTicket:
+        """Enqueue one fit request; returns its `FitTicket` immediately.
+
+        The host prepare starts on the pool right away; the device solve
+        runs on the solve worker once every earlier request's solve has
+        been dispatched.  `seed=None` uses the spec's seed (the serial
+        `plan.fit()` stream); `tag` is an opaque caller label carried on
+        the ticket.
+        """
+        plan = self.plan_for(cluster)
+        # The closed-check, ticket numbering and enqueue happen under one
+        # lock acquisition so a concurrent close() (which appends the
+        # shutdown sentinel under the same lock) can never strand a ticket
+        # behind the sentinel.
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("engine is closed")
+            index = self._next_index
+            self._next_index += 1
+            self._stats["submitted"] += 1
+            ticket = FitTicket(index=index, cluster=plan.cluster, seed=seed,
+                               tag=tag)
+            prep_future = self._pool.submit(self._timed_prepare, plan,
+                                            points)
+            self._queue.put((ticket, plan, prep_future))
+        return ticket
+
+    def map_fit(self, datasets: Sequence[Any], *,
+                cluster: Optional[ClusterSpec] = None,
+                seeds: Optional[Sequence[int]] = None) -> list[FitResult]:
+        """Pipelined fit of every dataset; results in submission order.
+
+        The synchronous convenience over `submit`: all prepares are in
+        flight while earlier solves run, and the call blocks until the
+        last result.  `seeds` (optional) gives one solve seed per dataset.
+        """
+        if seeds is not None and len(seeds) != len(datasets):
+            raise ValueError(
+                f"got {len(seeds)} seeds for {len(datasets)} datasets")
+        tickets = [
+            self.submit(ds, cluster=cluster,
+                        seed=None if seeds is None else int(seeds[i]))
+            for i, ds in enumerate(datasets)
+        ]
+        return [t.result() for t in tickets]
+
+    # -- completion ---------------------------------------------------------
+
+    def as_completed(self, tickets: Iterable[FitTicket],
+                     timeout: Optional[float] = None
+                     ) -> Iterator[FitTicket]:
+        """Yield tickets as their results become available.
+
+        Completion order can only run ahead of submission order by what the
+        pipeline reorders (solves are sequential; result readiness is not),
+        so this is how a serving loop consumes results at device speed.
+        """
+        tickets = list(tickets)
+        by_future = {t._future: t for t in tickets}
+        for fut in cf.as_completed(by_future, timeout=timeout):
+            yield by_future[fut]
+
+    # -- pipeline internals -------------------------------------------------
+
+    def _timed_prepare(self, plan: ClusterPlan, points):
+        t0 = time.perf_counter()
+        prep = plan.prepare_data(points)
+        with self._lock:
+            self._times["prepare_seconds"] += time.perf_counter() - t0
+        return prep
+
+    def _solve_loop(self) -> None:
+        while True:
+            item = self._queue.get()
+            if item is _SHUTDOWN:
+                return
+            ticket, plan, prep_future = item
+            if self._cancel:
+                # close(cancel_pending=True): fail queued tickets fast
+                # instead of solving the backlog.
+                prep_future.cancel()
+                with self._lock:
+                    self._stats["cancelled"] += 1
+                ticket._future.set_exception(
+                    cf.CancelledError("engine closed with cancel_pending"))
+                continue
+            prep = None
+            try:
+                prep = prep_future.result()
+                t0 = time.perf_counter()
+                res = plan.fit_prepared(prep, seed=ticket.seed)
+                with self._lock:
+                    self._times["solve_seconds"] += time.perf_counter() - t0
+                    self._stats["completed"] += 1
+                ticket._future.set_result(res)
+            except BaseException as e:  # noqa: BLE001 — forwarded to ticket
+                with self._lock:
+                    self._stats["failed"] += 1
+                ticket._future.set_exception(e)
+            finally:
+                # Eviction must also cover failed solves, or streaming mode
+                # (retain_prepared=False) leaks an entry per bad request.
+                if prep is not None and not self.retain_prepared:
+                    plan.forget(prep)
+
+    # -- lifecycle / stats --------------------------------------------------
+
+    def stats(self) -> dict:
+        """Pipeline counters: submitted/completed/failed plus the summed
+        host-prepare and device-solve stage seconds (their overlap is the
+        pipelining win: serial wall-clock would be their sum)."""
+        with self._lock:
+            out = dict(self._stats)
+            out.update(self._times)
+            out["plans"] = len(self._plans)
+        return out
+
+    def close(self, wait: bool = True, *,
+              cancel_pending: bool = False) -> None:
+        """Stop accepting work; drain the queue and join the workers.
+
+        `cancel_pending=True` fails every not-yet-dispatched ticket with
+        `concurrent.futures.CancelledError` instead of solving the backlog
+        — the escape hatch `__exit__` takes when the with-block raised, so
+        an exception (or Ctrl-C) does not block on hundreds of queued
+        solves.
+        """
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            self._cancel = cancel_pending
+            self._queue.put(_SHUTDOWN)
+        if wait:
+            self._solver.join()
+        self._pool.shutdown(wait=wait, cancel_futures=cancel_pending)
+
+    def __enter__(self) -> "ClusterEngine":
+        return self
+
+    def __exit__(self, exc_type, *exc) -> None:
+        self.close(cancel_pending=exc_type is not None)

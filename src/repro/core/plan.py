@@ -27,6 +27,18 @@ Results are device-resident `FitResult` pytrees (jax arrays; `.to_numpy()`
 / `.block_until_ready()` adapters, jitted `.predict`).  The legacy
 `fit(points, KMeansConfig(...))` facade in `core.api` remains bit-for-bit
 compatible and is implemented against the same registry.
+
+Two multi-problem surfaces sit on top (ISSUE 5):
+
+  * `fit_batch(seeds)` — B seeds on ONE prepared dataset (one vmapped
+    program on device-native seeders), and `fit_batch(datasets=[...])` —
+    B *different* datasets, canonically rescaled and padded to
+    `batch_schedule.shape_bucket` rungs so every bucket compiles exactly
+    one stacked program (re-traces bounded at O(log n) buckets, not O(B));
+  * `core.engine.ClusterEngine` — the async pipelined executor that
+    overlaps host `prepare_data` of request i+1 (thread pool) with the
+    device solve of request i, via the thread-safe `prepare_data` /
+    `fit_prepared` split below.
 """
 
 from __future__ import annotations
@@ -34,6 +46,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 import hashlib
+import math
+import threading
 import time
 from typing import Any, Optional, Sequence
 
@@ -52,6 +66,7 @@ __all__ = [
     "ExecutionSpec",
     "ClusterPlan",
     "FitResult",
+    "PreparedData",
     "ensure_host_f64",
     "data_fingerprint",
 ]
@@ -212,6 +227,7 @@ class FitResult:
     extras: dict = dataclasses.field(default_factory=dict)
 
     def block_until_ready(self) -> "FitResult":
+        """Wait for the device arrays to materialise; returns self."""
         jax.block_until_ready((self.indices, self.centers, self.cost))
         return self
 
@@ -328,8 +344,16 @@ def _batched_fastkmeanspp(codes_lo, codes_hi, k, key_bits, *, scale,
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
-class _Prepared:
-    """One data fingerprint's cached prepare-stage output."""
+class PreparedData:
+    """One data fingerprint's cached prepare-stage output.
+
+    Returned by `ClusterPlan.prepare_data` and accepted by
+    `ClusterPlan.fit_prepared` — the handle the async `ClusterEngine`
+    threads pass between the host prepare pool and the device solve worker
+    (the implicit `prepare()`/`fit()` pair routes through the same object
+    via the plan's `_active` slot).  Stacked lanes cache here too, under a
+    ``<fingerprint>/stacked`` key with a `StackedLane` in `artifacts`.
+    """
 
     fingerprint: str
     pts: np.ndarray                   # original coords, host float64
@@ -384,8 +408,9 @@ class ClusterPlan:
             tile=execution.tile, interpret=execution.interpret,
             donate=execution.donate,
         )
-        self._prepared: dict[str, _Prepared] = {}
-        self._active: Optional[_Prepared] = None
+        self._prepared: dict[str, PreparedData] = {}
+        self._active: Optional[PreparedData] = None
+        self._lock = threading.Lock()      # cache dict + stats counters
         self.stats = {"prepare_calls": 0, "prepare_hits": 0,
                       "prepare_builds": 0, "solves": 0}
 
@@ -397,29 +422,66 @@ class ClusterPlan:
         Keyed by `data_fingerprint`: re-preparing the same data is a cache
         hit that does zero host work.  Returns the plan for chaining.
         """
-        self.stats["prepare_calls"] += 1
-        fp = data_fingerprint(points)
-        prep = self._prepared.get(fp)
-        if prep is not None:
-            self.stats["prepare_hits"] += 1
-            self._active = prep
-            return self
+        self._active = self.prepare_data(points)
+        return self
+
+    def prepare_data(self, points) -> PreparedData:
+        """Thread-safe prepare returning an explicit `PreparedData` handle.
+
+        Unlike `prepare()` this does not touch the plan's implicit
+        "active" slot, so N threads can prepare N different datasets on one
+        plan concurrently — the `ClusterEngine` pipeline runs exactly this
+        against its prepare pool while the solve worker drains
+        `fit_prepared`.  Distinct datasets build in parallel (the lock only
+        guards the cache dict); a lost same-data build race keeps the first
+        entry (both builds are deterministic from the spec seed).
+        """
+        return self._prepare_cached(points, stacked=False)
+
+    def _prepare_cached(self, points, *, stacked: bool) -> PreparedData:
+        fp = data_fingerprint(points) + ("/stacked" if stacked else "")
+        with self._lock:
+            self.stats["prepare_calls"] += 1
+            prep = self._prepared.get(fp)
+            if prep is not None:
+                self.stats["prepare_hits"] += 1
+                return prep
+        prep = self._build_prepared(fp, points, stacked)
+        with self._lock:
+            cur = self._prepared.get(fp)
+            if cur is not None:            # lost a same-data build race
+                self.stats["prepare_hits"] += 1
+                return cur
+            self._prepared[fp] = prep
+            self.stats["prepare_builds"] += 1
+        return prep
+
+    def _build_prepared(self, fp: str, points,
+                        stacked: bool) -> PreparedData:
         t0 = time.perf_counter()
         pts = ensure_host_f64(points)
         rng = np.random.default_rng(self.cluster.seed)
         options = self.cluster.options_dict()
         seed_pts, resolution = pts, options.get("resolution")
-        if self.caps.needs_quantize and self.cluster.quantize:
-            q = quantize(pts, rng)
-            seed_pts = q.points
-            resolution = options.get("resolution", 1.0)
-        artifacts = None
-        if self.impl.preparable:
-            artifacts = self.impl.prepare(
-                seed_pts, rng, resolution=resolution, options=options,
-                execution=self._ctx,
+        if stacked:
+            # Canonical lane: the exact power-of-two rescale replaces the
+            # Appendix-F quantisation as the aspect-ratio control (fixed
+            # canonical resolution => fixed level count).
+            artifacts = self.impl.prepare_stacked(
+                pts, rng, options=options, execution=self._ctx,
             )
-        prep = _Prepared(
+        else:
+            if self.caps.needs_quantize and self.cluster.quantize:
+                q = quantize(pts, rng)
+                seed_pts = q.points
+                resolution = options.get("resolution", 1.0)
+            artifacts = None
+            if self.impl.preparable:
+                artifacts = self.impl.prepare(
+                    seed_pts, rng, resolution=resolution, options=options,
+                    execution=self._ctx,
+                )
+        prep = PreparedData(
             fingerprint=fp, pts=pts, seed_pts=seed_pts,
             resolution=resolution, artifacts=artifacts,
             rng_state=rng.bit_generator.state,
@@ -428,16 +490,32 @@ class ClusterPlan:
         if isinstance(points, jax.Array) and str(points.dtype) == \
                 self._ctx.dtype and points.ndim == 2:
             prep.points_dev = points       # reuse: no host round-trip
-        self._prepared[fp] = prep
-        self._active = prep
-        self.stats["prepare_builds"] += 1
-        return self
+        return prep
 
     def cache_info(self) -> dict:
         """Prepare-cache statistics (tests assert hit/build counts)."""
-        return dict(self.stats, entries=len(self._prepared))
+        with self._lock:
+            return dict(self.stats, entries=len(self._prepared))
 
-    def _require(self, points) -> _Prepared:
+    def forget(self, prepared: PreparedData) -> bool:
+        """Evict one `PreparedData` from the prepare cache (thread-safe).
+
+        Long-running pipelines over a stream of *fresh* datasets would
+        otherwise retain every request's host copy + device artifacts for
+        the plan's lifetime; `ClusterEngine(retain_prepared=False)` calls
+        this after each solve.  The handle itself stays valid for callers
+        still holding it — only the cache entry (and the plan's implicit
+        active slot, if it points here) is dropped.  Returns True when an
+        entry was actually removed.
+        """
+        with self._lock:
+            removed = self._prepared.pop(prepared.fingerprint,
+                                         None) is not None
+            if self._active is prepared:
+                self._active = None
+        return removed
+
+    def _require(self, points) -> PreparedData:
         if points is not None:
             self.prepare(points)
         if self._active is None:
@@ -447,7 +525,7 @@ class ClusterPlan:
             )
         return self._active
 
-    def _points_device(self, prep: _Prepared) -> jax.Array:
+    def _points_device(self, prep: PreparedData) -> jax.Array:
         if prep.points_dev is None:
             prep.points_dev = jnp.asarray(prep.pts,
                                           jnp.dtype(self._ctx.dtype))
@@ -483,7 +561,21 @@ class ClusterPlan:
             raise RuntimeError("refit() needs a prior prepare()/fit(points)")
         return self._execute(self._active, k or self.cluster.k, seed)
 
-    def _solve_rng(self, prep: _Prepared,
+    def fit_prepared(self, prepared: PreparedData, *,
+                     k: Optional[int] = None,
+                     seed: Optional[int] = None) -> FitResult:
+        """Solve against an explicit `prepare_data` handle.
+
+        Same semantics as `fit`/`refit` but with no implicit active-dataset
+        state, so it is safe to call from a worker thread while other
+        threads prepare new data — the `ClusterEngine` solve loop is built
+        on exactly this call.  With `seed` unset (or equal to the spec's)
+        the prepare-time rng snapshot is replayed, so the result is
+        bit-for-bit the serial `prepare(points); fit()` sequence.
+        """
+        return self._execute(prepared, k or self.cluster.k, seed)
+
+    def _solve_rng(self, prep: PreparedData,
                    seed: Optional[int]) -> np.random.Generator:
         rng = np.random.default_rng(
             self.cluster.seed if seed is None else seed)
@@ -492,10 +584,11 @@ class ClusterPlan:
             rng.bit_generator.state = prep.rng_state
         return rng
 
-    def _execute(self, prep: _Prepared, k: int,
+    def _execute(self, prep: PreparedData, k: int,
                  seed: Optional[int]) -> FitResult:
         t0 = time.perf_counter()
-        self.stats["solves"] += 1
+        with self._lock:
+            self.stats["solves"] += 1
         rng = self._solve_rng(prep, seed)
         options = self.cluster.options_dict()
         options.pop("resolution", None)
@@ -521,7 +614,7 @@ class ClusterPlan:
             extras.setdefault("num_candidates", res.num_candidates)
         return self._finish(prep, k, idx_raw, extras, t0)
 
-    def _finish(self, prep: _Prepared, k: int, idx_raw, extras: dict,
+    def _finish(self, prep: PreparedData, k: int, idx_raw, extras: dict,
                 t0: float) -> FitResult:
         idx = jnp.asarray(idx_raw, jnp.int32)
         pts_dev = self._points_device(prep)
@@ -545,16 +638,45 @@ class ClusterPlan:
 
     # -- multi-problem execution -------------------------------------------
 
-    def fit_batch(self, seeds: Sequence[int], points=None) -> FitResult:
-        """Solve B independent seeding problems on one prepared dataset.
+    def fit_batch(self, seeds: Optional[Sequence[int]] = None, points=None,
+                  *, datasets: Optional[Sequence[Any]] = None) -> FitResult:
+        """Solve B independent seeding problems as one stacked batch.
 
-        Returns a stacked `FitResult` (leading batch axis on indices /
-        centers / cost).  Lane i is bit-identical to `refit(seed=seeds[i])`.
-        Device-native seeders run all lanes as ONE vmapped jit program
-        (MoE-router-style multi-problem seeding); other backends loop over
-        the cached solo program — either way nothing is re-prepared and,
-        after the first batch shape, nothing re-traces.
+        Two modes, both returning a stacked `FitResult` (leading batch axis
+        on indices / centers / cost):
+
+        * ``fit_batch(seeds)`` — B seeds on ONE prepared dataset.  Lane i is
+          bit-identical to `refit(seed=seeds[i])`.  Device-native seeders
+          run all lanes as ONE vmapped jit program (MoE-router-style
+          multi-problem seeding); other backends loop over the cached solo
+          program — either way nothing is re-prepared and, after the first
+          batch shape, nothing re-traces.
+        * ``fit_batch(datasets=[...], seeds=None|[...])`` — B *different*
+          datasets (one optional seed per dataset, default the spec's).  On
+          backends whose impl `supports_stacked` (see the capability
+          table), every dataset is canonically rescaled (exact power-of-two
+          factor into the unit ball — distance ratios, and therefore the
+          D^2 law and the acceptance test, are preserved exactly) and
+          padded to a `batch_schedule.shape_bucket` rung; all lanes of a
+          bucket solve as ONE vmapped jit program with a traced per-lane
+          `n_real` mask, so re-traces are bounded by the O(log n) rung
+          count, never O(B).  Lane i is bit-identical to
+          ``fit_batch(datasets=[datasets[i]], ...)`` in the same shape
+          bucket.  The stacked path covers the seeding stage only: with
+          ``lloyd_iters > 0`` (host-side refinement per dataset) the call
+          falls back to the solo-fit loop, as it does on impls without
+          the capability — either way each dataset is still
+          prepare-cached and ``extras["stacked"]`` reports which path
+          ran.  All datasets must share the feature dimension d;
+          indices/centers/cost are reported per lane in each dataset's
+          ORIGINAL coordinates.
         """
+        if datasets is not None:
+            if points is not None:
+                raise ValueError("pass either points= or datasets=, not both")
+            return self._fit_batch_datasets(list(datasets), seeds)
+        if seeds is None:
+            raise ValueError("fit_batch() needs seeds (or datasets=...)")
         prep = self._require(points)
         seeds = [int(s) for s in seeds]
         if not seeds:
@@ -564,10 +686,11 @@ class ClusterPlan:
             return self._fit_batch_vmapped(prep, seeds)
         return _stack_results([self.refit(seed=s) for s in seeds], seeds)
 
-    def _fit_batch_vmapped(self, prep: _Prepared,
+    def _fit_batch_vmapped(self, prep: PreparedData,
                            seeds: list[int]) -> FitResult:
         t0 = time.perf_counter()
-        self.stats["solves"] += len(seeds)
+        with self._lock:
+            self.stats["solves"] += len(seeds)
         key_bits = jnp.stack([
             jax.random.key_data(jax.random.key(
                 int(self._solve_rng(prep, s).integers(2 ** 31))))
@@ -606,6 +729,104 @@ class ClusterPlan:
             solve_seconds=time.perf_counter() - t0,
             extras=extras,
         )
+
+    # -- multi-DATASET execution (stacked lanes) ---------------------------
+
+    def _fit_batch_datasets(self, datasets: list,
+                            seeds: Optional[Sequence[int]]) -> FitResult:
+        if not datasets:
+            raise ValueError("fit_batch(datasets=...) needs >= 1 dataset")
+        b = len(datasets)
+        seeds = ([int(s) for s in seeds] if seeds is not None
+                 else [self.cluster.seed] * b)
+        if len(seeds) != b:
+            raise ValueError(
+                f"got {len(seeds)} seeds for {b} datasets"
+            )
+        if not (self.impl.supports_stacked
+                and self.cluster.lloyd_iters == 0):
+            # Fallback: pipeline-free solo loop (each dataset still
+            # fingerprint-cached; the engine is the pipelined alternative).
+            results = []
+            for pts_i, s in zip(datasets, seeds):
+                results.append(
+                    self.fit_prepared(self.prepare_data(pts_i), seed=s))
+            out = _stack_results(results, seeds)
+            out.extras["stacked"] = False
+            return out
+        return self._fit_batch_stacked(datasets, seeds)
+
+    def _fit_batch_stacked(self, datasets: list,
+                           seeds: list[int]) -> FitResult:
+        t0 = time.perf_counter()
+        preps = [self._prepare_cached(pts_i, stacked=True)
+                 for pts_i in datasets]
+        dims = {p.pts.shape[1] for p in preps}
+        if len(dims) > 1:
+            raise ValueError(
+                f"stacked fit_batch needs one feature dimension, got {dims}"
+            )
+        with self._lock:
+            self.stats["solves"] += len(seeds)
+        k = self.cluster.k
+        options = self.cluster.options_dict()
+        options.pop("resolution", None)
+        groups: dict[tuple, list[int]] = {}
+        for i, p in enumerate(preps):
+            groups.setdefault(p.artifacts.shape_key, []).append(i)
+        idx_lanes: list = [None] * len(preps)
+        trials_lanes: dict[int, Any] = {}
+        donated = False
+        for members in groups.values():
+            bits = [self._lane_key_bits(preps[i], seeds[i])
+                    for i in members]
+            # Batch axis rides the same power-of-two ladder as the row
+            # padding: pad with copies of lane 0 (results discarded) so B
+            # in [2^j + 1, 2^(j+1)] shares one traced program.
+            b_pad = 1 << max(0, math.ceil(math.log2(len(members))))
+            lanes = [preps[i].artifacts for i in members]
+            lanes += [lanes[0]] * (b_pad - len(members))
+            bits += [bits[0]] * (b_pad - len(members))
+            idx_g, extras_g = self.impl.solve_stacked(
+                lanes, k, jnp.stack(bits), c=self.cluster.c,
+                schedule=self.cluster.schedule, options=options,
+                execution=self._ctx,
+            )
+            donated = donated or bool(extras_g.get("donated"))
+            for j, i in enumerate(members):
+                idx_lanes[i] = idx_g[j]
+                if "trials" in extras_g:
+                    trials_lanes[i] = extras_g["trials"][j]
+        centers, costs = [], []
+        for i, p in enumerate(preps):
+            pts_dev = self._points_device(p)
+            ctr = jnp.take(pts_dev, idx_lanes[i], axis=0)
+            centers.append(ctr)
+            costs.append(_cost_program(pts_dev, ctr))
+        extras: dict = {
+            "seeds": tuple(seeds), "stacked": True, "vmapped": True,
+            "shape_buckets": len(groups), "donated": donated,
+            "lane_rows": tuple(p.artifacts.n_real for p in preps),
+            "bucket_rows": tuple(p.artifacts.arrays[0].shape[-1]
+                                 for p in preps),
+        }
+        if trials_lanes:
+            extras["trials"] = jnp.stack(
+                [trials_lanes[i] for i in range(len(preps))])
+        return FitResult(
+            indices=jnp.stack(idx_lanes),
+            centers=jnp.stack(centers),
+            cost=jnp.stack(costs),
+            k=k,
+            prepare_seconds=float(sum(p.prepare_seconds for p in preps)),
+            solve_seconds=time.perf_counter() - t0,
+            extras=extras,
+        )
+
+    def _lane_key_bits(self, prep: PreparedData, seed: int) -> jax.Array:
+        rng = self._solve_rng(prep, seed)
+        return jax.random.key_data(
+            jax.random.key(int(rng.integers(2 ** 31))))
 
 
 def _resolve_schedule(schedule, batch):

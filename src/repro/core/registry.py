@@ -77,16 +77,33 @@ class BackendImpl:
         artifacts, k, rng, *, c, schedule, options, execution) ->
         (indices, extras)`` runs the sampling stage only.  ``None`` means
         the backend has no cached split (the plan falls back to ``run``).
+    prepare_stacked / solve_stacked:
+        The multi-dataset lanes of `ClusterPlan.fit_batch(datasets=...)`.
+        ``prepare_stacked(pts, rng, *, options, execution) -> StackedLane``
+        builds one dataset's canonically-rescaled, shape-bucket-padded lane
+        artifacts; ``solve_stacked(lanes, k, key_bits, *, c, schedule,
+        options, execution) -> ((B, k) indices, extras)`` runs ONE vmapped
+        jit program over all lanes of a shape bucket.  ``None`` means the
+        backend solves multiple datasets by looping the solo path.
     """
 
     run: Callable
     device_native: bool = False
     prepare: Optional[Callable] = None
     solve: Optional[Callable] = None
+    prepare_stacked: Optional[Callable] = None
+    solve_stacked: Optional[Callable] = None
 
     @property
     def preparable(self) -> bool:
+        """True when the backend exposes the cached prepare/solve split."""
         return self.prepare is not None and self.solve is not None
+
+    @property
+    def supports_stacked(self) -> bool:
+        """True when B *different* datasets can run as one stacked program."""
+        return (self.prepare_stacked is not None
+                and self.solve_stacked is not None)
 
 
 @dataclasses.dataclass
@@ -99,6 +116,7 @@ class SeederSpec:
     impls: dict = dataclasses.field(default_factory=dict)
 
     def impl(self, backend: str) -> BackendImpl:
+        """The backend's `BackendImpl` (KeyError when not implemented)."""
         if backend not in BACKENDS:
             raise KeyError(
                 f"unknown backend {backend!r}; expected {BACKENDS}"
@@ -113,6 +131,7 @@ class SeederSpec:
 
     @property
     def backends(self) -> tuple[str, ...]:
+        """Backends with a registered implementation, in BACKENDS order."""
         return tuple(b for b in BACKENDS if b in self.impls)
 
 
@@ -164,17 +183,20 @@ def capability_table() -> str:
     """Markdown capability matrix generated from the live registry
     (docs/api.md embeds the output; a test keeps the doc in sync)."""
     header = ("| seeder | backends | device-native | cached prepare "
-              "| quantize | accepts `c` | accepts schedule |")
-    sep = "|---" * 7 + "|"
+              "| stacked | quantize | accepts `c` | accepts schedule |")
+    sep = "|---" * 8 + "|"
     rows = [header, sep]
     for name in sorted(SEEDER_SPECS):
         spec = SEEDER_SPECS[name]
         native = [b for b in spec.backends if spec.impls[b].device_native]
         prep = [b for b in spec.backends if spec.impls[b].preparable]
+        stacked = [b for b in spec.backends
+                   if spec.impls[b].supports_stacked]
         rows.append(
             f"| `{name}` | {', '.join(spec.backends)} "
             f"| {', '.join(native) or '—'} "
             f"| {', '.join(prep) or '—'} "
+            f"| {', '.join(stacked) or '—'} "
             f"| {'yes' if spec.caps.needs_quantize else '—'} "
             f"| {'yes' if spec.caps.accepts_c else '—'} "
             f"| {'yes' if spec.caps.accepts_schedule else '—'} |"

@@ -670,13 +670,34 @@ SHARDED_SEEDERS = {
 # draws the key (and any post-program host draws).  The mesh/tile come from
 # the plan's resolved execution context, so the padded artifacts — and the
 # lru-cached shard_map programs keyed on them — are reused across fits.
+#
+# The padded artifacts are `jax.device_put` onto the mesh with the exact
+# shardings the programs' `in_specs` expect (`_place` below), so the
+# cross-chip scatter happens once at prepare time and every solve starts
+# from correctly-placed buffers instead of re-laying them out per fit.
+# Donation is intentionally NOT applied to these buffers: they are the
+# prepare cache — refit/fit_batch reuse them — and donating a cached
+# buffer would poison every later solve.  The one-shot stacked path in
+# `device_seeding` (which donates fresh per-call stacked blocks) is the
+# donation-friendly surface; see docs/api.md §Donation.
 # ---------------------------------------------------------------------------
+
+def _place(x, mesh, spec):
+    """Pre-place one prepared artifact with a program-input sharding."""
+    from jax.sharding import NamedSharding
+
+    return jax.device_put(x, NamedSharding(mesh, spec))
+
 
 def _prep_fastkmeanspp_sh(pts, rng, *, resolution, options, execution):
     lo, hi, meta = prepare_embedding(pts, seed=int(rng.integers(2 ** 31)),
                                      resolution=resolution)
     n_pad = _padded_for_mesh(len(pts), execution.mesh, execution.tile)
-    return (_pad_axis(lo, 2, n_pad), _pad_axis(hi, 2, n_pad), meta, len(pts))
+    axis = points_axis(execution.mesh, n_pad)
+    codes_spec = P(None, None, axis)
+    return (_place(_pad_axis(lo, 2, n_pad), execution.mesh, codes_spec),
+            _place(_pad_axis(hi, 2, n_pad), execution.mesh, codes_spec),
+            meta, len(pts))
 
 
 def _solve_fastkmeanspp_sh(artifacts, pts, k, rng, *, c, schedule, options,
@@ -703,13 +724,20 @@ def _prep_rejection_sh(pts, rng, *, resolution, options, execution):
     n_pad = _padded_for_mesh(len(pts), execution.mesh, execution.tile)
     import dataclasses as _dc
 
+    mesh = execution.mesh
+    axis = points_axis(mesh, n_pad)
     padded = _dc.replace(
         data,
-        codes_lo=_pad_axis(data.codes_lo, 2, n_pad),
-        codes_hi=_pad_axis(data.codes_hi, 2, n_pad),
-        points=_pad_axis(data.points, 0, n_pad),
-        keys_lo=_pad_axis(data.keys_lo, 1, n_pad),
-        keys_hi=_pad_axis(data.keys_hi, 1, n_pad),
+        codes_lo=_place(_pad_axis(data.codes_lo, 2, n_pad), mesh,
+                        P(None, None, axis)),
+        codes_hi=_place(_pad_axis(data.codes_hi, 2, n_pad), mesh,
+                        P(None, None, axis)),
+        points=_place(_pad_axis(data.points, 0, n_pad), mesh,
+                      P(axis, None)),
+        keys_lo=_place(_pad_axis(data.keys_lo, 1, n_pad), mesh,
+                       P(None, axis)),
+        keys_hi=_place(_pad_axis(data.keys_hi, 1, n_pad), mesh,
+                       P(None, axis)),
     )
     return padded, len(pts)
 
@@ -733,7 +761,8 @@ def _solve_rejection_sh(artifacts, pts, k, rng, *, c, schedule, options,
 
 def _prep_kmeans_parallel_sh(pts, rng, *, resolution, options, execution):
     n_pad = _padded_for_mesh(len(pts), execution.mesh, execution.tile)
-    pp = _pad_axis(jnp.asarray(pts, jnp.float32), 0, n_pad)
+    pp = _place(_pad_axis(jnp.asarray(pts, jnp.float32), 0, n_pad),
+                execution.mesh, P(points_axis(execution.mesh, n_pad), None))
     return pp, len(pts)
 
 

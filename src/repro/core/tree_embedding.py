@@ -149,6 +149,7 @@ def build_multitree(
     seed: int = 0,
     resolution: Optional[float] = None,
     num_trees: int = NUM_TREES,
+    max_dist: Optional[float] = None,
 ) -> MultiTreeEmbedding:
     """MULTITREEINIT(): three random-shift grid embeddings over `points`.
 
@@ -156,11 +157,18 @@ def build_multitree(
     — callers may pass the quantisation scale).  Defaults to a 1e-6 fraction
     of max_dist, giving H = O(log Delta) ~ 21 levels.
     O(n d H) time, O(n H) memory per tree.
+
+    `max_dist` overrides the computed diameter bound.  The stacked
+    multi-dataset path pre-scales every dataset into the unit ball (an exact
+    power-of-two rescale) and forces ``max_dist=1.0`` so the embedding's
+    static metadata — `scale`, `num_levels`, `dist_upper_bound_sq` — is
+    bit-identical across datasets and one jit program serves them all.  The
+    caller guarantees the override really upper-bounds `compute_max_dist`.
     """
     pts = np.asarray(points, dtype=np.float64)
     n, d = pts.shape
     rng = np.random.default_rng(seed)
-    max_dist = compute_max_dist(pts)
+    max_dist = compute_max_dist(pts) if max_dist is None else float(max_dist)
     if resolution is None:
         resolution = max_dist * 1e-6
     levels = _num_levels(max_dist, resolution)

@@ -73,6 +73,7 @@ def build_clustered_cache(
     *,
     seed: int = 0,
     info: dict | None = None,
+    engine=None,
 ) -> dict:
     """Host-side codebook build with the paper's seeder (offline step).
 
@@ -80,6 +81,12 @@ def build_clustered_cache(
     level (the exact recent window still covers the newest tokens); pass
     `info={}` to receive the measured drop fraction — raise
     `capacity_slack` or `num_clusters` if it is non-negligible.
+
+    `engine` (a `repro.core.ClusterEngine`) pipelines the per-head codebook
+    rebuilds: every head's host prepare overlaps the previous head's
+    solve, with results bit-identical to the serial loop (the engine's
+    determinism contract).  This is the serving rebuild path — see
+    examples/serve_cluster_kv.py --engine.
     """
     from repro.core import ClusterPlan, ClusterSpec
     from repro.core.lloyd import assign
@@ -94,16 +101,38 @@ def build_clustered_cache(
     dropped = 0
     base = ClusterSpec(k=c, seeder=cfg.seeder, lloyd_iters=cfg.lloyd_iters,
                        seed=seed)
+    # One plan/spec per head: heads are independent seeding problems
+    # (MoE-router-style) with their own seed.
+    def head_pts(bi, h):
+        return keys[bi, :, h, :].astype(np.float64)
+
+    def head_spec(bi, h):
+        return base.replace(seed=seed + 131 * bi + h)
+
+    if engine is not None:
+        # Pipelined path: all per-head float64 copies are in flight at
+        # once (that IS the look-ahead being bought); the serial path
+        # below keeps the one-copy-at-a-time footprint.  The submitted
+        # array rides along with its ticket so the assign step reuses it
+        # instead of re-slicing a second copy.
+        inflight = {}
+        for bi in range(b):
+            for h in range(hk):
+                pts = head_pts(bi, h)
+                inflight[bi, h] = (
+                    engine.submit(pts, cluster=head_spec(bi, h)), pts)
     for bi in range(b):
         for h in range(hk):
-            pts = keys[bi, :, h, :].astype(np.float64)
-            # One plan per head: heads are independent seeding problems
-            # (MoE-router-style) with their own seed.  The token->cluster
-            # assignment stays on the float64 host path: attention keys can
-            # carry large common offsets, where FitResult.predict's f32
-            # expanded form could flip near-tie assignments.
-            plan = ClusterPlan(base.replace(seed=seed + 131 * bi + h))
-            res = plan.fit(pts)
+            # The token->cluster assignment stays on the float64 host
+            # path: attention keys can carry large common offsets, where
+            # FitResult.predict's f32 expanded form could flip near-tie
+            # assignments.
+            if engine is not None:
+                ticket, pts = inflight.pop((bi, h))
+                res = ticket.result()
+            else:
+                pts = head_pts(bi, h)
+                res = ClusterPlan(head_spec(bi, h)).fit(pts)
             centers = np.asarray(res.centers, dtype=np.float64)
             centroids[bi, h] = centers.astype(keys.dtype)
             idx, _ = assign(pts, centers)

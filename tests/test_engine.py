@@ -1,0 +1,270 @@
+"""ClusterEngine + stacked multi-dataset fit_batch (ISSUE 5 acceptance).
+
+  * engine determinism: pipelined results are bit-identical to the serial
+    `plan.prepare(points); plan.fit()` loop, per request;
+  * stacked lanes: lane i of `fit_batch(datasets=...)` is bit-identical to
+    a single-dataset stacked fit in the same shape bucket;
+  * trace accounting: B datasets in one shape bucket compile exactly ONE
+    stacked program (`TRACE_COUNTS["<seeder>/device/stacked"]`), and a
+    second same-bucket batch compiles nothing.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClusterEngine,
+    ClusterPlan,
+    ClusterSpec,
+    ExecutionSpec,
+    TRACE_COUNTS,
+    shape_bucket,
+)
+
+
+def _mixture(n, d=4, k_true=8, seed=0):
+    rng = np.random.default_rng(seed)
+    ctr = rng.normal(size=(k_true, d)) * 25
+    return ctr[rng.integers(k_true, size=n)] + rng.normal(size=(n, d))
+
+
+# ---------------------------------------------------------------------------
+# ClusterEngine
+# ---------------------------------------------------------------------------
+
+def test_engine_pipelined_results_bit_identical_to_serial():
+    datasets = [_mixture(300 + 17 * i, seed=10 + i) for i in range(4)]
+    spec = ClusterSpec(k=4, seeder="fastkmeans++", seed=2)
+    exe = ExecutionSpec(backend="device")
+    with ClusterEngine(spec, exe) as engine:
+        results = engine.map_fit(datasets)
+        stats = engine.stats()
+    assert stats["submitted"] == stats["completed"] == 4
+    serial = ClusterPlan(spec, exe)
+    for ds, res in zip(datasets, results):
+        serial.prepare(ds)
+        ref = serial.fit()
+        np.testing.assert_array_equal(np.asarray(res.indices),
+                                      np.asarray(ref.indices))
+        np.testing.assert_array_equal(np.asarray(res.centers),
+                                      np.asarray(ref.centers))
+
+
+def test_engine_as_completed_tags_and_seeds():
+    datasets = [_mixture(260, seed=i) for i in range(3)]
+    spec = ClusterSpec(k=3, seeder="fastkmeans++", seed=0)
+    with ClusterEngine(spec, ExecutionSpec(backend="device")) as engine:
+        tickets = [engine.submit(ds, seed=7 + i, tag=f"req{i}")
+                   for i, ds in enumerate(datasets)]
+        done = list(engine.as_completed(tickets))
+        assert sorted(t.tag for t in done) == ["req0", "req1", "req2"]
+        assert all(t.done() for t in tickets)
+        # a per-request seed reseeds the solve stage like refit(seed=...)
+        plan = ClusterPlan(spec, ExecutionSpec(backend="device"))
+        plan.prepare(datasets[1])
+        ref = plan.refit(seed=8)
+        np.testing.assert_array_equal(
+            np.asarray(tickets[1].result().indices),
+            np.asarray(ref.indices))
+
+
+def test_engine_forwards_failures_and_rejects_after_close():
+    spec = ClusterSpec(k=3, seeder="fastkmeans++", seed=0)
+    engine = ClusterEngine(spec, ExecutionSpec(backend="device"))
+    bad = engine.submit(np.zeros(7))          # 1-D input: prepare must fail
+    assert bad.exception(timeout=60) is not None
+    engine.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        engine.submit(_mixture(50))
+
+
+def test_engine_retain_prepared_false_evicts_after_solve():
+    """Streaming mode: each request's PreparedData leaves the plan cache
+    once its solve is done, so a long-running loop holds O(pipeline depth)
+    artifacts — results are unaffected."""
+    datasets = [_mixture(240, seed=90 + i) for i in range(3)]
+    spec = ClusterSpec(k=3, seeder="fastkmeans++", seed=1)
+    with ClusterEngine(spec, ExecutionSpec(backend="device"),
+                       retain_prepared=False) as engine:
+        results = engine.map_fit(datasets)
+        assert engine.plan_for().cache_info()["entries"] == 0
+    serial = ClusterPlan(spec, ExecutionSpec(backend="device"))
+    ref = serial.fit(datasets[2])
+    np.testing.assert_array_equal(np.asarray(results[2].indices),
+                                  np.asarray(ref.indices))
+    # plan.forget is idempotent and reports whether it removed anything
+    prep = serial.prepare_data(datasets[0])
+    assert serial.forget(prep) is True
+    assert serial.forget(prep) is False
+    assert serial.cache_info()["entries"] == 1    # datasets[2] retained
+
+
+def test_engine_exit_on_exception_cancels_backlog():
+    """An exception inside the with-block must not hang on queued solves:
+    __exit__ closes with cancel_pending=True and undispatched tickets fail
+    with CancelledError instead of executing."""
+    import concurrent.futures as cf
+
+    spec = ClusterSpec(k=3, seeder="fastkmeans++", seed=0)
+    tickets = []
+    with pytest.raises(RuntimeError, match="boom"):
+        with ClusterEngine(spec, ExecutionSpec(backend="device")) as engine:
+            tickets = [engine.submit(_mixture(220, seed=i), tag=i)
+                       for i in range(6)]
+            raise RuntimeError("boom")
+    outcomes = {"done": 0, "cancelled": 0}
+    for t in tickets:
+        exc = t.exception(timeout=60)
+        if exc is None:
+            outcomes["done"] += 1
+        else:
+            assert isinstance(exc, cf.CancelledError)
+            outcomes["cancelled"] += 1
+    assert outcomes["done"] + outcomes["cancelled"] == 6
+    assert outcomes["cancelled"] >= 1, "backlog was fully solved, not cut"
+
+
+def test_engine_requires_a_spec_somewhere():
+    with ClusterEngine() as engine:
+        with pytest.raises(ValueError, match="ClusterSpec"):
+            engine.submit(_mixture(50))
+
+
+# ---------------------------------------------------------------------------
+# Stacked fit_batch over different datasets
+# ---------------------------------------------------------------------------
+
+def test_stacked_eight_datasets_trace_exactly_once_per_bucket():
+    """8 distinct same-bucket datasets => ONE stacked program; a second
+    same-shape batch => zero new traces (the acceptance row)."""
+    datasets = [_mixture(280 + 13 * i, seed=20 + i) for i in range(8)]
+    assert {shape_bucket(len(ds)) for ds in datasets} == {1024}
+    plan = ClusterPlan(ClusterSpec(k=3, seeder="fastkmeans++", seed=1),
+                       ExecutionSpec(backend="device"))
+    before = dict(TRACE_COUNTS)
+    batch = plan.fit_batch(datasets=datasets)
+    delta = TRACE_COUNTS["fastkmeans++/device/stacked"] - before.get(
+        "fastkmeans++/device/stacked", 0)
+    assert delta == 1, "8 same-bucket datasets must compile one program"
+    assert batch.extras["stacked"] and batch.extras["shape_buckets"] == 1
+    assert np.asarray(batch.indices).shape == (8, 3)
+    assert np.asarray(batch.centers).shape == (8, 3, 4)
+    # fresh same-bucket datasets: zero new traces of ANY program
+    more = [_mixture(300 + 7 * i, seed=50 + i) for i in range(8)]
+    traces = dict(TRACE_COUNTS)
+    plan.fit_batch(datasets=more)
+    assert dict(TRACE_COUNTS) == traces, "same-bucket batch re-traced"
+
+
+def test_stacked_lane_equals_single_dataset_fit():
+    datasets = [_mixture(300 + 11 * i, seed=30 + i) for i in range(5)]
+    # lsh_r is given in ORIGINAL data units: the canonical lane prep must
+    # rescale it with the points (exercises the unit-conversion path).
+    plan = ClusterPlan(ClusterSpec(k=4, seeder="rejection", seed=3,
+                                   options={"lsh_r": 60.0}),
+                       ExecutionSpec(backend="device"))
+    batch = plan.fit_batch(datasets=datasets)
+    assert batch.extras["stacked"] and batch.extras["vmapped"]
+    solo = plan.fit_batch(datasets=[datasets[2]])
+    np.testing.assert_array_equal(np.asarray(solo.indices[0]),
+                                  np.asarray(batch.indices[2]))
+    # per-dataset cost is computed in ORIGINAL coordinates
+    from repro.core import clustering_cost
+
+    ds = datasets[2]
+    idx = np.asarray(batch.indices[2], dtype=np.int64)
+    np.testing.assert_allclose(float(np.asarray(batch.cost[2])),
+                               clustering_cost(ds, ds[idx]), rtol=1e-4)
+
+
+def test_stacked_respects_per_dataset_seeds():
+    datasets = [_mixture(270, seed=40 + i) for i in range(2)]
+    plan = ClusterPlan(ClusterSpec(k=3, seeder="fastkmeans++", seed=0),
+                       ExecutionSpec(backend="device"))
+    b1 = plan.fit_batch(datasets=datasets, seeds=[5, 6])
+    solo = plan.fit_batch(datasets=[datasets[1]], seeds=[6])
+    np.testing.assert_array_equal(np.asarray(solo.indices[0]),
+                                  np.asarray(b1.indices[1]))
+    b2 = plan.fit_batch(datasets=datasets, seeds=[5, 7])
+    assert not np.array_equal(np.asarray(b1.indices[1]),
+                              np.asarray(b2.indices[1]))
+
+
+def test_stacked_mixed_sizes_split_into_shape_buckets():
+    datasets = [_mixture(200, seed=1), _mixture(1500, seed=2),
+                _mixture(900, seed=3)]
+    plan = ClusterPlan(ClusterSpec(k=3, seeder="fastkmeans++", seed=0),
+                       ExecutionSpec(backend="device"))
+    batch = plan.fit_batch(datasets=datasets)
+    assert batch.extras["shape_buckets"] == 2        # rungs 1024 and 2048
+    assert batch.extras["bucket_rows"] == (1024, 2048, 1024)
+    assert batch.extras["lane_rows"] == (200, 1500, 900)
+    # every lane index must point at a real row of its own dataset
+    for i, ds in enumerate(datasets):
+        assert np.asarray(batch.indices[i]).max() < len(ds)
+
+
+def test_stacked_prepare_is_fingerprint_cached():
+    datasets = [_mixture(256, seed=60 + i) for i in range(3)]
+    plan = ClusterPlan(ClusterSpec(k=3, seeder="rejection", seed=0),
+                       ExecutionSpec(backend="device"))
+    plan.fit_batch(datasets=datasets)
+    builds = plan.cache_info()["prepare_builds"]
+    plan.fit_batch(datasets=datasets, seeds=[1, 2, 3])
+    info = plan.cache_info()
+    assert info["prepare_builds"] == builds, "stacked lanes re-prepared"
+    assert info["prepare_hits"] >= 3
+
+
+def test_fallback_loop_backends_stack_results():
+    datasets = [_mixture(150, seed=70 + i) for i in range(3)]
+    plan = ClusterPlan(ClusterSpec(k=3, seeder="kmeans++", seed=1))
+    batch = plan.fit_batch(datasets=datasets)
+    assert batch.extras["stacked"] is False
+    assert np.asarray(batch.indices).shape == (3, 3)
+    ref = plan.fit_prepared(plan.prepare_data(datasets[1]))
+    np.testing.assert_array_equal(np.asarray(batch.indices[1]),
+                                  np.asarray(ref.indices))
+
+
+def test_fit_batch_argument_validation():
+    plan = ClusterPlan(ClusterSpec(k=3, seeder="fastkmeans++", seed=0),
+                       ExecutionSpec(backend="device"))
+    with pytest.raises(ValueError, match="seeds"):
+        plan.fit_batch()
+    with pytest.raises(ValueError, match="not both"):
+        plan.fit_batch([1], points=_mixture(100),
+                       datasets=[_mixture(100)])
+    with pytest.raises(ValueError, match="seeds"):
+        plan.fit_batch(datasets=[_mixture(100)], seeds=[1, 2])
+    with pytest.raises(ValueError, match="dimension"):
+        plan.fit_batch(datasets=[_mixture(100, d=4), _mixture(100, d=6)])
+
+
+def test_donation_is_advisory_off_tpu():
+    """donate=True must be safe anywhere: on the CPU backend (where XLA
+    ignores donation) the gate keeps it off and reports so in extras."""
+    import jax
+
+    from repro.core.device_seeding import use_donation
+
+    datasets = [_mixture(200, seed=80 + i) for i in range(2)]
+    plan = ClusterPlan(ClusterSpec(k=3, seeder="fastkmeans++", seed=0),
+                       ExecutionSpec(backend="device", donate=True))
+    batch = plan.fit_batch(datasets=datasets)
+    expected = jax.default_backend() != "cpu"
+    assert batch.extras["donated"] is expected
+    assert use_donation(plan.execution) is expected
+    # donation never poisons the cached lanes: a second batch still works
+    again = plan.fit_batch(datasets=datasets)
+    np.testing.assert_array_equal(np.asarray(batch.indices),
+                                  np.asarray(again.indices))
+
+
+def test_shape_bucket_ladder():
+    assert shape_bucket(1) == 1024
+    assert shape_bucket(1024) == 1024
+    assert shape_bucket(1025) == 2048
+    assert shape_bucket(70_000) == 131_072
+    with pytest.raises(ValueError):
+        shape_bucket(0)

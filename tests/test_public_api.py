@@ -1,28 +1,37 @@
-"""Public-API snapshot: lock `repro.core.__all__`, the `ClusterPlan`
-method signatures, and the doc's capability table against silent drift.
+"""Public-API snapshot: lock `repro.core.__all__`, the `ClusterPlan` /
+`ClusterEngine` method signatures, and the docs against silent drift.
 
 Changing the public surface is allowed — but it must be a deliberate,
 reviewed edit of BOTH the code and this snapshot (and docs/api.md for the
-capability matrix), never an accident.
+capability matrix and the section headings asserted below), never an
+accident.
 """
 
 import inspect
 from pathlib import Path
 
 import repro.core as core
-from repro.core import ClusterPlan, SEEDER_SPECS, capability_table
+from repro.core import (
+    ClusterEngine,
+    ClusterPlan,
+    SEEDER_SPECS,
+    capability_table,
+)
 
 EXPECTED_ALL = sorted([
     "BACKENDS",
     "BatchSchedule",
+    "ClusterEngine",
     "ClusterPlan",
     "ClusterSpec",
     "ExecutionSpec",
     "FitResult",
+    "FitTicket",
     "KMeans",
     "KMeansConfig",
     "MultiTreeEmbedding",
     "MultiTreeSampler",
+    "PreparedData",
     "SEEDERS",
     "SEEDER_SPECS",
     "SeederSpec",
@@ -42,19 +51,44 @@ EXPECTED_ALL = sorted([
     "lloyd",
     "rejection_sampling",
     "resolve_seeder",
+    "shape_bucket",
     "uniform_sampling",
 ])
 
 # PEP-563 postponed annotations: signature strings carry quoted types.
 EXPECTED_SIGNATURES = {
     "prepare": "(self, points) -> 'ClusterPlan'",
+    "prepare_data": "(self, points) -> 'PreparedData'",
     "fit": "(self, points=None, *, seed: 'Optional[int]' = None) "
            "-> 'FitResult'",
+    "fit_prepared": "(self, prepared: 'PreparedData', *, "
+                    "k: 'Optional[int]' = None, "
+                    "seed: 'Optional[int]' = None) -> 'FitResult'",
     "refit": "(self, *, k: 'Optional[int]' = None, "
              "seed: 'Optional[int]' = None) -> 'FitResult'",
-    "fit_batch": "(self, seeds: 'Sequence[int]', points=None) "
+    "fit_batch": "(self, seeds: 'Optional[Sequence[int]]' = None, "
+                 "points=None, *, "
+                 "datasets: 'Optional[Sequence[Any]]' = None) "
                  "-> 'FitResult'",
     "cache_info": "(self) -> 'dict'",
+}
+
+EXPECTED_ENGINE_SIGNATURES = {
+    "submit": "(self, points, *, cluster: 'Optional[ClusterSpec]' = None, "
+              "seed: 'Optional[int]' = None, tag: 'Any' = None) "
+              "-> 'FitTicket'",
+    "map_fit": "(self, datasets: 'Sequence[Any]', *, "
+               "cluster: 'Optional[ClusterSpec]' = None, "
+               "seeds: 'Optional[Sequence[int]]' = None) "
+               "-> 'list[FitResult]'",
+    "as_completed": "(self, tickets: 'Iterable[FitTicket]', "
+                    "timeout: 'Optional[float]' = None) "
+                    "-> 'Iterator[FitTicket]'",
+    "plan_for": "(self, cluster: 'Optional[ClusterSpec]' = None) "
+                "-> 'ClusterPlan'",
+    "stats": "(self) -> 'dict'",
+    "close": "(self, wait: 'bool' = True, *, "
+             "cancel_pending: 'bool' = False) -> 'None'",
 }
 
 
@@ -70,15 +104,41 @@ def test_cluster_plan_signatures_are_locked():
         assert sig == expected, f"ClusterPlan.{name}: {sig!r}"
 
 
+def test_cluster_engine_signatures_are_locked():
+    for name, expected in EXPECTED_ENGINE_SIGNATURES.items():
+        sig = str(inspect.signature(getattr(ClusterEngine, name)))
+        assert sig == expected, f"ClusterEngine.{name}: {sig!r}"
+
+
 def test_every_registered_seeder_has_cpu_impl_and_doc():
     for name, spec in SEEDER_SPECS.items():
         assert "cpu" in spec.impls, name
         assert spec.doc, f"seeder {name!r} has no one-line doc"
 
 
+def _api_doc() -> str:
+    return (Path(__file__).resolve().parents[1] / "docs" / "api.md"
+            ).read_text()
+
+
 def test_docs_capability_table_in_sync():
     """docs/api.md embeds the generated registry table verbatim."""
-    doc = (Path(__file__).resolve().parents[1] / "docs" / "api.md"
-           ).read_text()
+    doc = _api_doc()
     for line in capability_table().splitlines():
         assert line in doc, f"docs/api.md out of sync with registry: {line}"
+
+
+def test_docs_cover_engine_stacked_and_donation():
+    """The ISSUE-5 surfaces must stay documented: docs/api.md keeps the
+    engine, stacked-fit_batch and donation sections (renaming a heading
+    here without updating cross-doc links is the anchor-rot this guards)."""
+    doc = _api_doc()
+    for heading in (
+        "## Stacked `fit_batch` over *different* datasets",
+        "## `ClusterEngine`: async pipelined execution",
+        "## Donation semantics",
+    ):
+        assert heading in doc, f"docs/api.md lost section {heading!r}"
+    for phrase in ("shape bucket", "prepare_data", "fit_prepared",
+                   "bit-identical to the serial", "TRACE_COUNTS"):
+        assert phrase in doc, f"docs/api.md no longer mentions {phrase!r}"
