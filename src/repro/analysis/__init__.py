@@ -1,0 +1,42 @@
+"""repro.analysis — JAX/Pallas-aware static analysis for this repo.
+
+A small AST lint framework with rules encoding the invariants the test
+suite can only check dynamically (and often only probabilistically):
+trace-cache stability, device-residency, RNG key discipline, lock
+discipline in the pipelined engine, and Pallas tile hygiene.
+
+Entry points:
+
+- ``python -m repro.analysis [paths] [--strict]`` — the CLI / CI gate.
+- :func:`analyze_paths` / :func:`analyze_sources` — library API (the
+  latter takes in-memory ``{path: source}`` dicts; used by the tests).
+
+See docs/analysis.md for the rule catalogue, the baseline workflow and
+the ``# repro: disable=<rule>`` suppression pragma.
+"""
+
+from repro.analysis.baseline import load_baseline, partition, write_baseline
+from repro.analysis.engine import (
+    analyze_paths,
+    analyze_sources,
+    collect_files,
+    repo_root,
+)
+from repro.analysis.findings import SEVERITIES, Finding
+from repro.analysis.registry import RULES, Rule, all_rules, rule
+
+__all__ = [
+    "Finding",
+    "Rule",
+    "RULES",
+    "SEVERITIES",
+    "all_rules",
+    "analyze_paths",
+    "analyze_sources",
+    "collect_files",
+    "load_baseline",
+    "partition",
+    "repo_root",
+    "rule",
+    "write_baseline",
+]

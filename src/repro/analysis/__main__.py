@@ -1,0 +1,92 @@
+"""CLI: ``python -m repro.analysis [paths...] [--strict] [...]``.
+
+Default target is ``src/repro`` under the repository root; the default
+baseline is ``analysis-baseline.txt`` at the root.  Without ``--strict``
+the run is report-only (exit 0).  With ``--strict`` any finding not in
+the baseline exits 1 — the CI gate.  ``--write-baseline`` grandfathers
+the current findings (discouraged; see docs/analysis.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis.baseline import load_baseline, partition, write_baseline
+from repro.analysis.engine import analyze_paths, repo_root
+from repro.analysis.registry import all_rules
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX/Pallas-aware static analysis for this repository.",
+    )
+    p.add_argument("paths", nargs="*", type=Path,
+                   help="files or directories to analyze "
+                        "(default: src/repro under the repo root)")
+    p.add_argument("--strict", action="store_true",
+                   help="exit 1 on any finding not in the baseline "
+                        "(the CI gate)")
+    p.add_argument("--baseline", type=Path, default=None,
+                   help="baseline file (default: <repo>/analysis-baseline.txt)")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="grandfather the current findings into the baseline")
+    p.add_argument("--rule", action="append", dest="rules", default=None,
+                   metavar="ID", help="run only this rule (repeatable)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the registered rules and exit")
+    return p
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    registry = all_rules()
+
+    if args.list_rules:
+        width = max(len(r) for r in registry)
+        for rid, r in sorted(registry.items()):
+            print(f"{rid:<{width}}  [{r.severity}]  {r.doc}")
+        return 0
+
+    root = repo_root()
+    paths = args.paths or [root / "src" / "repro"]
+    baseline_path = args.baseline or (root / "analysis-baseline.txt")
+
+    if args.rules:
+        unknown = [r for r in args.rules if r not in registry]
+        if unknown:
+            print(f"unknown rule(s): {', '.join(unknown)}", file=sys.stderr)
+            return 2
+
+    findings = analyze_paths(paths, rules=args.rules, root=root)
+
+    if args.write_baseline:
+        write_baseline(baseline_path, findings)
+        print(f"wrote {len(findings)} finding(s) to {baseline_path}")
+        return 0
+
+    baseline = load_baseline(baseline_path)
+    new, old = partition(findings, baseline)
+
+    for f in new:
+        print(f.render())
+    if old:
+        print(f"({len(old)} baselined finding(s) suppressed; "
+              f"see {baseline_path.name})")
+
+    errors = [f for f in new if f.severity == "error"]
+    warnings = [f for f in new if f.severity == "warning"]
+    if new:
+        print(f"{len(errors)} error(s), {len(warnings)} warning(s)")
+    else:
+        print("no findings")
+
+    if args.strict and new:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

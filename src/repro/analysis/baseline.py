@@ -1,0 +1,61 @@
+"""Baseline file: grandfathered findings the strict gate tolerates.
+
+Format: one tab-separated ``rule<TAB>path<TAB>message`` entry per line,
+``#`` comments and blank lines ignored.  Entries intentionally carry no
+line number — unrelated edits that shift a file do not invalidate the
+baseline; changing the finding itself (rule, file or message) does.
+
+The shipped `analysis-baseline.txt` is empty: every finding the initial
+rule set surfaced in `src/repro` was fixed in the PR that introduced it,
+and CI's `python -m repro.analysis --strict` keeps it that way.  The
+workflow for intentionally grandfathering a finding (prefer a targeted
+``# repro: disable=<rule>`` pragma) is described in docs/analysis.md.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Iterable
+
+from repro.analysis.findings import Finding
+
+__all__ = ["load_baseline", "write_baseline", "partition"]
+
+_HEADER = """\
+# repro.analysis baseline — grandfathered findings.
+# One entry per line: <rule>\\t<path>\\t<message>
+# Keep this file EMPTY: fix findings (or suppress with a justified
+# `# repro: disable=<rule>` pragma) instead of baselining them.
+"""
+
+
+def load_baseline(path: Path) -> set:
+    """Baseline keys from `path` (missing file = empty baseline)."""
+    keys = set()
+    if not path.exists():
+        return keys
+    for raw in path.read_text().splitlines():
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        parts = line.split("\t")
+        if len(parts) != 3:
+            raise ValueError(f"{path}: malformed baseline entry {raw!r}")
+        keys.add(tuple(parts))
+    return keys
+
+
+def write_baseline(path: Path, findings: Iterable[Finding]) -> None:
+    """Rewrite `path` grandfathering every finding in `findings`."""
+    entries = sorted({f.baseline_key for f in findings})
+    body = "".join(f"{r}\t{p}\t{m}\n" for r, p, m in entries)
+    path.write_text(_HEADER + body)
+
+
+def partition(findings: list[Finding],
+              baseline: set) -> tuple[list[Finding], list[Finding]]:
+    """Split into (new, baselined) against the baseline key set."""
+    new, old = [], []
+    for f in findings:
+        (old if f.baseline_key in baseline else new).append(f)
+    return new, old

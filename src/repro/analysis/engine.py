@@ -1,0 +1,86 @@
+"""Analysis driver: collect files, build the project table, run rules.
+
+Two passes, mirroring a real compiler front end: pass 1 parses every file
+and builds the cross-file `Project` symbol table (dataclass frozen-ness,
+jit static names); pass 2 runs each registered rule per file against both
+contexts.  Findings are pragma-filtered, de-duplicated and sorted, so the
+output is deterministic for the CI gate and the tests.
+"""
+
+from __future__ import annotations
+
+import os
+from pathlib import Path
+from typing import Optional, Sequence
+
+from repro.analysis.context import FileContext, Project
+from repro.analysis.findings import Finding
+from repro.analysis.registry import all_rules
+
+__all__ = ["analyze_paths", "analyze_sources", "collect_files"]
+
+
+def collect_files(paths: Sequence[Path]) -> list[Path]:
+    """Every .py file under `paths` (files pass through), sorted."""
+    out: set[Path] = set()
+    for p in paths:
+        p = Path(p)
+        if p.is_file():
+            out.add(p)
+        elif p.is_dir():
+            out.update(p.rglob("*.py"))
+        else:
+            raise FileNotFoundError(f"no such path: {p}")
+    return sorted(out)
+
+
+def _rel(path: Path, root: Optional[Path]) -> str:
+    try:
+        rel = path.resolve().relative_to((root or Path.cwd()).resolve())
+    except ValueError:
+        rel = path
+    return rel.as_posix()
+
+
+def analyze_sources(sources: dict,
+                    rules: Optional[Sequence[str]] = None) -> list[Finding]:
+    """Analyze in-memory ``{path: source}`` modules (the test fixture API).
+
+    All modules share one `Project`, so cross-file resolution (e.g. a
+    frozen dataclass defined in a sibling fixture) works exactly as on
+    disk.  Unparseable sources raise SyntaxError — the analyzer refuses to
+    silently skip code it cannot see.
+    """
+    contexts = [FileContext(path, text) for path, text in sources.items()]
+    project = Project(contexts)
+    registry = all_rules()
+    selected = (registry.values() if rules is None
+                else [registry[r] for r in rules])
+    findings: set[Finding] = set()
+    for ctx in contexts:
+        for r in selected:
+            for f in r.check(ctx, project):
+                if not ctx.suppressed(f.rule, f.line):
+                    findings.add(f)
+    return sorted(findings)
+
+
+def analyze_paths(paths: Sequence[Path],
+                  rules: Optional[Sequence[str]] = None,
+                  root: Optional[Path] = None) -> list[Finding]:
+    """Analyze every .py file under `paths`; paths reported `root`-relative."""
+    files = collect_files(paths)
+    sources = {}
+    for f in files:
+        sources[_rel(f, root)] = f.read_text()
+    return analyze_sources(sources, rules=rules)
+
+
+def repo_root() -> Path:
+    """The repository root (directory containing src/repro), best effort."""
+    here = Path(__file__).resolve()
+    for parent in here.parents:
+        if (parent / "src" / "repro").is_dir() or \
+                (parent / ".git").is_dir():
+            return parent
+    return Path(os.getcwd())

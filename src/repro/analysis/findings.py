@@ -1,0 +1,39 @@
+"""Finding: one rule violation, anchored to a `file:line`.
+
+Findings are frozen and ordered so rule output is deterministic: the
+engine sorts by (path, line, rule) and the CLI prints them in that order.
+`baseline_key` deliberately omits the line number — a grandfathered
+finding keeps matching its baseline entry when unrelated edits shift the
+file, and disappears from the baseline match only when the rule, file or
+message itself changes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["Finding", "SEVERITIES"]
+
+SEVERITIES = ("error", "warning")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation at `path:line`."""
+
+    path: str           # repo-relative, forward slashes
+    line: int           # 1-indexed
+    rule: str           # registry id, e.g. "rng-key-reuse"
+    message: str
+    severity: str = "error"
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"unknown severity {self.severity!r}")
+
+    @property
+    def baseline_key(self) -> tuple:
+        return (self.rule, self.path, self.message)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"

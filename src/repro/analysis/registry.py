@@ -1,0 +1,57 @@
+"""Rule registry: id -> (checker, severity, doc).
+
+A rule is a generator ``check(ctx: FileContext, project: Project)``
+yielding `Finding`s for one file.  Registration is declarative::
+
+    @rule("rng-key-reuse", severity="error",
+          doc="a jax.random key is consumed twice without a split")
+    def check(ctx, project):
+        ...
+
+Importing `repro.analysis.rules` registers the built-in set; the engine
+runs every registered rule unless the caller narrows `rules=`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.analysis.findings import SEVERITIES
+
+__all__ = ["Rule", "RULES", "rule", "all_rules"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """One registered analysis pass."""
+
+    id: str
+    check: Callable
+    severity: str
+    doc: str
+
+
+RULES: dict[str, Rule] = {}
+
+
+def rule(rule_id: str, *, severity: str = "error", doc: str = ""):
+    """Register a checker under `rule_id` (module import time)."""
+    if severity not in SEVERITIES:
+        raise ValueError(f"unknown severity {severity!r}")
+
+    def decorator(fn):
+        if rule_id in RULES:
+            raise ValueError(f"duplicate rule id {rule_id!r}")
+        RULES[rule_id] = Rule(id=rule_id, check=fn, severity=severity,
+                              doc=doc)
+        return fn
+
+    return decorator
+
+
+def all_rules() -> dict[str, Rule]:
+    """The registry with the built-in rules loaded."""
+    import repro.analysis.rules  # noqa: F401 — registers on import
+
+    return RULES

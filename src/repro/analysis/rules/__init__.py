@@ -1,0 +1,13 @@
+"""Built-in rule set.  Importing this package registers every rule."""
+
+from repro.analysis.rules import (  # noqa: F401 — imported for registration
+    host_sync,
+    jit_static_hashability,
+    lock_discipline,
+    pallas_tiles,
+    retrace_hazard,
+    rng_reuse,
+)
+
+__all__ = ["host_sync", "jit_static_hashability", "lock_discipline",
+           "pallas_tiles", "retrace_hazard", "rng_reuse"]

@@ -1,0 +1,51 @@
+"""Shared AST helpers for the rule implementations."""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.context import dotted_name
+
+__all__ = ["dotted_name", "walk_own", "calls_in", "names_in",
+           "iter_statements"]
+
+
+def walk_own(node: ast.AST) -> Iterator[ast.AST]:
+    """ast.walk that does NOT descend into nested function/class bodies.
+
+    Nested defs execute when *called*, not where they appear, so linear
+    dataflow walks (taint, key-use counting) must skip them; they are
+    analyzed as functions in their own right.
+    """
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        child = stack.pop()
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda, ast.ClassDef)):
+            continue
+        yield child
+        stack.extend(ast.iter_child_nodes(child))
+
+
+def calls_in(node: ast.AST) -> Iterator[ast.Call]:
+    for child in walk_own(node):
+        if isinstance(child, ast.Call):
+            yield child
+    if isinstance(node, ast.Call):
+        yield node
+
+
+def names_in(node: ast.AST) -> Iterator[ast.Name]:
+    if isinstance(node, ast.Name):
+        yield node
+    for child in walk_own(node):
+        if isinstance(child, ast.Name):
+            yield child
+
+
+def iter_statements(body: list) -> Iterator[ast.stmt]:
+    """Flatten a statement list WITHOUT entering nested defs (control-flow
+    blocks are yielded as single compound statements)."""
+    for stmt in body:
+        yield stmt

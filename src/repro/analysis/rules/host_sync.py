@@ -1,0 +1,123 @@
+"""host-sync-in-jit: forcing a traced value to the host inside a program.
+
+``float(x)`` / ``int(x)`` / ``bool(x)`` / ``x.item()`` / ``np.asarray(x)``
+on a traced value inside a jit function (or a `lax.while_loop`/`scan`/
+`fori_loop` body) either raises a TracerError or — worse, under
+`jax.disable_jit` or concretization-friendly paths — silently serializes
+the device pipeline once per call.  The paper's speedup assumes the whole
+k-center loop stays on device.
+
+Taint analysis per traced function: the traced parameters (every
+parameter except jit `static_argnames`; *all* parameters for lax bodies,
+shard_map programs, and nested closures) seed the taint set; assignments
+propagate it; shape metadata (``.shape``/``.ndim``/``.dtype``/``.size``,
+``len()``) is exempt — ``int(x.shape[0])`` is host arithmetic, not a
+sync.  Only host-conversion calls whose argument is tainted are flagged,
+so ``float(c) ** 2`` on a static stays clean.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+from repro.analysis.registry import rule
+from repro.analysis.rules._common import dotted_name, walk_own
+
+_CONVERTERS = {"int", "float", "bool", "complex"}
+_NP_CONVERTERS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+                  "onp.asarray", "onp.array"}
+_ITEM_METHODS = {"item", "tolist", "__float__", "__int__", "__bool__"}
+_SHAPE_ATTRS = {"shape", "ndim", "dtype", "size"}
+
+
+def _traced_params(fn: ast.FunctionDef, info) -> set:
+    args = fn.args
+    names = [a.arg for a in (args.posonlyargs + args.args + args.kwonlyargs)]
+    if args.vararg:
+        names.append(args.vararg.arg)
+    if args.kwarg:
+        names.append(args.kwarg.arg)
+    if info.kind == "jit":
+        return {n for n in names if n not in info.statics}
+    return set(names)
+
+
+def _tainted(node: ast.expr, taint: set) -> bool:
+    if isinstance(node, ast.Name):
+        return node.id in taint
+    if isinstance(node, ast.Attribute):
+        if node.attr in _SHAPE_ATTRS:
+            return False                    # host metadata, not a sync
+        return _tainted(node.value, taint)
+    if isinstance(node, ast.Call):
+        name = dotted_name(node.func)
+        if name == "len":
+            return False
+        parts = [node.func] + list(node.args) + \
+            [kw.value for kw in node.keywords]
+        return any(_tainted(p, taint) for p in parts)
+    if isinstance(node, (ast.Lambda, ast.FunctionDef)):
+        return False
+    return any(_tainted(c, taint) for c in ast.iter_child_nodes(node)
+               if isinstance(c, ast.expr))
+
+
+def _sync_call(call: ast.Call):
+    """(checked_expr, description) if `call` is a host-conversion, else None."""
+    name = dotted_name(call.func)
+    if name in _CONVERTERS and len(call.args) == 1:
+        return call.args[0], f"{name}()"
+    if name in _NP_CONVERTERS and call.args:
+        return call.args[0], f"{name}()"
+    if isinstance(call.func, ast.Attribute) \
+            and call.func.attr in _ITEM_METHODS:
+        return call.func.value, f".{call.func.attr}()"
+    return None
+
+
+@rule("host-sync-in-jit",
+      doc="float()/int()/bool()/.item()/np.asarray on a traced value "
+          "inside a jit program or lax loop body")
+def check(ctx, project):
+    for fn, info in ctx.traced.items():
+        taint = _traced_params(fn, info)
+        # linear taint propagation through the function body (nested defs
+        # excluded: they are traced functions of their own)
+        for node in walk_own(fn):
+            if isinstance(node, ast.Assign):
+                hot = _tainted(node.value, taint)
+                for t in node.targets:
+                    for name in _flat_names(t):
+                        (taint.add if hot else taint.discard)(name)
+            elif isinstance(node, ast.AugAssign):
+                if _tainted(node.value, taint) and \
+                        isinstance(node.target, ast.Name):
+                    taint.add(node.target.id)
+            elif isinstance(node, ast.For):
+                if _tainted(node.iter, taint):
+                    for name in _flat_names(node.target):
+                        taint.add(name)
+        for node in walk_own(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            hit = _sync_call(node)
+            if hit is None:
+                continue
+            expr, desc = hit
+            if _tainted(expr, taint):
+                yield Finding(
+                    path=ctx.path, line=node.lineno,
+                    rule="host-sync-in-jit",
+                    message=(f"{desc} on a traced value inside "
+                             f"'{fn.name}' ({info.kind}) forces a host "
+                             "sync / TracerError"),
+                )
+
+
+def _flat_names(target: ast.AST):
+    if isinstance(target, ast.Name):
+        yield target.id
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for e in target.elts:
+            yield from _flat_names(e)

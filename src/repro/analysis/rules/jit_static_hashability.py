@@ -1,0 +1,110 @@
+"""jit-static-hashability: jit statics and lru_cache keys must hash.
+
+`jax.jit` hashes every `static_argnames` argument into its program-cache
+key, and the sharded backend's `functools.lru_cache` program builders
+hash every parameter.  An unhashable static (a mutable dataclass, a
+list/dict/set/ndarray) raises at call time at best — and a *mutable but
+hashable* one silently poisons the cache (the `BatchSchedule` /
+`ClusterSpec` contract: specs that ride cache keys are frozen
+dataclasses).
+
+The check is annotation-driven and cross-file: a static parameter whose
+annotation resolves (through ``Optional[...]``, ``X | None`` and
+``tuple[...]`` elements) to a list/dict/set/bytearray/ndarray, or to a
+project dataclass that is not frozen (default ``eq=True`` without
+``frozen``/``unsafe_hash``/``__hash__`` sets ``__hash__ = None``), is
+flagged.  Unannotated parameters are not guessed at.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+from repro.analysis.registry import rule
+from repro.analysis.rules._common import dotted_name
+
+_UNHASHABLE_BUILTINS = {"list", "dict", "set", "bytearray", "List", "Dict",
+                        "Set", "MutableMapping", "MutableSequence",
+                        "ndarray", "Array"}
+_WRAPPERS = {"Optional", "Union", "tuple", "Tuple", "frozenset", "FrozenSet",
+             "Final", "Annotated"}
+
+
+def _unhashable_reason(ann: ast.expr, project):
+    """Why the annotated type cannot key a cache, or None if it can."""
+    if ann is None:
+        return None
+    if isinstance(ann, ast.Constant):            # `None` in unions / strings
+        if isinstance(ann.value, str):
+            try:
+                return _unhashable_reason(
+                    ast.parse(ann.value, mode="eval").body, project)
+            except SyntaxError:
+                return None
+        return None
+    if isinstance(ann, ast.BinOp) and isinstance(ann.op, ast.BitOr):
+        return (_unhashable_reason(ann.left, project)
+                or _unhashable_reason(ann.right, project))
+    if isinstance(ann, ast.Subscript):
+        base = dotted_name(ann.value)
+        last = base.split(".")[-1] if base else None
+        if last in _UNHASHABLE_BUILTINS:
+            return f"'{last}[...]' is unhashable"
+        if last in _WRAPPERS:
+            inner = ann.slice
+            elts = inner.elts if isinstance(inner, ast.Tuple) else [inner]
+            for e in elts:
+                reason = _unhashable_reason(e, project)
+                if reason:
+                    return reason
+        return None
+    name = dotted_name(ann)
+    if name is None:
+        return None
+    last = name.split(".")[-1]
+    if last in _UNHASHABLE_BUILTINS:
+        return f"'{last}' is unhashable"
+    info = project.dataclasses.get(last)
+    if info is not None and info.unhashable:
+        return (f"dataclass '{last}' is not frozen (eq=True sets "
+                "__hash__ = None)")
+    return None
+
+
+def _annotated_params(fn: ast.FunctionDef):
+    args = fn.args
+    for a in args.posonlyargs + args.args + args.kwonlyargs:
+        yield a
+
+
+@rule("jit-static-hashability",
+      doc="objects passed as jit statics or lru_cache keys must be "
+          "frozen/hashable")
+def check(ctx, project):
+    for fn, info in ctx.traced.items():
+        if info.kind != "jit" or not info.statics:
+            continue
+        for a in _annotated_params(fn):
+            if a.arg not in info.statics:
+                continue
+            reason = _unhashable_reason(a.annotation, project)
+            if reason:
+                yield Finding(
+                    path=ctx.path, line=a.lineno,
+                    rule="jit-static-hashability",
+                    message=(f"static_argnames parameter '{a.arg}' of "
+                             f"'{fn.name}': {reason} — statics key the jit "
+                             "program cache"),
+                )
+    for fn in ctx.lru_cached:
+        for a in _annotated_params(fn):
+            reason = _unhashable_reason(a.annotation, project)
+            if reason:
+                yield Finding(
+                    path=ctx.path, line=a.lineno,
+                    rule="jit-static-hashability",
+                    message=(f"lru_cache builder '{fn.name}' parameter "
+                             f"'{a.arg}': {reason} — builder params key "
+                             "the program cache"),
+                )

@@ -1,0 +1,153 @@
+"""lock-discipline: lock-guarded attributes never touched lock-free.
+
+`ClusterEngine` and `ClusterPlan` share mutable state between the submit
+path, the prepare pool and the solve worker, guarded by a non-reentrant
+``self._lock``.  The failure mode is asymmetric locking: an attribute
+written under ``with self._lock`` in one method but read bare in another
+is a data race that only manifests under pipeline concurrency — exactly
+the class of bug the bit-identity tests cannot catch deterministically.
+
+Per class that uses a ``with self.<lock>`` block: collect every attribute
+*assigned* (plain, augmented, or through a subscript — ``self._stats[k]
++= 1`` counts) inside such a block in any method.  Those attributes form
+the guarded set; any read or write of them outside a with-lock block in
+any method other than ``__init__``/``__post_init__`` (construction
+happens-before thread visibility via the lock itself) is flagged.
+Attributes never assigned under the lock (thread-safe queues, executors,
+frozen config) are not constrained.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+from repro.analysis.registry import rule
+
+_INIT_METHODS = {"__init__", "__post_init__"}
+
+
+def _lock_attr(node: ast.expr):
+    """'_lock' for a `self.<something-lock>` expression, else None."""
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == "self" \
+            and "lock" in node.attr.lower():
+        return node.attr
+    return None
+
+
+def _self_attr(node: ast.AST):
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == "self":
+        return node.attr
+    return None
+
+
+def _written_attrs(stmt: ast.stmt):
+    """self.X names assigned by one statement (incl. subscript mutation)."""
+    targets = []
+    if isinstance(stmt, ast.Assign):
+        targets = stmt.targets
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    for t in targets:
+        attr = _self_attr(t)
+        if attr:
+            yield attr
+        if isinstance(t, ast.Subscript):
+            attr = _self_attr(t.value)
+            if attr:
+                yield attr
+        if isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                attr = _self_attr(e)
+                if attr:
+                    yield attr
+
+
+class _ClassScan:
+    """One pass over a class: guarded set + every access with lock depth."""
+
+    def __init__(self, cls: ast.ClassDef):
+        self.cls = cls
+        self.lock_names: set = set()
+        self.guarded: set = set()
+        # (method, attr, line, under_lock) for every self.X touch
+        self.accesses: list = []
+        for item in cls.body:
+            if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for stmt in item.body:
+                    self._visit_stmt(item, stmt, depth=0)
+
+    def _visit_stmt(self, fn, stmt, depth: int) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return
+        if isinstance(stmt, ast.With):
+            locked = False
+            for item in stmt.items:
+                lock = _lock_attr(item.context_expr)
+                if lock:
+                    self.lock_names.add(lock)
+                    locked = True
+                else:
+                    self._visit_expr(fn, item.context_expr, depth)
+            inner = depth + (1 if locked else 0)
+            for s in stmt.body:
+                self._visit_stmt(fn, s, inner)
+            return
+        if depth > 0 and isinstance(stmt, (ast.Assign, ast.AugAssign,
+                                           ast.AnnAssign)):
+            self.guarded.update(_written_attrs(stmt))
+        for child in ast.iter_child_nodes(stmt):
+            self._visit_node(fn, child, depth)
+
+    def _visit_node(self, fn, node, depth: int) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return
+        if isinstance(node, ast.stmt):
+            self._visit_stmt(fn, node, depth)
+        elif isinstance(node, ast.expr):
+            self._visit_expr(fn, node, depth)
+        else:
+            # ExceptHandler, withitem, match cases, ...: recurse through
+            for child in ast.iter_child_nodes(node):
+                self._visit_node(fn, child, depth)
+
+    def _visit_expr(self, fn, node, depth: int) -> None:
+        for child in ast.walk(node):
+            attr = _self_attr(child)
+            if attr:
+                self.accesses.append((fn, attr, child.lineno, depth > 0))
+
+    def findings(self, ctx):
+        guarded = self.guarded - self.lock_names
+        if not guarded:
+            return
+        seen = set()
+        for fn, attr, line, under_lock in self.accesses:
+            if attr not in guarded or under_lock:
+                continue
+            if fn.name in _INIT_METHODS:
+                continue
+            key = (fn.name, attr, line)
+            if key in seen:
+                continue
+            seen.add(key)
+            yield Finding(
+                path=ctx.path, line=line, rule="lock-discipline",
+                message=(f"'{self.cls.name}.{attr}' is written under "
+                         f"self._lock elsewhere but accessed lock-free in "
+                         f"'{fn.name}' — racy under pipeline concurrency"),
+            )
+
+
+@rule("lock-discipline",
+      doc="attributes written under self._lock must never be accessed "
+          "outside a with-lock block")
+def check(ctx, project):
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.ClassDef):
+            scan = _ClassScan(node)
+            yield from scan.findings(ctx)

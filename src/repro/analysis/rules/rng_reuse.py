@@ -1,0 +1,198 @@
+"""rng-key-reuse: a jax.random key consumed twice without a split.
+
+Reusing a PRNG key correlates draws that the D^2 law of the paper's
+seeding proof requires independent — the exactness argument for
+rejection sampling silently breaks while every shape check passes.
+
+Intra-function dataflow, per function:
+
+* a name becomes a *tracked key* when assigned from
+  ``jax.random.key/PRNGKey/split/fold_in/wrap_key_data/clone`` (tuple
+  unpacking of `split` tracks every target);
+* any other appearance of a tracked key in an executed expression —
+  passed to a sampler, another function, a loop carry, a return — is a
+  *consumption*; appearances inside a `split`/`fold_in` call are not
+  (that is the sanctioned refresh) and neither are assignment targets;
+* two consumptions without an intervening refresh-assignment flag the
+  second one.  `if`/`else` branches fork the state and merge by maximum
+  use count; `for`/`while` bodies are walked twice so a key created
+  outside a loop but consumed each iteration is caught.
+
+Nested function bodies are skipped in the linear walk (they run when
+called — e.g. one `lax.switch` branch per round, not all of them) and are
+analyzed as functions of their own; closure-captured keys are therefore
+out of scope for this rule.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+from repro.analysis.registry import rule
+from repro.analysis.rules._common import dotted_name
+
+_KEY_FNS = {"key", "PRNGKey", "split", "fold_in", "wrap_key_data", "clone"}
+_REFRESH_FNS = {"split", "fold_in", "clone"}
+
+
+def _random_fn(call: ast.Call):
+    """'split' for jax.random.split(...) etc., else None."""
+    name = dotted_name(call.func)
+    if name is None:
+        return None
+    parts = name.split(".")
+    if len(parts) >= 2 and parts[-2] in ("random", "jrandom") \
+            and parts[-1] in _KEY_FNS:
+        return parts[-1]
+    return None
+
+
+class _State:
+    def __init__(self):
+        self.uses: dict[str, int] = {}    # tracked key -> consumption count
+
+    def copy(self) -> "_State":
+        s = _State()
+        s.uses = dict(self.uses)
+        return s
+
+
+def _target_names(target: ast.AST) -> list[str]:
+    if isinstance(target, ast.Name):
+        return [target.id]
+    if isinstance(target, (ast.Tuple, ast.List)):
+        out = []
+        for e in target.elts:
+            out.extend(_target_names(e))
+        return out
+    return []
+
+
+class _FunctionChecker:
+    def __init__(self, ctx, fn: ast.FunctionDef):
+        self.ctx = ctx
+        self.fn = fn
+        self.findings: list[Finding] = []
+
+    def run(self) -> list[Finding]:
+        state = _State()
+        self._block(self.fn.body, state)
+        return self.findings
+
+    # -- statement dispatch --------------------------------------------------
+
+    def _block(self, body: list, state: _State) -> None:
+        for stmt in body:
+            self._stmt(stmt, state)
+
+    def _stmt(self, stmt: ast.stmt, state: _State) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return  # analyzed separately
+        if isinstance(stmt, ast.If):
+            self._expr(stmt.test, state)
+            body_state, else_state = state.copy(), state.copy()
+            self._block(stmt.body, body_state)
+            self._block(stmt.orelse, else_state)
+            state.uses = {}
+            for s in (body_state, else_state):
+                for k, v in s.uses.items():
+                    state.uses[k] = max(state.uses.get(k, 0), v)
+            return
+        if isinstance(stmt, (ast.For, ast.While)):
+            if isinstance(stmt, ast.For):
+                self._expr(stmt.iter, state)
+            else:
+                self._expr(stmt.test, state)
+            # Two passes: catch a key created before the loop but consumed
+            # per iteration (second pass sees the first pass's counts
+            # unless the body refreshed the key).
+            self._block(stmt.body, state)
+            self._block(stmt.body, state)
+            self._block(stmt.orelse, state)
+            return
+        if isinstance(stmt, ast.With):
+            for item in stmt.items:
+                self._expr(item.context_expr, state)
+            self._block(stmt.body, state)
+            return
+        if isinstance(stmt, ast.Try):
+            self._block(stmt.body, state)
+            for h in stmt.handlers:
+                self._block(h.body, state)
+            self._block(stmt.orelse, state)
+            self._block(stmt.finalbody, state)
+            return
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            value = stmt.value
+            if value is not None:
+                self._expr(value, state)
+            targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                       else [stmt.target])
+            names = []
+            for t in targets:
+                names.extend(_target_names(t))
+            fresh = (isinstance(value, ast.Call)
+                     and _random_fn(value) is not None)
+            for name in names:
+                if fresh:
+                    state.uses[name] = 0            # (re)tracked, unconsumed
+                else:
+                    state.uses.pop(name, None)      # rebound to a non-key
+            return
+        # everything else (Expr, Return, Assert, Raise, ...): scan exprs
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.expr):
+                self._expr(child, state)
+
+    # -- expression consumption ---------------------------------------------
+
+    def _expr(self, node: ast.expr, state: _State) -> None:
+        """Count tracked-key Name occurrences in consuming position."""
+        for name_node, consuming in self._occurrences(node, True):
+            key = name_node.id
+            if key not in state.uses or not consuming:
+                continue
+            state.uses[key] += 1
+            if state.uses[key] >= 2:
+                self.findings.append(Finding(
+                    path=self.ctx.path, line=name_node.lineno,
+                    rule="rng-key-reuse",
+                    message=(f"PRNG key '{key}' is consumed more than once "
+                             "without an intervening jax.random.split/"
+                             "fold_in — reused keys correlate draws"),
+                ))
+                state.uses[key] = 0   # one report per reuse site
+
+    def _occurrences(self, node: ast.expr, consuming: bool):
+        """Yield (Name, consuming) pairs, skipping nested defs and marking
+        arguments of split/fold_in as non-consuming."""
+        if isinstance(node, (ast.Lambda,)):
+            return
+        if isinstance(node, ast.Name):
+            yield node, consuming
+            return
+        if isinstance(node, ast.Call):
+            fn = _random_fn(node)
+            arg_consuming = consuming and not (fn in _REFRESH_FNS
+                                               or fn in ("wrap_key_data",))
+            # the callee expression itself (e.g. `key.method()`) consumes
+            yield from self._occurrences(node.func, consuming)
+            for a in node.args:
+                yield from self._occurrences(a, arg_consuming)
+            for kw in node.keywords:
+                yield from self._occurrences(kw.value, arg_consuming)
+            return
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                yield from self._occurrences(child, consuming)
+            elif isinstance(child, (ast.comprehension,)):
+                yield from self._occurrences(child.iter, consuming)
+
+
+@rule("rng-key-reuse",
+      doc="a jax.random key is consumed twice without an intervening split")
+def check(ctx, project):
+    for fn in ctx.functions:
+        yield from _FunctionChecker(ctx, fn).run()

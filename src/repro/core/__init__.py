@@ -43,7 +43,7 @@ from repro.core.seeding import (
     rejection_sampling,
     uniform_sampling,
 )
-from repro.core.tracing import TRACE_COUNTS
+from repro.core.tracing import RetraceError, TRACE_COUNTS, no_retrace
 from repro.core.tree_embedding import MultiTreeEmbedding, build_multitree
 
 __all__ = [
@@ -61,7 +61,9 @@ __all__ = [
     "shape_bucket",
     "SEEDER_SPECS",
     "SeederSpec",
+    "RetraceError",
     "TRACE_COUNTS",
+    "no_retrace",
     "capability_table",
     "data_fingerprint",
     "ensure_host_f64",

@@ -191,11 +191,11 @@ def device_fast_kmeanspp(
 
     def body(i, state):
         weights, coarse, chosen, key = state
-        key, k1 = jax.random.split(key)
+        key, k_unif, k_samp = jax.random.split(key, 3)
         x = jnp.where(
             i == 0,
-            jax.random.randint(k1, (), 0, live),
-            ts.sample(coarse, weights, k1, 1)[0],
+            jax.random.randint(k_unif, (), 0, live),
+            ts.sample(coarse, weights, k_samp, 1)[0],
         ).astype(jnp.int32)
         weights, tsums = open_center(weights, x)
         coarse = ts.refresh(coarse, tsums)

@@ -241,7 +241,9 @@ class ClusterEngine:
             if item is _SHUTDOWN:
                 return
             ticket, plan, prep_future = item
-            if self._cancel:
+            with self._lock:
+                cancelled = self._cancel
+            if cancelled:
                 # close(cancel_pending=True): fail queued tickets fast
                 # instead of solving the backlog.
                 prep_future.cancel()

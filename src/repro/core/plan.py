@@ -422,7 +422,9 @@ class ClusterPlan:
         Keyed by `data_fingerprint`: re-preparing the same data is a cache
         hit that does zero host work.  Returns the plan for chaining.
         """
-        self._active = self.prepare_data(points)
+        prep = self.prepare_data(points)
+        with self._lock:
+            self._active = prep
         return self
 
     def prepare_data(self, points) -> PreparedData:
@@ -518,12 +520,14 @@ class ClusterPlan:
     def _require(self, points) -> PreparedData:
         if points is not None:
             self.prepare(points)
-        if self._active is None:
+        with self._lock:
+            active = self._active
+        if active is None:
             raise RuntimeError(
                 "no prepared data: call plan.prepare(points) or "
                 "plan.fit(points) first"
             )
-        return self._active
+        return active
 
     def _points_device(self, prep: PreparedData) -> jax.Array:
         if prep.points_dev is None:
@@ -557,9 +561,11 @@ class ClusterPlan:
         in one pass, so only the quantisation is cached for them and each
         refit rebuilds its tree/LSH structures.
         """
-        if self._active is None:
+        with self._lock:
+            active = self._active
+        if active is None:
             raise RuntimeError("refit() needs a prior prepare()/fit(points)")
-        return self._execute(self._active, k or self.cluster.k, seed)
+        return self._execute(active, k or self.cluster.k, seed)
 
     def fit_prepared(self, prepared: PreparedData, *,
                      k: Optional[int] = None,

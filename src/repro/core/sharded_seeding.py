@@ -200,10 +200,10 @@ def _fastkmeanspp_program(mesh, t, h, n_pad, k, scale, num_levels, m_init,
 
         def body(i, state):
             w, coarse, chosen, key = state
-            key, k1 = jax.random.split(key)
-            x_samp, _, _ = sample(coarse, w, k1, 1)
+            key, k_unif, k_samp = jax.random.split(key, 3)
+            x_samp, _, _ = sample(coarse, w, k_samp, 1)
             x = jnp.where(
-                i == 0, jax.random.randint(k1, (), 0, n_real), x_samp[0]
+                i == 0, jax.random.randint(k_unif, (), 0, n_real), x_samp[0]
             ).astype(jnp.int32)
             col_lo, col_hi = _broadcast_from_owner(
                 x, n_loc, axis,

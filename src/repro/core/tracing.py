@@ -12,8 +12,9 @@ programs (keys ``"<seeder>/device"``) and the shard_map programs (bare
 from __future__ import annotations
 
 import collections
+import contextlib
 
-__all__ = ["TRACE_COUNTS", "count_trace"]
+__all__ = ["TRACE_COUNTS", "count_trace", "no_retrace", "RetraceError"]
 
 TRACE_COUNTS: collections.Counter = collections.Counter()
 
@@ -21,3 +22,57 @@ TRACE_COUNTS: collections.Counter = collections.Counter()
 def count_trace(name: str) -> None:
     """Record one trace of program `name` (call from inside the traced body)."""
     TRACE_COUNTS[name] += 1
+
+
+class RetraceError(AssertionError):
+    """A compiled program re-traced inside a `no_retrace()` block.
+
+    Subclasses AssertionError: a retrace under the guard is a violated
+    invariant, not an environmental failure, and existing
+    ``pytest.raises(AssertionError)`` patterns keep working.
+    """
+
+    def __init__(self, deltas: dict):
+        self.deltas = dict(deltas)
+        detail = ", ".join(f"{k}: +{v}" for k, v in sorted(deltas.items()))
+        super().__init__(
+            f"unexpected jit trace(s) inside no_retrace() block: {detail}. "
+            "Identical static configuration must reuse the compiled "
+            "program — check for data-dependent statics, unhashable "
+            "statics, or wrappers rebuilt per call."
+        )
+
+
+@contextlib.contextmanager
+def no_retrace(*, watch: tuple = (), allow: tuple = ()):
+    """Context manager turning unexpected traces into hard `RetraceError`s.
+
+    Snapshots `TRACE_COUNTS` on entry and compares on exit: any counter
+    that grew (over the union of before/after keys, so first-ever traces
+    of a program count too) raises.  Run one warmup call *before* the
+    block so the programs exist, then wrap the steady-state region::
+
+        fit()                      # warmup: traces + compiles
+        with no_retrace():
+            for _ in range(100):
+                fit()              # must all hit the program cache
+
+    `watch` narrows the guard to counter names with any of the given
+    prefixes; `allow` exempts names with any of the given prefixes
+    (`allow` wins).  The exit check runs only on clean exit — an
+    exception inside the block propagates unwrapped.
+    """
+    before = dict(TRACE_COUNTS)
+    yield
+    after = dict(TRACE_COUNTS)
+    deltas = {}
+    for name in set(before) | set(after):
+        if watch and not any(name.startswith(p) for p in watch):
+            continue
+        if allow and any(name.startswith(p) for p in allow):
+            continue
+        grew = after.get(name, 0) - before.get(name, 0)
+        if grew > 0:
+            deltas[name] = grew
+    if deltas:
+        raise RetraceError(deltas)

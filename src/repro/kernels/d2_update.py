@@ -46,7 +46,7 @@ def d2_update_pallas(
     center: jax.Array,
     w: jax.Array,
     *,
-    block_n: int = 512,
+    block_n: int = 512,  # autotune: VMEM-sized row tile; retune on hw
     interpret: bool = False,
 ):
     """Pre-padded inputs (n % block_n == 0); see `ops.d2_update`."""
@@ -72,7 +72,7 @@ def d2_update_tiles_pallas(
     center: jax.Array,
     w: jax.Array,
     *,
-    block_n: int = 512,
+    block_n: int = 512,  # autotune: VMEM-sized row tile; retune on hw
     interpret: bool = False,
 ):
     """As `d2_update_pallas`, plus the per-tile new-sum epilogue.

@@ -98,8 +98,8 @@ def flash_attention_pallas(
     *,
     scale: float,
     causal: bool = True,
-    block_q: int = 128,
-    block_k: int = 128,
+    block_q: int = 128,  # autotune: lane-width tile; retune on hw
+    block_k: int = 128,  # autotune: lane-width tile; retune on hw
     interpret: bool = False,
 ):
     bh, s, d = q.shape

@@ -105,8 +105,8 @@ def lsh_bucket_min_pallas(
     c: jax.Array,            # (K, D) f32  — opened-center coordinates
     penalty: jax.Array,      # (1, K) f32  — 0 live, LSH_MISS masked-out
     *,
-    block_b: int = 128,
-    block_k: int = 128,
+    block_b: int = 128,  # autotune: lane-width tile; retune on hw
+    block_k: int = 128,  # autotune: lane-width tile; retune on hw
     interpret: bool = False,
 ):
     """Pre-padded inputs (B % block_b == 0, K % block_k == 0, L % 8 == 0);
@@ -148,8 +148,8 @@ def lsh_bucket_accept_pallas(
     mtd2: jax.Array,         # (B,) f32 — current multi-tree D^2 weights
     *,
     c2: float,
-    block_b: int = 128,
-    block_k: int = 128,
+    block_b: int = 128,  # autotune: lane-width tile; retune on hw
+    block_k: int = 128,  # autotune: lane-width tile; retune on hw
     interpret: bool = False,
 ):
     """`lsh_bucket_min_pallas` + the fused acceptance-probability epilogue.

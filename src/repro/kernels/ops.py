@@ -61,8 +61,8 @@ def pairwise_argmin(
     x: jax.Array,
     c: jax.Array,
     *,
-    block_n: int = 128,
-    block_k: int = 128,
+    block_n: int = 128,  # autotune: lane-width tile; retune on hw
+    block_k: int = 128,  # autotune: lane-width tile; retune on hw
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """(min squared distance, argmin center index) per point.
@@ -90,7 +90,7 @@ def d2_update(
     center: jax.Array,
     w: jax.Array,
     *,
-    block_n: int = 512,
+    block_n: int = 512,  # autotune: VMEM-sized row tile; retune on hw
     interpret: bool | None = None,
 ) -> jax.Array:
     """w <- min(w, ||x - center||^2); any n, pads internally."""
@@ -108,7 +108,7 @@ def d2_update_tiles(
     center: jax.Array,
     w: jax.Array,
     *,
-    block_n: int = 512,
+    block_n: int = 512,  # autotune: VMEM-sized row tile; retune on hw
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """(w', per-tile sums); any n, pads internally (padding lanes carry w=0
@@ -133,7 +133,7 @@ def tree_sep_update(
     *,
     scale: float,
     num_levels: int,
-    block_n: int = 1024,
+    block_n: int = 1024,  # autotune: VMEM-sized row tile; retune on hw
     interpret: bool | None = None,
 ) -> jax.Array:
     """One tree's open-center weight sweep; any n, pads internally.
@@ -166,7 +166,7 @@ def tree_sep_update_tiles(
     *,
     scale: float,
     num_levels: int,
-    block_n: int = 512,
+    block_n: int = 512,  # autotune: VMEM-sized row tile; retune on hw
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """One tree's open-center sweep + per-tile sums; any n, pads internally.
@@ -198,8 +198,8 @@ def lsh_bucket_min(
     c: jax.Array,
     count: jax.Array | int | None = None,
     *,
-    block_b: int = 128,
-    block_k: int = 128,
+    block_b: int = 128,  # autotune: lane-width tile; retune on hw
+    block_k: int = 128,  # autotune: lane-width tile; retune on hw
     interpret: bool | None = None,
 ) -> jax.Array:
     """Nearest colliding-bucket center per candidate; any B/K/L, pads inside.
@@ -242,8 +242,8 @@ def lsh_bucket_accept(
     count: jax.Array | int | None = None,
     *,
     c2: float,
-    block_b: int = 128,
-    block_k: int = 128,
+    block_b: int = 128,  # autotune: lane-width tile; retune on hw
+    block_k: int = 128,  # autotune: lane-width tile; retune on hw
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """`lsh_bucket_min` + the fused Algorithm-4 acceptance epilogue.

@@ -56,8 +56,8 @@ def pairwise_argmin_pallas(
     x: jax.Array,
     c: jax.Array,
     *,
-    block_n: int = 128,
-    block_k: int = 128,
+    block_n: int = 128,  # autotune: lane-width tile; retune on hw
+    block_k: int = 128,  # autotune: lane-width tile; retune on hw
     interpret: bool = False,
 ):
     """(min_d2 f32 (n,), argmin int32 (n,)).  Requires pre-padded inputs:

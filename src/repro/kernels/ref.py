@@ -51,7 +51,7 @@ def d2_update_ref(x: jax.Array, center: jax.Array, w: jax.Array):
 
 
 def d2_update_tiles_ref(x: jax.Array, center: jax.Array, w: jax.Array, *,
-                        block_n: int = 512):
+                        block_n: int = 512):  # autotune: matches pallas default
     """(w', per-tile sums of w') — `d2_update_tiles_pallas` oracle."""
     out = d2_update_ref(x, center, w)
     return out, _tile_sums_ref(out, block_n)
@@ -89,7 +89,7 @@ def tree_sep_update_tiles_ref(
     *,
     scale: float,
     num_levels: int,
-    block_n: int = 512,
+    block_n: int = 512,  # autotune: matches pallas default
 ):
     """(w', per-tile sums of w') — `tree_sep_update_tiles_pallas` oracle."""
     out = tree_sep_update_ref(codes_lo, codes_hi, center_lo, center_hi, w,

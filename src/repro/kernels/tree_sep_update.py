@@ -67,7 +67,7 @@ def tree_sep_update_pallas(
     *,
     scale: float,
     num_levels: int,
-    block_n: int = 1024,
+    block_n: int = 1024,  # autotune: VMEM-sized row tile; retune on hw
     interpret: bool = False,
 ):
     """Pre-padded inputs (n % block_n == 0); see `ops.tree_sep_update`."""
@@ -101,7 +101,7 @@ def tree_sep_update_tiles_pallas(
     *,
     scale: float,
     num_levels: int,
-    block_n: int = 512,
+    block_n: int = 512,  # autotune: VMEM-sized row tile; retune on hw
     interpret: bool = False,
 ):
     """As `tree_sep_update_pallas`, plus the per-tile new-sum epilogue.

@@ -1,0 +1,420 @@
+"""repro.analysis: each rule fires on a minimal positive fixture, stays
+quiet on the matching negative one, and the whole repo is finding-free
+(the committed baseline is empty and must stay that way — fix or pragma,
+don't baseline; see docs/analysis.md)."""
+
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (
+    all_rules,
+    analyze_paths,
+    analyze_sources,
+    load_baseline,
+)
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _run(src: str, rule: str, path: str = "fixture.py"):
+    return analyze_sources({path: src}, rules=[rule])
+
+
+# ---------------------------------------------------------------------------
+# rng-key-reuse
+# ---------------------------------------------------------------------------
+
+_RNG_POS = """
+import jax
+
+def body(i, state):
+    key = state
+    key, k1 = jax.random.split(key)
+    a = jax.random.randint(k1, (), 0, 10)
+    b = jax.random.uniform(k1)
+    return key
+"""
+
+_RNG_NEG = """
+import jax
+
+def body(i, state):
+    key = state
+    key, k1, k2 = jax.random.split(key, 3)
+    a = jax.random.randint(k1, (), 0, 10)
+    b = jax.random.uniform(k2)
+    return key
+"""
+
+_RNG_BRANCH_NEG = """
+import jax
+from jax import lax
+
+def round_body(key):
+    key, k_cand, k_u = jax.random.split(key, 3)
+
+    def use_a():
+        return jax.random.uniform(k_cand)
+
+    def use_b():
+        return jax.random.uniform(k_u)
+
+    return lax.cond(True, use_a, use_b)
+"""
+
+
+def test_rng_reuse_fires_on_double_consumption():
+    findings = _run(_RNG_POS, "rng-key-reuse")
+    assert len(findings) == 1
+    assert "k1" in findings[0].message
+
+
+def test_rng_reuse_quiet_after_split():
+    assert _run(_RNG_NEG, "rng-key-reuse") == []
+
+
+def test_rng_reuse_ignores_per_branch_closures():
+    """Keys consumed once per lax.cond branch closure are not reuse."""
+    assert _run(_RNG_BRANCH_NEG, "rng-key-reuse") == []
+
+
+# ---------------------------------------------------------------------------
+# host-sync-in-jit
+# ---------------------------------------------------------------------------
+
+_SYNC_POS = """
+import jax
+
+@jax.jit
+def f(x):
+    y = x + 1
+    return float(y)
+"""
+
+_SYNC_NEG = """
+import jax
+
+@jax.jit
+def f(x):
+    n = int(x.shape[0])      # shape metadata: host arithmetic, not a sync
+    m = len(x)
+    return x * (n + m)
+"""
+
+
+def test_host_sync_fires_on_traced_conversion():
+    findings = _run(_SYNC_POS, "host-sync-in-jit")
+    assert len(findings) == 1
+    assert "float()" in findings[0].message
+
+
+def test_host_sync_exempts_shape_metadata():
+    assert _run(_SYNC_NEG, "host-sync-in-jit") == []
+
+
+# ---------------------------------------------------------------------------
+# jit-static-hashability
+# ---------------------------------------------------------------------------
+
+_HASH_POS = """
+import dataclasses
+import functools
+import jax
+
+@dataclasses.dataclass
+class Mutable:
+    x: int = 0
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def f(points, cfg: Mutable):
+    return points
+"""
+
+_HASH_NEG = """
+import dataclasses
+import functools
+import jax
+
+@dataclasses.dataclass(frozen=True)
+class Frozen:
+    x: int = 0
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def f(points, cfg: Frozen | None):
+    return points
+"""
+
+_HASH_LRU_POS = """
+import functools
+
+@functools.lru_cache(maxsize=None)
+def build(shape: tuple, opts: dict):
+    return shape
+"""
+
+
+def test_hashability_fires_on_mutable_dataclass_static():
+    findings = _run(_HASH_POS, "jit-static-hashability")
+    assert len(findings) == 1
+    assert "not frozen" in findings[0].message
+
+
+def test_hashability_resolves_dataclass_across_files():
+    """The Project symbol table resolves annotations cross-module."""
+    findings = analyze_sources(
+        {
+            "specs.py": ("import dataclasses\n"
+                         "@dataclasses.dataclass\n"
+                         "class Spec:\n"
+                         "    x: int = 0\n"),
+            "prog.py": ("import functools, jax\n"
+                        "@functools.partial(jax.jit, "
+                        "static_argnames=('spec',))\n"
+                        "def f(pts, spec: 'Spec'):\n"
+                        "    return pts\n"),
+        },
+        rules=["jit-static-hashability"],
+    )
+    assert len(findings) == 1 and findings[0].path == "prog.py"
+
+
+def test_hashability_quiet_on_frozen_optional():
+    assert _run(_HASH_NEG, "jit-static-hashability") == []
+
+
+def test_hashability_fires_on_lru_cache_dict_param():
+    findings = _run(_HASH_LRU_POS, "jit-static-hashability")
+    assert len(findings) == 1
+    assert "'dict'" in findings[0].message
+
+
+# ---------------------------------------------------------------------------
+# retrace-hazard
+# ---------------------------------------------------------------------------
+
+_RETRACE_LOOP_POS = """
+import jax
+
+def solve(problems):
+    out = []
+    for p in problems:
+        f = jax.jit(lambda x: x * 2)
+        out.append(f(p))
+    return out
+"""
+
+_RETRACE_LOOP_NEG = """
+import jax
+
+_f = jax.jit(lambda x: x * 2)
+
+def solve(problems):
+    return [_f(p) for p in problems]
+"""
+
+_RETRACE_REBUILD_POS = """
+from jax import lax
+
+def seed(ts, weights, k):
+    def body(i, state):
+        coarse = ts.init(state)
+        return coarse
+    return lax.fori_loop(0, k, body, weights)
+"""
+
+_RETRACE_REBUILD_NEG = """
+from jax import lax
+
+def seed(ts, weights, k):
+    coarse0 = ts.init(weights)        # O(T) preamble: outside the loop
+
+    def body(i, coarse):
+        return ts.refresh(coarse, coarse)
+    return lax.fori_loop(0, k, body, coarse0)
+"""
+
+_RETRACE_STATIC_POS = """
+import functools
+import jax
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def solve(x, cap: int):
+    return x[:cap]
+
+def run(x, budget):
+    return solve(x, cap=int(budget.mean()))
+"""
+
+_RETRACE_STATIC_NEG = """
+import functools
+import jax
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def solve(x, cap: int):
+    return x[:cap]
+
+def run(x):
+    return solve(x, cap=int(x.shape[0] // 2))
+"""
+
+
+def test_retrace_fires_on_jit_in_loop():
+    findings = _run(_RETRACE_LOOP_POS, "retrace-hazard")
+    assert len(findings) == 1
+    assert "loop body" in findings[0].message
+
+
+def test_retrace_quiet_on_hoisted_jit():
+    assert _run(_RETRACE_LOOP_NEG, "retrace-hazard") == []
+
+
+def test_retrace_fires_on_init_inside_lax_body():
+    findings = _run(_RETRACE_REBUILD_POS, "retrace-hazard")
+    assert len(findings) == 1
+    assert ".init" in findings[0].message
+
+
+def test_retrace_quiet_on_preamble_init_and_refresh():
+    assert _run(_RETRACE_REBUILD_NEG, "retrace-hazard") == []
+
+
+def test_retrace_fires_on_data_dependent_static():
+    findings = _run(_RETRACE_STATIC_POS, "retrace-hazard")
+    assert len(findings) == 1
+    assert "static 'cap'" in findings[0].message
+
+
+def test_retrace_exempts_shape_derived_static():
+    assert _run(_RETRACE_STATIC_NEG, "retrace-hazard") == []
+
+
+# ---------------------------------------------------------------------------
+# pallas-tile-shape  (scoped to kernels/)
+# ---------------------------------------------------------------------------
+
+_TILE_POS = """
+from jax.experimental import pallas as pl
+
+def op(x, block_n: int = 128):
+    grid = (x.shape[0] // block_n,)
+    return pl.pallas_call(lambda r, o: None, grid=grid,
+                          out_shape=None)(x)
+"""
+
+_TILE_NEG = """
+from jax.experimental import pallas as pl
+
+def op(x, block_n: int = 128):  # autotune: lane width
+    assert x.shape[0] % block_n == 0
+    grid = (x.shape[0] // block_n,)
+    return pl.pallas_call(lambda r, o: None, grid=grid,
+                          out_shape=None)(x)
+"""
+
+
+def test_pallas_tiles_fires_in_kernels_dir():
+    findings = _run(_TILE_POS, "pallas-tile-shape",
+                    path="src/repro/kernels/fix.py")
+    rules = sorted({(f.severity, f.rule) for f in findings})
+    assert len(findings) == 2          # missing annotation + missing guard
+    assert rules == [("error", "pallas-tile-shape"),
+                     ("warning", "pallas-tile-shape")]
+
+
+def test_pallas_tiles_quiet_when_annotated_and_guarded():
+    assert _run(_TILE_NEG, "pallas-tile-shape",
+                path="src/repro/kernels/fix.py") == []
+
+
+def test_pallas_tiles_scoped_to_kernels():
+    """The same source outside kernels/ is not this rule's business."""
+    assert _run(_TILE_POS, "pallas-tile-shape",
+                path="src/repro/core/fix.py") == []
+
+
+# ---------------------------------------------------------------------------
+# lock-discipline
+# ---------------------------------------------------------------------------
+
+_LOCK_POS = """
+import threading
+
+class Engine:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cancel = False
+
+    def close(self):
+        with self._lock:
+            self._cancel = True
+
+    def worker(self):
+        if self._cancel:          # lock-free read of a guarded attr
+            return
+"""
+
+_LOCK_NEG = """
+import threading
+
+class Engine:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cancel = False
+
+    def close(self):
+        with self._lock:
+            self._cancel = True
+
+    def worker(self):
+        with self._lock:
+            cancelled = self._cancel
+        if cancelled:
+            return
+"""
+
+
+def test_lock_discipline_fires_on_bare_read():
+    findings = _run(_LOCK_POS, "lock-discipline")
+    assert len(findings) == 1
+    assert "_cancel" in findings[0].message and "worker" in \
+        findings[0].message
+
+
+def test_lock_discipline_quiet_on_snapshot_under_lock():
+    assert _run(_LOCK_NEG, "lock-discipline") == []
+
+
+# ---------------------------------------------------------------------------
+# framework behaviour
+# ---------------------------------------------------------------------------
+
+def test_pragma_suppresses_single_rule():
+    src = _SYNC_POS.replace(
+        "return float(y)",
+        "return float(y)  # repro: disable=host-sync-in-jit")
+    assert _run(src, "host-sync-in-jit") == []
+
+
+def test_unparseable_source_raises():
+    with pytest.raises(SyntaxError):
+        analyze_sources({"bad.py": "def f(:\n"})
+
+
+def test_all_six_rules_registered():
+    assert sorted(all_rules()) == [
+        "host-sync-in-jit",
+        "jit-static-hashability",
+        "lock-discipline",
+        "pallas-tile-shape",
+        "retrace-hazard",
+        "rng-key-reuse",
+    ]
+
+
+def test_repo_is_finding_free_and_baseline_empty():
+    """The CI gate's exact contract: zero findings on src/repro against an
+    EMPTY committed baseline."""
+    assert load_baseline(REPO / "analysis-baseline.txt") == set()
+    findings = analyze_paths([REPO / "src" / "repro"], root=REPO)
+    assert findings == [], "\n".join(f.render() for f in findings)

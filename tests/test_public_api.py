@@ -32,6 +32,7 @@ EXPECTED_ALL = sorted([
     "MultiTreeEmbedding",
     "MultiTreeSampler",
     "PreparedData",
+    "RetraceError",
     "SEEDERS",
     "SEEDER_SPECS",
     "SeederSpec",
@@ -49,6 +50,7 @@ EXPECTED_ALL = sorted([
     "kmeans_parallel",
     "kmeanspp",
     "lloyd",
+    "no_retrace",
     "rejection_sampling",
     "resolve_seeder",
     "shape_bucket",
