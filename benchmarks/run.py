@@ -10,6 +10,8 @@ leaves a perf trajectory point.  Sections:
     (n,d)-matched synthetic datasets (see datasets.py), CI scale by default;
   - per-open heap-update microbenchmark (rebuild vs incremental) at
     n in {2^14, 2^16, 2^18};
+  - robustness — engine goodput / latency percentiles under a seeded
+    `FaultPlan` (CI gates goodput >= 0.95 with zero stranded tickets);
   - kernel microbenchmarks — Pallas ops (interpret mode on CPU) vs jnp refs;
   - roofline — §Roofline summary from the dry-run artifacts (if present).
 """
@@ -304,6 +306,90 @@ def bench_pipeline(n=1 << 16, d=16, k=4, b=4):
     return rows, record
 
 
+def bench_robustness(n=1 << 12, d=16, k=4, b=16):
+    """Goodput under injected faults (ISSUE 7 acceptance row).
+
+    Drives `b` same-shape datasets through a `ClusterEngine` on the
+    device backend while a seeded `FaultPlan` injects transient failures
+    into 25% of primary solve attempts (`match` pins the chaos to
+    fastkmeans++/device, so the degradation ladder — fastkmeans++/cpu,
+    then kmeans++/cpu — stays healthy).  Each request retries up to 3
+    attempts before falling back; goodput is the completed fraction and
+    `stranded` counts tickets that never reached a terminal state — the
+    CI gate (`check_regression.py`) requires goodput >= 0.95 and zero
+    stranded.  Latency percentiles are per-request submit-to-done
+    wall-clock, so the cost of a retry/fallback detour is visible in the
+    p99/p50 spread across PRs.
+    """
+    import time as _time
+
+    from repro.core import (
+        ClusterEngine,
+        ClusterSpec,
+        ExecutionSpec,
+        FaultPlan,
+        RetryPolicy,
+    )
+
+    rng = np.random.default_rng(0)
+
+    def make():
+        ctr = rng.normal(size=(64, d)) * 20
+        return ctr[rng.integers(64, size=n)] + rng.normal(size=(n, d))
+
+    datasets = [make() for _ in range(b)]
+    spec = ClusterSpec(k=k, seeder="fastkmeans++", seed=0)
+    fault_plan = FaultPlan(seed=0, solve_failure_rate=0.25,
+                           match="fastkmeans++/device")
+    done_at: dict = {}
+    t0 = _time.perf_counter()
+    with ClusterEngine(spec, ExecutionSpec(backend="device"),
+                       fault_plan=fault_plan,
+                       retry=RetryPolicy(max_attempts=3)) as engine:
+        submitted_at, tickets = [], []
+        for ds in datasets:
+            submitted_at.append(_time.perf_counter())
+            ticket = engine.submit(ds, deadline=600.0)
+            ticket.add_done_callback(
+                lambda t: done_at.setdefault(t, _time.perf_counter()))
+            tickets.append(ticket)
+        failures = sum(t.exception() is not None for t in tickets)
+        stats = engine.stats()
+    wall_s = _time.perf_counter() - t0
+    latencies = sorted(done_at[t] - s
+                       for t, s in zip(tickets, submitted_at))
+    terminal = stats["completed"] + stats["failed"] + stats["cancelled"]
+    record = {
+        "n": n, "d": d, "k": k, "requests": b,
+        "solve_failure_rate": 0.25,
+        "injected_faults": fault_plan.stats()["injected"],
+        "goodput": stats["completed"] / b,
+        "failures": failures,
+        "stranded": stats["submitted"] - terminal,
+        "retries": stats["retries"],
+        "fallback_served": stats["fallback_served"],
+        "short_circuited": stats["short_circuited"],
+        "deadline_expired": stats["deadline_expired"],
+        "latency_p50_s": float(np.percentile(latencies, 50)),
+        "latency_p99_s": float(np.percentile(latencies, 99)),
+        "wall_s": wall_s,
+        "health": stats["health"],
+    }
+    rows = [
+        (f"robustness.goodput[b={b},n={n}]", 0.0,
+         f"goodput={record['goodput']:.3f} with "
+         f"{record['injected_faults']} injected faults "
+         f"({record['retries']} retries, "
+         f"{record['fallback_served']} fallback-served)"),
+        (f"robustness.latency_p50[b={b},n={n}]",
+         record["latency_p50_s"] * 1e6, "submit-to-done"),
+        (f"robustness.latency_p99[b={b},n={n}]",
+         record["latency_p99_s"] * 1e6,
+         "retry/fallback detours live in the p99/p50 spread"),
+    ]
+    return rows, record
+
+
 def bench_heap_update(ns=(1 << 14, 1 << 16, 1 << 18), tile=512, reps=20):
     """Per-open sample-structure update: O(n) rebuild vs incremental.
 
@@ -324,15 +410,22 @@ def bench_heap_update(ns=(1 << 14, 1 << 16, 1 << 18), tile=512, reps=20):
         w = jnp.asarray(rng.uniform(0.5, 2.0, n).astype(np.float32))
         st = SampleTreeJax(n)
         rebuild = jax.jit(st.init)
-        dt_rebuild, _ = _timeit(
-            lambda: jax.block_until_ready(rebuild(w)), reps=reps, warmup=2)
+        # Min over reps (same statistic as bench_adaptive_batch): the
+        # regression gate compares growth *ratios* across artifacts, and
+        # the mean is dominated by scheduler noise at the ~50us small-n
+        # end — exactly where a noise spike most distorts the ratio.
+        dt_rebuild = min(
+            _timeit(lambda: jax.block_until_ready(rebuild(w)),
+                    reps=1, warmup=2 if r == 0 else 0)[0]
+            for r in range(reps))
         ts = TiledSampleTree(n, tile=tile)
         coarse = ts.init(w)
         tsums = ts.tile_sums(w) * 0.9       # every tile touched (worst case)
         refresh = jax.jit(ts.refresh)
-        dt_inc, _ = _timeit(
-            lambda: jax.block_until_ready(refresh(coarse, tsums)),
-            reps=reps, warmup=2)
+        dt_inc = min(
+            _timeit(lambda: jax.block_until_ready(refresh(coarse, tsums)),
+                    reps=1, warmup=2 if r == 0 else 0)[0]
+            for r in range(reps))
         record[str(n)] = {
             "rebuild_s": dt_rebuild,
             "incremental_s": dt_inc,
@@ -345,7 +438,7 @@ def bench_heap_update(ns=(1 << 14, 1 << 16, 1 << 18), tile=512, reps=20):
 
 
 def write_bench_json(seed_results, heap_update, adaptive_batch, plan_refit,
-                     pipeline, *, smoke: bool):
+                     pipeline, robustness, *, smoke: bool):
     """BENCH_seeding.json: the cross-PR perf-trajectory artifact."""
     import jax
 
@@ -382,6 +475,7 @@ def write_bench_json(seed_results, heap_update, adaptive_batch, plan_refit,
         "adaptive_batch": adaptive_batch,
         "plan_refit": plan_refit,
         "pipeline": pipeline,
+        "robustness": robustness,
     }
     BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"wrote {BENCH_JSON}")
@@ -432,12 +526,15 @@ def main(argv=None) -> None:
           flush=True)
     pl_rows, pipeline = bench_pipeline()
     all_rows += pl_rows
+    print("# robustness: goodput under a seeded FaultPlan", flush=True)
+    rb_rows, robustness = bench_robustness()
+    all_rows += rb_rows
     if not args.smoke:
         print("# kernel microbenchmarks", flush=True)
         all_rows += bench_kernels()
         all_rows += bench_roofline()
     write_bench_json(seed_results, heap_update, adaptive_batch, plan_refit,
-                     pipeline, smoke=args.smoke)
+                     pipeline, robustness, smoke=args.smoke)
     print("\nname,us_per_call,derived")
     for name, us, derived in all_rows:
         print(f"{name},{us:.1f},{derived}")

@@ -6,6 +6,10 @@
 - If `hypothesis` is not installed (hermetic CI images), registers the
   deterministic fallback in `tests/_hypothesis_fallback.py` under the
   `hypothesis` module name so property-based tests still run.
+- If `pytest-timeout` is not installed, registers the watchdog fallback
+  in `tests/_pytest_timeout_fallback.py` (same ini/CLI/marker surface),
+  so a deadlocked engine test aborts the run in minutes — with all
+  thread stacks dumped — instead of hanging CI to its job timeout.
 """
 
 from __future__ import annotations
@@ -29,3 +33,28 @@ except ImportError:
     sys.modules["hypothesis"] = _mod
     _spec.loader.exec_module(_mod)
     sys.modules["hypothesis.strategies"] = _mod.strategies
+
+try:
+    import pytest_timeout  # noqa: F401  (the real plugin wins when present)
+
+    _timeout_fallback = None
+except ImportError:
+    _tspec = importlib.util.spec_from_file_location(
+        "_repro_pytest_timeout_fallback",
+        ROOT / "tests" / "_pytest_timeout_fallback.py",
+    )
+    _timeout_fallback = importlib.util.module_from_spec(_tspec)
+    sys.modules["_repro_pytest_timeout_fallback"] = _timeout_fallback
+    _tspec.loader.exec_module(_timeout_fallback)
+
+
+def pytest_addoption(parser):
+    if _timeout_fallback is not None:
+        _timeout_fallback.add_options(parser)
+
+
+def pytest_configure(config):
+    if _timeout_fallback is not None:
+        config.pluginmanager.register(
+            _timeout_fallback.TimeoutFallbackPlugin(config),
+            "repro-timeout-fallback")

@@ -1,0 +1,161 @@
+"""Fault-tolerant serving demo: the `ClusterEngine` resilience surface.
+
+    PYTHONPATH=src python examples/resilient_serving.py [--smoke]
+
+A tour of docs/resilience.md on a synthetic request stream, chaos-driven
+by a seeded `FaultPlan` so every run replays identically:
+
+  1. input quarantine — a NaN-poisoned dataset fails typed at submit();
+  2. backpressure — a bounded queue shedding the oldest request;
+  3. deadlines — a request with a too-tight SLO expires typed;
+  4. retries — injected transient solve faults healed on fresh rng
+     streams (`extras["attempts"]` > 1);
+  5. graceful degradation — a persistently failing primary served from
+     the registry-declared fallback chain, bit-identical to a direct
+     solo fit on the fallback target;
+  6. the terminal-state ledger — `stats()` books balance, per-target
+     circuit health.
+
+Everything runs on the cpu backend so the demo is seconds-sized; the
+same knobs drive device/sharded engines unchanged.
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=4000)
+    ap.add_argument("--d", type=int, default=8)
+    ap.add_argument("--k", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (smaller datasets, same coverage)")
+    args = ap.parse_args()
+    if args.smoke:
+        args.n, args.k, args.requests = 1000, 8, 6
+
+    from repro.core import (
+        ClusterEngine,
+        ClusterPlan,
+        ClusterSpec,
+        DeadlineExceededError,
+        ExecutionSpec,
+        FaultPlan,
+        InvalidInputError,
+        QueueFullError,
+        RetryPolicy,
+    )
+
+    rng = np.random.default_rng(0)
+    centers = rng.normal(size=(32, args.d)) * 25
+
+    def make_dataset():
+        return (centers[rng.integers(32, size=args.n)]
+                + rng.normal(size=(args.n, args.d)))
+
+    spec = ClusterSpec(k=args.k, seeder="fastkmeans++", seed=0)
+    exe = ExecutionSpec(backend="cpu")
+    primary = f"{spec.seeder}/{exe.backend}"
+
+    # ---- 1. quarantine: bad data fails typed, synchronously ---------------
+    print("1. input quarantine")
+    with ClusterEngine(spec, exe) as engine:
+        poisoned = make_dataset()
+        poisoned[3, 1] = np.nan
+        try:
+            engine.submit(poisoned)
+        except InvalidInputError as e:
+            print(f"   submit() raised InvalidInputError: {e}")
+        print(f"   quarantined={engine.stats()['quarantined']}, "
+              f"submitted={engine.stats()['submitted']} "
+              f"(no ticket, no worker ever saw the data)")
+
+    # ---- 2. backpressure: bounded queue, shed-oldest ----------------------
+    print("2. backpressure (max_pending=1, shed-oldest)")
+    slow = FaultPlan(seed=0, solve_latency_s=0.2)
+    with ClusterEngine(spec, exe, fault_plan=slow, max_pending=1,
+                       backpressure="shed-oldest") as engine:
+        tickets = [engine.submit(make_dataset()) for _ in range(4)]
+        outcomes = []
+        for t in tickets:
+            exc = t.exception()
+            outcomes.append("shed" if isinstance(exc, QueueFullError)
+                            else "served" if exc is None else repr(exc))
+        st = engine.stats()
+        print(f"   4 submits -> {outcomes}  "
+              f"(shed={st['shed']}, completed={st['completed']})")
+
+    # ---- 3. deadlines: a too-tight SLO expires typed ----------------------
+    print("3. per-request deadlines")
+    with ClusterEngine(spec, exe, fault_plan=slow) as engine:
+        urgent = engine.submit(make_dataset(), deadline=0.05)
+        relaxed = engine.submit(make_dataset(), deadline=30.0)
+        exc = urgent.exception()
+        assert isinstance(exc, DeadlineExceededError), exc
+        print(f"   50ms SLO: DeadlineExceededError ({exc})")
+        print(f"   30s SLO:  served in "
+              f"{relaxed.result().extras['attempts']} attempt(s); "
+              f"deadline_expired={engine.stats()['deadline_expired']}")
+
+    # ---- 4. retries: transient faults healed on fresh rng streams --------
+    print("4. transient-failure retries")
+    healing = FaultPlan(seed=1, solve_failure_rate=1.0, match=primary,
+                        max_failures_per_key=1)   # first attempt fails, heals
+    with ClusterEngine(spec, exe, fault_plan=healing,
+                       retry=RetryPolicy(max_attempts=3)) as engine:
+        res = engine.submit(make_dataset()).result()
+        print(f"   served_by={res.extras['served_by']} after "
+              f"{res.extras['attempts']} attempts "
+              f"(retries={engine.stats()['retries']}; each retry solves "
+              f"on an attempt-derived rng stream)")
+
+    # ---- 5. degradation: a dead primary served from the fallback chain ---
+    print("5. graceful degradation")
+    dead = FaultPlan(seed=2, solve_failure_rate=1.0, match=primary)
+    pts = make_dataset()
+    with ClusterEngine(spec, exe, fault_plan=dead,
+                       retry=RetryPolicy(max_attempts=2)) as engine:
+        res = engine.submit(pts).result()
+        st = engine.stats()
+    direct = ClusterPlan(
+        spec.replace(seeder=res.extras["served_by"].split("/")[0]),
+        exe).fit(pts)
+    identical = bool(np.array_equal(np.asarray(res.indices),
+                                    np.asarray(direct.indices)))
+    print(f"   primary {primary} kept failing -> served_by="
+          f"{res.extras['served_by']} via path "
+          f"{res.extras['fallback_path']}")
+    print(f"   bit-identical to a direct solo fit on the fallback: "
+          f"{identical}")
+
+    # ---- 6. the ledger: chaos stream, books balance -----------------------
+    print(f"6. chaos stream ({args.requests} requests, 35% injected "
+          f"transient solve faults)")
+    chaos = FaultPlan(seed=3, solve_failure_rate=0.35, match=primary)
+    with ClusterEngine(spec, exe, fault_plan=chaos,
+                       retry=RetryPolicy(max_attempts=3)) as engine:
+        tickets = [engine.submit(make_dataset(), deadline=60.0)
+                   for _ in range(args.requests)]
+        for t in engine.as_completed(tickets):
+            t.exception()      # drain; terminal state guaranteed
+        st = engine.stats()
+    print(f"   submitted={st['submitted']} completed={st['completed']} "
+          f"failed={st['failed']} cancelled={st['cancelled']} "
+          f"(injected={chaos.stats()['injected']}, "
+          f"retries={st['retries']}, "
+          f"fallback_served={st['fallback_served']})")
+    print(f"   health={st['health']}")
+    assert st["completed"] + st["failed"] + st["cancelled"] \
+        == st["submitted"], "stranded tickets"
+    print("   ledger balances: completed + failed + cancelled == submitted")
+
+
+if __name__ == "__main__":
+    main()

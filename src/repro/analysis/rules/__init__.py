@@ -1,6 +1,7 @@
 """Built-in rule set.  Importing this package registers every rule."""
 
 from repro.analysis.rules import (  # noqa: F401 — imported for registration
+    future_discipline,
     host_sync,
     jit_static_hashability,
     lock_discipline,
@@ -9,5 +10,5 @@ from repro.analysis.rules import (  # noqa: F401 — imported for registration
     rng_reuse,
 )
 
-__all__ = ["host_sync", "jit_static_hashability", "lock_discipline",
-           "pallas_tiles", "retrace_hazard", "rng_reuse"]
+__all__ = ["future_discipline", "host_sync", "jit_static_hashability",
+           "lock_discipline", "pallas_tiles", "retrace_hazard", "rng_reuse"]

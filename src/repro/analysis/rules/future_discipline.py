@@ -1,0 +1,105 @@
+"""future-discipline: every `set_result` path must forward failures.
+
+The engine pipeline hands `concurrent.futures.Future`s across threads:
+a worker computes, then calls ``fut.set_result(res)``.  The failure mode
+is a stranded future: if anything raises between the computation and the
+``set_result`` — including ``BaseException``s like ``KeyboardInterrupt``
+or a generator exit — and no handler forwards it with
+``fut.set_exception(e)``, every caller blocked on ``fut.result()`` hangs
+forever.  The engine solve loop guards against this by hand; this rule
+makes the pattern mandatory for all of ``src/repro``.
+
+Per function: every ``X.set_result(...)`` call must sit inside the
+``try:`` body of a ``try`` statement with a bare ``except`` or an
+``except BaseException`` handler that calls ``X.set_exception(...)`` on
+the *same receiver expression*.  ``except Exception`` is not enough —
+it is exactly the ``BaseException``-shaped escapes that strand waiters.
+``set_exception``-only paths (cancellation, shedding) are not
+constrained: they cannot strand a waiter, only resolve it.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+from repro.analysis.registry import rule
+
+
+def _receiver(call: ast.Call) -> str | None:
+    """Unparsed receiver of an ``<expr>.set_result/set_exception`` call."""
+    if isinstance(call.func, ast.Attribute):
+        return ast.unparse(call.func.value)
+    return None
+
+
+def _is_base_exception_handler(handler: ast.ExceptHandler) -> bool:
+    if handler.type is None:                       # bare except
+        return True
+    t = handler.type
+    if isinstance(t, ast.Attribute):               # builtins.BaseException
+        return t.attr == "BaseException"
+    return isinstance(t, ast.Name) and t.id == "BaseException"
+
+
+def _forwards(handler: ast.ExceptHandler, receiver: str) -> bool:
+    """Does the handler call ``<receiver>.set_exception(...)``?"""
+    for node in ast.walk(handler):
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "set_exception" and \
+                _receiver(node) == receiver:
+            return True
+    return False
+
+
+class _Scan(ast.NodeVisitor):
+    """Collect set_result calls with the try-handlers covering them.
+
+    Only the ``try:`` body is covered by a statement's handlers — code in
+    ``else``/``finally``/the handlers themselves is not, matching Python
+    semantics.
+    """
+
+    def __init__(self):
+        self.covering: list = []       # stack of handler lists
+        self.calls: list = []          # (call, receiver, [handlers...])
+
+    def visit_Try(self, node: ast.Try) -> None:
+        self.covering.append(node.handlers)
+        for stmt in node.body:
+            self.visit(stmt)
+        self.covering.pop()
+        for other in node.handlers + node.orelse + node.finalbody:
+            self.visit(other)
+
+    visit_TryStar = visit_Try
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "set_result":
+            receiver = _receiver(node)
+            if receiver is not None:
+                handlers = [h for hs in self.covering for h in hs]
+                self.calls.append((node, receiver, handlers))
+        self.generic_visit(node)
+
+
+@rule("future-discipline",
+      doc="every Future.set_result path must be covered by a try/except "
+          "BaseException handler that set_exception-forwards to the same "
+          "future")
+def check(ctx, project):
+    scan = _Scan()
+    scan.visit(ctx.tree)
+    for call, receiver, handlers in scan.calls:
+        if any(_is_base_exception_handler(h) and _forwards(h, receiver)
+               for h in handlers):
+            continue
+        yield Finding(
+            path=ctx.path, line=call.lineno, rule="future-discipline",
+            message=(f"'{receiver}.set_result(...)' is not covered by a "
+                     f"try/except BaseException handler forwarding to "
+                     f"'{receiver}.set_exception' — an escape between "
+                     f"compute and set_result strands every waiter"),
+        )

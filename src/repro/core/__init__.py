@@ -7,7 +7,10 @@ entry point: `ClusterSpec` + `ExecutionSpec` compile into a `ClusterPlan`
 with a cached prepare stage and device-resident `FitResult`s; `engine`
 pipelines many such problems (host prepare of request i+1 overlapped with
 the device solve of request i); the typed per-backend seeder registry
-lives in `registry`.  See docs/architecture.md for the end-to-end tour.
+lives in `registry`; `resilience` supplies the fault-tolerance
+primitives the engine serves with (deadlines, retries, circuit breakers,
+registry-declared fallback chains, deterministic fault injection).  See
+docs/architecture.md for the end-to-end tour.
 """
 
 from repro.core.api import (
@@ -30,6 +33,21 @@ from repro.core.api import (
     resolve_seeder,
 )
 from repro.core.batch_schedule import BatchSchedule, shape_bucket
+from repro.core.resilience import (
+    CircuitBreaker,
+    CircuitBreakerPolicy,
+    DeadlineExceededError,
+    FaultPlan,
+    InjectedFault,
+    InvalidInputError,
+    QueueFullError,
+    RetryPolicy,
+    ServiceUnavailableError,
+    attempt_seed,
+    classify_failure,
+    fallback_chain,
+    validate_points,
+)
 from repro.core.lloyd import assign, lloyd
 from repro.core.multitree import MultiTreeSampler
 from repro.core.seeding import (
@@ -49,22 +67,35 @@ from repro.core.tree_embedding import MultiTreeEmbedding, build_multitree
 __all__ = [
     "BACKENDS",
     "BatchSchedule",
+    "CircuitBreaker",
+    "CircuitBreakerPolicy",
     "ClusterEngine",
     "ClusterPlan",
     "ClusterSpec",
+    "DeadlineExceededError",
     "ExecutionSpec",
+    "FaultPlan",
     "FitResult",
     "FitTicket",
+    "InjectedFault",
+    "InvalidInputError",
     "KMeans",
     "KMeansConfig",
     "PreparedData",
+    "QueueFullError",
+    "RetryPolicy",
+    "ServiceUnavailableError",
     "shape_bucket",
     "SEEDER_SPECS",
     "SeederSpec",
     "RetraceError",
     "TRACE_COUNTS",
     "no_retrace",
+    "attempt_seed",
     "capability_table",
+    "classify_failure",
+    "fallback_chain",
+    "validate_points",
     "data_fingerprint",
     "ensure_host_f64",
     "fit",

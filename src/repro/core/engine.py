@@ -26,6 +26,18 @@ approaching ``(P + S) / max(P / W, S)`` (and in practice more when the
 device runtime itself overlaps dispatched solves), tracked per PR in
 ``BENCH_seeding.json["pipeline"]``.
 
+The engine is also the repo's fault-tolerant serving core
+(`core.resilience`, docs/resilience.md): a bounded submit queue with
+block / reject / shed-oldest backpressure, input quarantine at
+`submit()`, per-request monotonic deadlines, transient-failure retries
+on attempt-derived rng streams, and a circuit breaker per
+(seeder, backend) that degrades an unhealthy target down the
+registry-declared fallback chain (``sharded → device → cpu``,
+``rejection → kmeans|| → kmeans++``) — correctness-preserving, since
+every chained seeder carries the same O(log k) guarantee.  `stats()`
+surfaces the counters and per-target health; a `resilience.FaultPlan`
+makes the whole machine deterministically chaos-testable.
+
 Donation composes: with ``ExecutionSpec(donate=True)`` on a non-CPU
 backend the stacked/solo programs donate their per-fit input blocks (see
 `device_seeding.use_donation`), so a retired request's buffers are reused
@@ -42,14 +54,42 @@ from __future__ import annotations
 import collections
 import concurrent.futures as cf
 import dataclasses
-import queue
 import threading
 import time
-from typing import Any, Iterable, Iterator, Optional, Sequence
+from typing import Any, Callable, Iterable, Iterator, Optional, Sequence
 
 from repro.core.plan import ClusterPlan, ClusterSpec, ExecutionSpec, FitResult
+from repro.core.resilience import (
+    CircuitBreaker,
+    CircuitBreakerPolicy,
+    DeadlineExceededError,
+    FaultPlan,
+    InvalidInputError,
+    NO_RETRY,
+    QueueFullError,
+    RetryPolicy,
+    ServiceUnavailableError,
+    attempt_seed,
+    classify_failure,
+    fallback_chain,
+    validate_points,
+)
 
 __all__ = ["ClusterEngine", "FitTicket"]
+
+_BACKPRESSURE_POLICIES = ("block", "reject", "shed-oldest")
+
+#: Counter keys `stats()` always reports (zero-seeded), so accounting
+#: invariants like ``cancelled + completed + failed == submitted`` hold
+#: without key-existence checks.  completed/failed/cancelled are the
+#: disjoint terminal states; deadline_expired ⊆ failed and shed ⊆
+#: cancelled are sub-category counters; quarantined/rejected requests
+#: never became tickets and are outside ``submitted``.
+_COUNTERS = (
+    "submitted", "completed", "failed", "cancelled",
+    "quarantined", "rejected", "shed", "deadline_expired",
+    "retries", "fallback_served", "short_circuited",
+)
 
 
 @dataclasses.dataclass(eq=False)
@@ -61,12 +101,21 @@ class FitTicket:
     or `.block_until_ready()` / `.to_numpy()` them).  Tickets compare
     (and hash) by identity — two requests are two tickets — and remember
     their submission `index` (the engine solves in index order).
+
+    `deadline` is the request's expiry on the engine's monotonic clock
+    (absolute, set from the relative ``submit(deadline=)``); `retry` the
+    per-request `RetryPolicy` override.  A served result's
+    ``extras["served_by"]`` / ``extras["fallback_path"]`` /
+    ``extras["attempts"]`` record which (seeder, backend) actually
+    solved it and the degradation path taken.
     """
 
     index: int
     cluster: ClusterSpec
     seed: Optional[int]
     tag: Any = None
+    deadline: Optional[float] = None
+    retry: Optional[RetryPolicy] = None
     _future: cf.Future = dataclasses.field(default_factory=cf.Future,
                                            repr=False, compare=False)
 
@@ -87,11 +136,22 @@ class FitTicket:
         self._future.add_done_callback(lambda _f: fn(self))
 
 
-_SHUTDOWN = object()
+@dataclasses.dataclass(eq=False)
+class _Item:
+    """One queued request: the ticket plus what its solve needs.
+
+    `points` is retained so a retry or a fallback target can re-prepare
+    the dataset after a failed (or foreign-plan) primary prepare.
+    """
+
+    ticket: FitTicket
+    plan: ClusterPlan
+    points: Any
+    prep_future: cf.Future
 
 
 class ClusterEngine:
-    """Pipelined fit executor over one `ExecutionSpec` placement.
+    """Pipelined, fault-tolerant fit executor over one placement.
 
     ::
 
@@ -115,24 +175,65 @@ class ClusterEngine:
     False evicts each request's entry once its solve completes, so a
     serving loop over a stream of fresh datasets holds O(pipeline depth)
     prepared artifacts instead of O(requests ever).
+
+    Resilience knobs (semantics in docs/resilience.md): `max_pending`
+    bounds the not-yet-dispatched queue with `backpressure` policy
+    ``"block"`` (wait for space), ``"reject"`` (raise `QueueFullError`),
+    or ``"shed-oldest"`` (fail the oldest queued ticket to admit the
+    new one); `validate_inputs` quarantines NaN/Inf/empty/degenerate
+    datasets at submit; `retry` is the engine-wide default
+    `RetryPolicy` (no retries unless set — per-ticket override via
+    ``submit(retry=)``); `breaker` configures the per-(seeder, backend)
+    `CircuitBreakerPolicy`; `degrade=False` turns the fallback chain
+    off (failures surface instead); `fault_plan` forwards a
+    `resilience.FaultPlan` to every plan the engine builds; `clock` is
+    the monotonic clock used for deadlines and breaker cooldowns
+    (injectable for tests).
     """
 
     def __init__(self, cluster: Optional[ClusterSpec] = None,
                  execution: Optional[ExecutionSpec] = None, *,
-                 prepare_workers: int = 2, retain_prepared: bool = True):
+                 prepare_workers: int = 2, retain_prepared: bool = True,
+                 max_pending: Optional[int] = None,
+                 backpressure: str = "block",
+                 validate_inputs: bool = True,
+                 retry: Optional[RetryPolicy] = None,
+                 breaker: Optional[CircuitBreakerPolicy] = None,
+                 degrade: bool = True,
+                 fault_plan: Optional[FaultPlan] = None,
+                 clock: Callable[[], float] = time.monotonic):
         if prepare_workers < 1:
             raise ValueError(
                 f"prepare_workers must be >= 1, got {prepare_workers}")
+        if backpressure not in _BACKPRESSURE_POLICIES:
+            raise ValueError(
+                f"unknown backpressure policy {backpressure!r}; "
+                f"expected one of {_BACKPRESSURE_POLICIES}")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
         self.cluster = cluster
         self.execution = execution if execution is not None \
             else ExecutionSpec()
         self.retain_prepared = retain_prepared
-        self._plans: dict[ClusterSpec, ClusterPlan] = {}
+        self.max_pending = max_pending
+        self.backpressure = backpressure
+        self.validate_inputs = validate_inputs
+        self.retry = retry if retry is not None else NO_RETRY
+        self.breaker_policy = breaker if breaker is not None \
+            else CircuitBreakerPolicy()
+        self.degrade = degrade
+        self.fault_plan = fault_plan
+        self._clock = clock
+        self._plans: dict = {}
+        self._breakers: dict = {}
         self._pool = cf.ThreadPoolExecutor(
             max_workers=prepare_workers,
             thread_name_prefix="cluster-engine-prepare")
-        self._queue: queue.SimpleQueue = queue.SimpleQueue()
-        self._lock = threading.Lock()
+        # A Condition (not a bare Lock): submit blocks on it under the
+        # "block" backpressure policy and the solve worker sleeps on it
+        # while the queue is empty.
+        self._lock = threading.Condition(threading.Lock())
+        self._pending: collections.deque = collections.deque()
         self._closed = False
         self._cancel = False
         self._next_index = 0
@@ -156,15 +257,22 @@ class ClusterEngine:
             raise ValueError(
                 "no ClusterSpec: pass one to submit()/map_fit() or to the "
                 "engine constructor")
+        return self._plan_cached(spec, self.execution)
+
+    def _plan_cached(self, spec: ClusterSpec,
+                     execution: ExecutionSpec) -> ClusterPlan:
         with self._lock:
-            plan = self._plans.get(spec)
+            plan = self._plans.get((spec, execution))
             if plan is None:
-                plan = ClusterPlan(spec, self.execution)
-                self._plans[spec] = plan
+                plan = ClusterPlan(spec, execution,
+                                   fault_plan=self.fault_plan)
+                self._plans[(spec, execution)] = plan
             return plan
 
     def submit(self, points, *, cluster: Optional[ClusterSpec] = None,
-               seed: Optional[int] = None, tag: Any = None) -> FitTicket:
+               seed: Optional[int] = None, tag: Any = None,
+               deadline: Optional[float] = None,
+               retry: Optional[RetryPolicy] = None) -> FitTicket:
         """Enqueue one fit request; returns its `FitTicket` immediately.
 
         The host prepare starts on the pool right away; the device solve
@@ -172,33 +280,84 @@ class ClusterEngine:
         been dispatched.  `seed=None` uses the spec's seed (the serial
         `plan.fit()` stream); `tag` is an opaque caller label carried on
         the ticket.
+
+        `deadline` (seconds from now, engine monotonic clock) bounds the
+        request end to end: expiry at dispatch, during the prepare wait,
+        between retries, or on a too-late solve fails the ticket with
+        `DeadlineExceededError`.  `retry` overrides the engine's default
+        `RetryPolicy` for this request.  Invalid datasets
+        (NaN/Inf/empty/degenerate) are quarantined here — a typed
+        `InvalidInputError` raises synchronously and no ticket is
+        created; a full bounded queue raises `QueueFullError` under the
+        ``"reject"`` policy (under ``"shed-oldest"`` the oldest queued
+        ticket fails with it instead).
         """
         plan = self.plan_for(cluster)
-        # The closed-check, ticket numbering and enqueue happen under one
-        # lock acquisition so a concurrent close() (which appends the
-        # shutdown sentinel under the same lock) can never strand a ticket
-        # behind the sentinel.
+        if self.validate_inputs:
+            try:
+                validate_points(points, k=plan.cluster.k)
+            except InvalidInputError:
+                with self._lock:
+                    self._stats["quarantined"] += 1
+                raise
+        if deadline is not None and deadline <= 0:
+            raise ValueError(f"deadline must be > 0 seconds, got {deadline}")
+        shed: Optional[_Item] = None
+        # The closed-check, admission control, ticket numbering and
+        # enqueue happen under one lock acquisition so a concurrent
+        # close() can never strand a ticket.
         with self._lock:
+            if self.max_pending is not None:
+                if self.backpressure == "block":
+                    while len(self._pending) >= self.max_pending \
+                            and not self._closed:
+                        self._lock.wait()
+                elif len(self._pending) >= self.max_pending:
+                    if self.backpressure == "reject":
+                        self._stats["rejected"] += 1
+                        raise QueueFullError(
+                            f"submit queue full "
+                            f"({self.max_pending} pending); "
+                            "request rejected (backpressure='reject')")
+                    shed = self._pending.popleft()
+                    self._stats["shed"] += 1
+                    self._stats["cancelled"] += 1
             if self._closed:
                 raise RuntimeError("engine is closed")
             index = self._next_index
             self._next_index += 1
             self._stats["submitted"] += 1
-            ticket = FitTicket(index=index, cluster=plan.cluster, seed=seed,
-                               tag=tag)
+            ticket = FitTicket(
+                index=index, cluster=plan.cluster, seed=seed, tag=tag,
+                deadline=None if deadline is None
+                else self._clock() + deadline,
+                retry=retry)
             prep_future = self._pool.submit(self._timed_prepare, plan,
                                             points)
-            self._queue.put((ticket, plan, prep_future))
+            self._pending.append(_Item(ticket, plan, points, prep_future))
+            self._lock.notify_all()
+        if shed is not None:
+            # Outside the lock: failing the future runs done-callbacks.
+            shed.prep_future.cancel()
+            shed.ticket._future.set_exception(QueueFullError(
+                "request shed: newer submission displaced it "
+                "(backpressure='shed-oldest')"))
         return ticket
 
     def map_fit(self, datasets: Sequence[Any], *,
                 cluster: Optional[ClusterSpec] = None,
-                seeds: Optional[Sequence[int]] = None) -> list[FitResult]:
+                seeds: Optional[Sequence[int]] = None,
+                return_exceptions: bool = False) -> list:
         """Pipelined fit of every dataset; results in submission order.
 
         The synchronous convenience over `submit`: all prepares are in
         flight while earlier solves run, and the call blocks until the
         last result.  `seeds` (optional) gives one solve seed per dataset.
+
+        One failed dataset does not abandon the rest: every ticket is
+        drained either way.  With `return_exceptions=True` the failure
+        objects appear in the result list at their dataset's position;
+        by default the first failure re-raises after the drain.
         """
         if seeds is not None and len(seeds) != len(datasets):
             raise ValueError(
@@ -208,7 +367,18 @@ class ClusterEngine:
                         seed=None if seeds is None else int(seeds[i]))
             for i, ds in enumerate(datasets)
         ]
-        return [t.result() for t in tickets]
+        outcomes: list = []
+        first_exc: Optional[BaseException] = None
+        for t in tickets:
+            try:
+                outcomes.append(t.result())
+            except BaseException as e:  # noqa: BLE001 — collected per ticket
+                outcomes.append(e)
+                if first_exc is None:
+                    first_exc = e
+        if not return_exceptions and first_exc is not None:
+            raise first_exc
+        return outcomes
 
     # -- completion ---------------------------------------------------------
 
@@ -220,6 +390,9 @@ class ClusterEngine:
         Completion order can only run ahead of submission order by what the
         pipeline reorders (solves are sequential; result readiness is not),
         so this is how a serving loop consumes results at device speed.
+        A `timeout` expiry raises `TimeoutError` from the iterator; the
+        pipeline itself is unaffected (undrained tickets keep solving and
+        can be awaited again).
         """
         tickets = list(tickets)
         by_future = {t._future: t for t in tickets}
@@ -237,50 +410,224 @@ class ClusterEngine:
 
     def _solve_loop(self) -> None:
         while True:
-            item = self._queue.get()
-            if item is _SHUTDOWN:
-                return
-            ticket, plan, prep_future = item
             with self._lock:
+                while not self._pending and not self._closed:
+                    self._lock.wait()
+                if not self._pending:
+                    return                 # closed and fully drained
+                item = self._pending.popleft()
                 cancelled = self._cancel
+                self._lock.notify_all()    # wake blocked submitters
             if cancelled:
                 # close(cancel_pending=True): fail queued tickets fast
                 # instead of solving the backlog.
-                prep_future.cancel()
+                item.prep_future.cancel()
                 with self._lock:
                     self._stats["cancelled"] += 1
-                ticket._future.set_exception(
+                item.ticket._future.set_exception(
                     cf.CancelledError("engine closed with cancel_pending"))
                 continue
-            prep = None
+            self._dispatch(item)
+
+    def _dispatch(self, item: _Item) -> None:
+        """Drive one request to a terminal state (exactly one counter)."""
+        used: list = []                    # (plan, prep) pairs to evict
+        try:
             try:
-                prep = prep_future.result()
-                t0 = time.perf_counter()
-                res = plan.fit_prepared(prep, seed=ticket.seed)
+                self._check_deadline(item.ticket)
+                res = self._solve_resilient(item, used)
                 with self._lock:
-                    self._times["solve_seconds"] += time.perf_counter() - t0
                     self._stats["completed"] += 1
-                ticket._future.set_result(res)
+                item.ticket._future.set_result(res)
             except BaseException as e:  # noqa: BLE001 — forwarded to ticket
                 with self._lock:
-                    self._stats["failed"] += 1
-                ticket._future.set_exception(e)
-            finally:
-                # Eviction must also cover failed solves, or streaming mode
-                # (retain_prepared=False) leaks an entry per bad request.
-                if prep is not None and not self.retain_prepared:
-                    plan.forget(prep)
+                    if isinstance(e, cf.CancelledError):
+                        self._stats["cancelled"] += 1
+                    else:
+                        self._stats["failed"] += 1
+                        if isinstance(e, DeadlineExceededError):
+                            self._stats["deadline_expired"] += 1
+                item.ticket._future.set_exception(e)
+        finally:
+            # Eviction must also cover failed solves, or streaming mode
+            # (retain_prepared=False) leaks an entry per bad request.
+            for plan, prep in used:
+                plan.forget(prep)
+
+    def _solve_resilient(self, item: _Item, used: list) -> FitResult:
+        """Solve through the primary target, then the fallback chain.
+
+        Transient failures (after the per-target retry budget) and open
+        circuits move to the next (seeder, backend) in the
+        registry-declared chain; permanent failures, deadline expiry and
+        cancellation surface immediately.
+        """
+        plan = item.plan
+        primary = (plan.cluster.seeder, plan.execution.backend)
+        targets = [primary]
+        if self.degrade:
+            targets += fallback_chain(*primary)
+        path: list = []
+        last_exc: Optional[BaseException] = None
+        for target in targets:
+            breaker = self._breaker(target)
+            if not breaker.allow():
+                with self._lock:
+                    self._stats["short_circuited"] += 1
+                path.append(f"{target[0]}/{target[1]}:open")
+                continue
+            if target == primary:
+                t_plan, prep_future = plan, item.prep_future
+            else:
+                t_plan = self._plan_cached(
+                    plan.cluster.replace(seeder=target[0]),
+                    self._execution_for(target[1]))
+                prep_future = None
+            try:
+                res = self._attempt_target(item, t_plan, target,
+                                           prep_future, breaker, path, used)
+            except (DeadlineExceededError, cf.CancelledError):
+                raise
+            except BaseException as e:  # noqa: BLE001 — classified below
+                if classify_failure(e) == "permanent":
+                    raise
+                last_exc = e
+                continue
+            if target != primary:
+                with self._lock:
+                    self._stats["fallback_served"] += 1
+            return res
+        if last_exc is not None:
+            raise last_exc
+        raise ServiceUnavailableError(
+            f"no target available for {primary[0]}/{primary[1]}: every "
+            f"circuit in the fallback chain is open ({path})")
+
+    def _attempt_target(self, item: _Item, plan: ClusterPlan,
+                        target: tuple, prep_future: Optional[cf.Future],
+                        breaker: CircuitBreaker, path: list,
+                        used: list) -> FitResult:
+        """Run the retry loop against one (seeder, backend) target."""
+        ticket = item.ticket
+        policy = ticket.retry if ticket.retry is not None else self.retry
+        label = f"{target[0]}/{target[1]}"
+        attempt = 0
+        while True:
+            self._check_cancelled()
+            self._check_deadline(ticket)
+            try:
+                if prep_future is not None and attempt == 0:
+                    try:
+                        prep = prep_future.result(
+                            timeout=self._remaining(ticket))
+                    except (cf.TimeoutError, TimeoutError):
+                        if ticket.deadline is None:
+                            raise      # a real timeout from inside prepare
+                        raise DeadlineExceededError(
+                            f"deadline expired while waiting for the "
+                            f"prepare of request {ticket.index}") from None
+                else:
+                    # Retry / fallback: (re-)prepare on the solve worker.
+                    # A healed transient prepare fault is a fresh build;
+                    # an earlier successful build is a fingerprint hit.
+                    prep = self._timed_prepare(plan, item.points)
+                if not self.retain_prepared:
+                    used.append((plan, prep))
+                self._check_cancelled()
+                self._check_deadline(ticket)
+                t0 = time.perf_counter()
+                res = plan.fit_prepared(
+                    prep, seed=attempt_seed(ticket.seed, attempt))
+                with self._lock:
+                    self._times["solve_seconds"] += time.perf_counter() - t0
+                # A result after expiry is still an SLO miss: the caller
+                # asked for an answer *by the deadline*.
+                self._check_deadline(ticket)
+                breaker.record_success()
+                res.extras["served_by"] = label
+                res.extras["attempts"] = attempt + 1
+                res.extras["fallback_path"] = tuple(path)
+                return res
+            except (DeadlineExceededError, cf.CancelledError):
+                raise
+            except BaseException as e:  # noqa: BLE001 — classified below
+                if classify_failure(e) == "permanent":
+                    raise
+                breaker.record_failure()
+                attempt += 1
+                if attempt >= policy.max_attempts \
+                        or breaker.state == "OPEN":
+                    path.append(label)
+                    raise
+                with self._lock:
+                    self._stats["retries"] += 1
+                delay = policy.delay(attempt, seed=ticket.index)
+                if delay > 0:
+                    remaining = self._remaining(ticket)
+                    if remaining is not None:
+                        delay = min(delay, max(remaining, 0.0))
+                    time.sleep(delay)
+
+    # -- resilience helpers -------------------------------------------------
+
+    def _execution_for(self, backend: str) -> ExecutionSpec:
+        if backend == self.execution.backend:
+            return self.execution
+        return dataclasses.replace(
+            self.execution, backend=backend,
+            mesh=self.execution.mesh if backend == "sharded" else None)
+
+    def _breaker(self, target: tuple) -> CircuitBreaker:
+        with self._lock:
+            br = self._breakers.get(target)
+            if br is None:
+                br = CircuitBreaker(self.breaker_policy, clock=self._clock)
+                self._breakers[target] = br
+            return br
+
+    def _remaining(self, ticket: FitTicket) -> Optional[float]:
+        if ticket.deadline is None:
+            return None
+        return ticket.deadline - self._clock()
+
+    def _check_deadline(self, ticket: FitTicket) -> None:
+        remaining = self._remaining(ticket)
+        if remaining is not None and remaining <= 0:
+            raise DeadlineExceededError(
+                f"request {ticket.index} missed its deadline by "
+                f"{-remaining:.3f}s")
+
+    def _check_cancelled(self) -> None:
+        # close(cancel_pending=True) raced an in-flight dispatch: the
+        # prepare may have finished, but the ticket must still be failed
+        # as cancelled instead of solved after shutdown.
+        with self._lock:
+            cancelled = self._cancel
+        if cancelled:
+            raise cf.CancelledError("engine closed with cancel_pending")
 
     # -- lifecycle / stats --------------------------------------------------
 
     def stats(self) -> dict:
-        """Pipeline counters: submitted/completed/failed plus the summed
-        host-prepare and device-solve stage seconds (their overlap is the
-        pipelining win: serial wall-clock would be their sum)."""
+        """Pipeline counters, stage seconds, and per-target health.
+
+        Counters in `_COUNTERS` are always present (zero-seeded);
+        ``completed + failed + cancelled == submitted`` once the engine
+        is closed (no stranded tickets).  ``pending`` is the
+        not-yet-dispatched queue depth, ``health`` maps each
+        ``"<seeder>/<backend>"`` target the engine has touched to its
+        circuit state (``OK`` / ``DEGRADED`` / ``OPEN``), and the summed
+        host-prepare / device-solve stage seconds quantify the
+        pipelining win (serial wall-clock would be their sum).
+        """
+        out = {k: 0 for k in _COUNTERS}
         with self._lock:
-            out = dict(self._stats)
+            out.update(self._stats)
             out.update(self._times)
             out["plans"] = len(self._plans)
+            out["pending"] = len(self._pending)
+            out["health"] = {f"{s}/{b}": br.state
+                             for (s, b), br in self._breakers.items()}
         return out
 
     def close(self, wait: bool = True, *,
@@ -291,14 +638,17 @@ class ClusterEngine:
         `concurrent.futures.CancelledError` instead of solving the backlog
         — the escape hatch `__exit__` takes when the with-block raised, so
         an exception (or Ctrl-C) does not block on hundreds of queued
-        solves.
+        solves.  A request whose prepare is already running is cancelled
+        too (its ticket fails; the prepare result is discarded).  After
+        close, ``stats()`` satisfies
+        ``completed + failed + cancelled == submitted``.
         """
         with self._lock:
             if self._closed:
                 return
             self._closed = True
             self._cancel = cancel_pending
-            self._queue.put(_SHUTDOWN)
+            self._lock.notify_all()
         if wait:
             self._solver.join()
         self._pool.shutdown(wait=wait, cancel_futures=cancel_pending)

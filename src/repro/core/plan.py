@@ -385,7 +385,8 @@ class ClusterPlan:
     """
 
     def __init__(self, cluster: ClusterSpec,
-                 execution: Optional[ExecutionSpec] = None):
+                 execution: Optional[ExecutionSpec] = None, *,
+                 fault_plan=None):
         if not isinstance(cluster, ClusterSpec):
             raise TypeError(
                 f"expected ClusterSpec, got {type(cluster).__name__} "
@@ -413,6 +414,16 @@ class ClusterPlan:
         self._lock = threading.Lock()      # cache dict + stats counters
         self.stats = {"prepare_calls": 0, "prepare_hits": 0,
                       "prepare_builds": 0, "solves": 0}
+        # Chaos hook (resilience.FaultPlan): seeded failure/latency
+        # injection at the top of the prepare build and the solve; None
+        # (the default) costs nothing on the hot path.
+        self.fault_plan = fault_plan
+
+    def _fault_inject(self, stage: str, detail: str) -> None:
+        if self.fault_plan is not None:
+            self.fault_plan.inject(
+                stage,
+                f"{self.cluster.seeder}/{self._ctx.backend}/{stage}/{detail}")
 
     # -- prepare stage ------------------------------------------------------
 
@@ -460,6 +471,9 @@ class ClusterPlan:
 
     def _build_prepared(self, fp: str, points,
                         stacked: bool) -> PreparedData:
+        # Injection happens only on a real build: cache hits never
+        # re-enter the fault domain (they do no work that could fail).
+        self._fault_inject("prepare", fp)
         t0 = time.perf_counter()
         pts = ensure_host_f64(points)
         rng = np.random.default_rng(self.cluster.seed)
@@ -579,6 +593,10 @@ class ClusterPlan:
         the prepare-time rng snapshot is replayed, so the result is
         bit-for-bit the serial `prepare(points); fit()` sequence.
         """
+        # Keyed by fingerprint only (not the solve seed): retries of one
+        # request hit the same key, so FaultPlan's per-key failure caps
+        # model a transient fault that heals on re-attempt.
+        self._fault_inject("solve", prepared.fingerprint)
         return self._execute(prepared, k or self.cluster.k, seed)
 
     def _solve_rng(self, prep: PreparedData,

@@ -108,12 +108,21 @@ class BackendImpl:
 
 @dataclasses.dataclass
 class SeederSpec:
-    """An algorithm plus its per-backend implementations."""
+    """An algorithm plus its per-backend implementations.
+
+    ``fallback`` names the seeder the serving engine degrades to when
+    this one's circuit breaker opens (``None`` = end of the chain).  The
+    chain declared at registration — ``rejection → kmeans|| →
+    kmeans++`` — only links algorithms sharing the O(log k) guarantee,
+    so degradation is correctness-preserving (see
+    `resilience.fallback_chain` and docs/resilience.md).
+    """
 
     name: str
     caps: SeederCaps
     doc: str = ""
     impls: dict = dataclasses.field(default_factory=dict)
+    fallback: Optional[str] = None
 
     def impl(self, backend: str) -> BackendImpl:
         """The backend's `BackendImpl` (KeyError when not implemented)."""
@@ -139,12 +148,21 @@ SEEDER_SPECS: dict[str, SeederSpec] = {}
 
 
 def register_seeder(name: str, caps: SeederCaps | None = None,
-                    doc: str = "") -> SeederSpec:
-    """Create (or fetch) the spec for `name`."""
+                    doc: str = "",
+                    fallback: Optional[str] = None) -> SeederSpec:
+    """Create (or fetch) the spec for `name`.
+
+    `fallback` declares the degradation target consulted by
+    `resilience.fallback_chain`; a later registration may fill it in on
+    an existing spec (first non-None declaration wins).
+    """
     spec = SEEDER_SPECS.get(name)
     if spec is None:
-        spec = SeederSpec(name=name, caps=caps or SeederCaps(), doc=doc)
+        spec = SeederSpec(name=name, caps=caps or SeederCaps(), doc=doc,
+                          fallback=fallback)
         SEEDER_SPECS[name] = spec
+    elif spec.fallback is None and fallback is not None:
+        spec.fallback = fallback
     return spec
 
 
@@ -183,8 +201,9 @@ def capability_table() -> str:
     """Markdown capability matrix generated from the live registry
     (docs/api.md embeds the output; a test keeps the doc in sync)."""
     header = ("| seeder | backends | device-native | cached prepare "
-              "| stacked | quantize | accepts `c` | accepts schedule |")
-    sep = "|---" * 8 + "|"
+              "| stacked | quantize | accepts `c` | accepts schedule "
+              "| degrades to |")
+    sep = "|---" * 9 + "|"
     rows = [header, sep]
     for name in sorted(SEEDER_SPECS):
         spec = SEEDER_SPECS[name]
@@ -192,6 +211,7 @@ def capability_table() -> str:
         prep = [b for b in spec.backends if spec.impls[b].preparable]
         stacked = [b for b in spec.backends
                    if spec.impls[b].supports_stacked]
+        fallback = f"`{spec.fallback}`" if spec.fallback else "—"
         rows.append(
             f"| `{name}` | {', '.join(spec.backends)} "
             f"| {', '.join(native) or '—'} "
@@ -199,6 +219,7 @@ def capability_table() -> str:
             f"| {', '.join(stacked) or '—'} "
             f"| {'yes' if spec.caps.needs_quantize else '—'} "
             f"| {'yes' if spec.caps.accepts_c else '—'} "
-            f"| {'yes' if spec.caps.accepts_schedule else '—'} |"
+            f"| {'yes' if spec.caps.accepts_schedule else '—'} "
+            f"| {fallback} |"
         )
     return "\n".join(rows)

@@ -547,20 +547,27 @@ SEEDERS: dict[str, Callable[..., SeedingResult]] = {
 def _register_cpu():
     from repro.core import registry
 
+    # `fallback` declares the serving engine's degradation chain
+    # (resilience.fallback_chain): every link shares the O(log k)
+    # guarantee, ending at the exact kmeans++ reference.
     register = registry.register_seeder
     register("kmeans++", registry.SeederCaps(),
              doc="exact D^2 sampling (Arthur & Vassilvitskii 2007)")
     register("fastkmeans++",
              registry.SeederCaps(needs_quantize=True),
-             doc="Algorithm 3: D^2 sampling in the multi-tree metric")
+             doc="Algorithm 3: D^2 sampling in the multi-tree metric",
+             fallback="kmeans++")
     register("rejection",
              registry.SeederCaps(needs_quantize=True, accepts_c=True,
                                  accepts_schedule=True),
-             doc="Algorithm 4: multi-tree proposal + LSH-corrected accept")
+             doc="Algorithm 4: multi-tree proposal + LSH-corrected accept",
+             fallback="kmeans||")
     register("kmeans||", registry.SeederCaps(),
-             doc="k-means|| oversampling + weighted recluster (Bahmani 2012)")
+             doc="k-means|| oversampling + weighted recluster (Bahmani 2012)",
+             fallback="kmeans++")
     register("afkmc2", registry.SeederCaps(),
-             doc="AFK-MC^2 MCMC approximate D^2 seeding (Bachem 2016)")
+             doc="AFK-MC^2 MCMC approximate D^2 seeding (Bachem 2016)",
+             fallback="kmeans++")
     register("uniform", registry.SeederCaps(), doc="uniform baseline")
     for name, fn in list(SEEDERS.items()):
         if "/" not in name:

@@ -386,6 +386,83 @@ def test_lock_discipline_quiet_on_snapshot_under_lock():
 
 
 # ---------------------------------------------------------------------------
+# future-discipline
+# ---------------------------------------------------------------------------
+
+_FUTURE_POS = """
+def worker(ticket, fn):
+    ticket._future.set_result(fn())   # an fn() raise strands the waiter
+"""
+
+_FUTURE_NARROW = """
+def worker(ticket, fn):
+    try:
+        ticket._future.set_result(fn())
+    except Exception as e:            # BaseException escapes still strand
+        ticket._future.set_exception(e)
+"""
+
+_FUTURE_WRONG_RECEIVER = """
+def worker(a, b, fn):
+    try:
+        a.set_result(fn())
+    except BaseException as e:
+        b.set_exception(e)            # forwards to a DIFFERENT future
+"""
+
+_FUTURE_NEG = """
+def worker(ticket, fn):
+    try:
+        res = fn()
+        ticket._future.set_result(res)
+    except BaseException as e:
+        ticket._future.set_exception(e)
+"""
+
+_FUTURE_NEG_BARE = """
+def worker(fut, fn):
+    try:
+        fut.set_result(fn())
+    except:                           # bare except covers BaseException
+        fut.set_exception(RuntimeError("boom"))
+        raise
+"""
+
+_FUTURE_HANDLER_NOT_COVERED = """
+def worker(fut, fallback):
+    try:
+        pass
+    except BaseException as e:
+        fut.set_result(fallback)      # inside the handler: nothing covers it
+        fut.set_exception(e)
+"""
+
+
+def test_future_discipline_fires_on_unguarded_set_result():
+    findings = _run(_FUTURE_POS, "future-discipline")
+    assert len(findings) == 1
+    assert "set_result" in findings[0].message
+    assert "ticket._future" in findings[0].message
+
+
+def test_future_discipline_rejects_narrow_except():
+    assert len(_run(_FUTURE_NARROW, "future-discipline")) == 1
+
+
+def test_future_discipline_requires_same_receiver():
+    assert len(_run(_FUTURE_WRONG_RECEIVER, "future-discipline")) == 1
+
+
+def test_future_discipline_handler_body_is_not_covered():
+    assert len(_run(_FUTURE_HANDLER_NOT_COVERED, "future-discipline")) == 1
+
+
+def test_future_discipline_quiet_on_forwarding_try():
+    assert _run(_FUTURE_NEG, "future-discipline") == []
+    assert _run(_FUTURE_NEG_BARE, "future-discipline") == []
+
+
+# ---------------------------------------------------------------------------
 # framework behaviour
 # ---------------------------------------------------------------------------
 
@@ -401,8 +478,9 @@ def test_unparseable_source_raises():
         analyze_sources({"bad.py": "def f(:\n"})
 
 
-def test_all_six_rules_registered():
+def test_all_seven_rules_registered():
     assert sorted(all_rules()) == [
+        "future-discipline",
         "host-sync-in-jit",
         "jit-static-hashability",
         "lock-discipline",

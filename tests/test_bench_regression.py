@@ -9,7 +9,7 @@ from benchmarks.check_regression import check, main
 KW = dict(slack=2.0, max_slope=1.0, batch_slack=1.15, min_speedup=0.8)
 
 
-def _payload(inc, rebuild=None, adaptive_ratio=0.9):
+def _payload(inc, rebuild=None, adaptive_ratio=0.9, goodput=1.0, stranded=0):
     rebuild = rebuild or {n: v * 3.0 for n, v in inc.items()}
     return {
         "heap_update_per_open": {"per_open": {
@@ -19,6 +19,8 @@ def _payload(inc, rebuild=None, adaptive_ratio=0.9):
         }},
         "adaptive_batch": {"adaptive_over_fixed128": adaptive_ratio,
                            "schedules": {}},
+        "robustness": {"goodput": goodput, "stranded": stranded,
+                       "failures": 0, "deadline_expired": 0},
     }
 
 
@@ -45,6 +47,34 @@ def test_fails_on_growth_ratio_regression_vs_previous():
     cur = _payload({16384: 1e-4, 65536: 3e-4, 262144: 9e-4})
     msgs = check(prev, cur, **KW)
     assert any("vs previous artifact" in m for m in msgs)
+
+
+def test_growth_ratio_ignores_floor_dominated_points(capsys):
+    # Same cur shape as the failing case above, but the small-n points sit
+    # below the dispatch floor on the current machine: the cross-artifact
+    # ratio would measure per-call overhead, so those points are excluded.
+    prev = _payload({16384: 2e-4, 65536: 3e-4, 262144: 4.4e-4})
+    cur = _payload({16384: 2e-5, 65536: 6e-5, 262144: 1.8e-4})
+    assert check(prev, cur, **KW) == []
+    assert "growth check skipped" in capsys.readouterr().out
+    # Points above the floor in both artifacts still participate.
+    prev = _payload({16384: 2e-5, 65536: 3e-4, 262144: 4.4e-4})
+    cur = _payload({16384: 2e-5, 65536: 3e-4, 262144: 4.4e-3})
+    msgs = check(prev, cur, **KW)
+    assert any("vs previous artifact" in m for m in msgs)
+    assert any("[65536, 262144]" in m for m in msgs)
+
+
+def test_fails_on_goodput_or_stranded_regression():
+    bad = _payload({16384: 1e-4, 65536: 3e-4, 262144: 1e-3}, goodput=0.5)
+    msgs = check(GOOD, bad, **KW)
+    assert any("goodput" in m for m in msgs)
+    bad = _payload({16384: 1e-4, 65536: 3e-4, 262144: 1e-3}, stranded=2)
+    msgs = check(GOOD, bad, **KW)
+    assert any("stranded" in m for m in msgs)
+    missing = {k: v for k, v in GOOD.items() if k != "robustness"}
+    msgs = check(GOOD, missing, **KW)
+    assert any("robustness" in m for m in msgs)
 
 
 def test_fails_when_rebuild_beats_incremental():

@@ -101,6 +101,7 @@ def test_core_public_symbols_have_docstrings():
 @pytest.mark.parametrize("modname", [
     "repro.core", "repro.core.plan", "repro.core.registry",
     "repro.core.batch_schedule", "repro.core.engine", "repro.core.tracing",
+    "repro.core.resilience",
 ])
 def test_module_docstrings(modname):
     import importlib

@@ -17,6 +17,9 @@ from repro.core import (
     ClusterPlan,
     ClusterSpec,
     ExecutionSpec,
+    FaultPlan,
+    InvalidInputError,
+    RetryPolicy,
     TRACE_COUNTS,
     no_retrace,
     shape_bucket,
@@ -74,12 +77,22 @@ def test_engine_as_completed_tags_and_seeds():
 
 def test_engine_forwards_failures_and_rejects_after_close():
     spec = ClusterSpec(k=3, seeder="fastkmeans++", seed=0)
-    engine = ClusterEngine(spec, ExecutionSpec(backend="device"))
+    # Quarantine off: the 1-D dataset reaches the worker and the prepare
+    # failure is forwarded asynchronously on the ticket (permanent error,
+    # so the fallback chain must not swallow it).
+    engine = ClusterEngine(spec, ExecutionSpec(backend="device"),
+                           validate_inputs=False)
     bad = engine.submit(np.zeros(7))          # 1-D input: prepare must fail
     assert bad.exception(timeout=60) is not None
     engine.close()
     with pytest.raises(RuntimeError, match="closed"):
         engine.submit(_mixture(50))
+    # Default engines quarantine the same dataset synchronously instead.
+    with ClusterEngine(spec, ExecutionSpec(backend="device")) as checked:
+        with pytest.raises(InvalidInputError, match="2-D"):
+            checked.submit(np.zeros(7))
+        assert checked.stats()["quarantined"] == 1
+        assert checked.stats()["submitted"] == 0
 
 
 def test_engine_retain_prepared_false_evicts_after_solve():
@@ -126,6 +139,106 @@ def test_engine_exit_on_exception_cancels_backlog():
             outcomes["cancelled"] += 1
     assert outcomes["done"] + outcomes["cancelled"] == 6
     assert outcomes["cancelled"] >= 1, "backlog was fully solved, not cut"
+    # no stranded tickets: the terminal counters partition every submission
+    stats = engine.stats()
+    assert stats["cancelled"] + stats["completed"] + stats["failed"] == 6
+
+
+def test_engine_close_cancels_in_flight_prepare():
+    """The cancel_pending race (ISSUE 7 satellite): an item whose prepare
+    is already running when close(cancel_pending=True) lands must still be
+    failed with CancelledError — never solved after shutdown."""
+    import concurrent.futures as cf
+
+    spec = ClusterSpec(k=3, seeder="fastkmeans++", seed=0)
+    # Deterministic race: the first prepare sleeps long enough that the
+    # solve worker is parked waiting on it when close() arrives.
+    fp = FaultPlan(seed=0, prepare_latency_s=0.5)
+    engine = ClusterEngine(spec, ExecutionSpec(backend="device"),
+                           fault_plan=fp)
+    tickets = [engine.submit(_mixture(200, seed=i)) for i in range(3)]
+    engine.close(cancel_pending=True)
+    for t in tickets:
+        assert isinstance(t.exception(timeout=60), cf.CancelledError)
+    stats = engine.stats()
+    assert stats["cancelled"] == stats["submitted"] == 3
+    assert stats["cancelled"] + stats["completed"] + stats["failed"] \
+        == stats["submitted"]
+
+
+def test_engine_concurrent_submit_close_race():
+    """Hammer submit() from threads while close() lands: every ticket that
+    submit returned must reach a terminal state, every refused submission
+    must raise RuntimeError, and the accounting must balance."""
+    import threading
+
+    spec = ClusterSpec(k=3, seeder="fastkmeans++", seed=0)
+    engine = ClusterEngine(spec, ExecutionSpec(backend="device"))
+    data = _mixture(200, seed=5)
+    tickets, refused = [], []
+    lock = threading.Lock()
+
+    def hammer():
+        for _ in range(8):
+            try:
+                t = engine.submit(data)
+            except RuntimeError:
+                with lock:
+                    refused.append(1)
+            else:
+                with lock:
+                    tickets.append(t)
+
+    threads = [threading.Thread(target=hammer) for _ in range(4)]
+    for th in threads:
+        th.start()
+    engine.close(cancel_pending=True)
+    for th in threads:
+        th.join()
+    for t in tickets:
+        t.exception(timeout=60)       # terminal, one way or the other
+        assert t.done()
+    stats = engine.stats()
+    assert stats["submitted"] == len(tickets)
+    assert stats["cancelled"] + stats["completed"] + stats["failed"] \
+        == stats["submitted"]
+    assert stats["pending"] == 0
+
+
+def test_engine_as_completed_timeout_leaves_pipeline_consistent():
+    import concurrent.futures as cf
+
+    spec = ClusterSpec(k=3, seeder="fastkmeans++", seed=0)
+    fp = FaultPlan(seed=0, solve_latency_s=0.4)
+    with ClusterEngine(spec, ExecutionSpec(backend="device"),
+                       fault_plan=fp) as engine:
+        tickets = [engine.submit(_mixture(200, seed=40 + i))
+                   for i in range(2)]
+        # (cf.TimeoutError is the builtin TimeoutError only from 3.11)
+        with pytest.raises((TimeoutError, cf.TimeoutError)):
+            list(engine.as_completed(tickets, timeout=0.05))
+        # expiry poisons nothing: the same tickets still complete
+        results = [t.result(timeout=120) for t in tickets]
+        assert all(r.k == 3 for r in results)
+        stats = engine.stats()
+    assert stats["completed"] == 2 and stats["failed"] == 0
+
+
+def test_engine_eviction_survives_injected_prepare_failures():
+    """retain_prepared=False + a transient prepare fault: the retry path
+    re-prepares on the solve worker and the entry is still evicted."""
+    spec = ClusterSpec(k=3, seeder="fastkmeans++", seed=0)
+    fp = FaultPlan(seed=1, prepare_failure_rate=1.0, max_failures=1)
+    with ClusterEngine(spec, ExecutionSpec(backend="device"),
+                       retain_prepared=False, fault_plan=fp,
+                       retry=RetryPolicy(max_attempts=3)) as engine:
+        res = engine.submit(_mixture(220, seed=7)).result(timeout=120)
+        assert res.extras["attempts"] == 2
+        engine.close()        # join the worker: eviction has happened
+        assert engine.plan_for().cache_info()["entries"] == 0
+        stats = engine.stats()
+    assert stats["completed"] == 1 and stats["retries"] == 1
+    assert fp.stats()["injected"] == 1
 
 
 def test_engine_requires_a_spec_somewhere():

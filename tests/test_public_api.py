@@ -21,30 +21,42 @@ from repro.core import (
 EXPECTED_ALL = sorted([
     "BACKENDS",
     "BatchSchedule",
+    "CircuitBreaker",
+    "CircuitBreakerPolicy",
     "ClusterEngine",
     "ClusterPlan",
     "ClusterSpec",
+    "DeadlineExceededError",
     "ExecutionSpec",
+    "FaultPlan",
     "FitResult",
     "FitTicket",
+    "InjectedFault",
+    "InvalidInputError",
     "KMeans",
     "KMeansConfig",
     "MultiTreeEmbedding",
     "MultiTreeSampler",
     "PreparedData",
+    "QueueFullError",
     "RetraceError",
+    "RetryPolicy",
     "SEEDERS",
     "SEEDER_SPECS",
     "SeederSpec",
     "SeedingResult",
+    "ServiceUnavailableError",
     "TRACE_COUNTS",
     "afkmc2",
     "assign",
+    "attempt_seed",
     "build_multitree",
     "capability_table",
+    "classify_failure",
     "clustering_cost",
     "data_fingerprint",
     "ensure_host_f64",
+    "fallback_chain",
     "fast_kmeanspp",
     "fit",
     "kmeans_parallel",
@@ -55,6 +67,7 @@ EXPECTED_ALL = sorted([
     "resolve_seeder",
     "shape_bucket",
     "uniform_sampling",
+    "validate_points",
 ])
 
 # PEP-563 postponed annotations: signature strings carry quoted types.
@@ -77,12 +90,15 @@ EXPECTED_SIGNATURES = {
 
 EXPECTED_ENGINE_SIGNATURES = {
     "submit": "(self, points, *, cluster: 'Optional[ClusterSpec]' = None, "
-              "seed: 'Optional[int]' = None, tag: 'Any' = None) "
+              "seed: 'Optional[int]' = None, tag: 'Any' = None, "
+              "deadline: 'Optional[float]' = None, "
+              "retry: 'Optional[RetryPolicy]' = None) "
               "-> 'FitTicket'",
     "map_fit": "(self, datasets: 'Sequence[Any]', *, "
                "cluster: 'Optional[ClusterSpec]' = None, "
-               "seeds: 'Optional[Sequence[int]]' = None) "
-               "-> 'list[FitResult]'",
+               "seeds: 'Optional[Sequence[int]]' = None, "
+               "return_exceptions: 'bool' = False) "
+               "-> 'list'",
     "as_completed": "(self, tickets: 'Iterable[FitTicket]', "
                     "timeout: 'Optional[float]' = None) "
                     "-> 'Iterator[FitTicket]'",
