@@ -43,6 +43,17 @@ stranded short of a terminal state — retry/fallback behaviour is
 deterministic (seeded fault decisions), so a goodput drop is a resilience
 regression, not noise.
 
+And the continuous-batching serving section (ISSUE 8): on the seeded
+open-loop Poisson trace of `bench_serving` the `ClusterFrontend` must
+sustain >= --serving-min-speedup (default 2.0) times the requests/sec of
+the one-request-per-solve engine baseline, at a p99 latency no worse
+than --serving-p99-slack (default 1.25) times the baseline's, while
+coalescing at least --serving-min-coalesce (default 0.3) of dispatched
+requests into shared lanes — "2x throughput at equal p99", the
+continuous-batching acceptance row.  The trace is seeded and replayed
+identically against both paths on the same machine, so the ratios are
+machine-speed-independent.
+
 Fields absent from the previous artifact (older PRs) are skipped, so the
 gate is self-bootstrapping.
 """
@@ -83,7 +94,10 @@ def _loglog_slope(per_open: dict[int, float]) -> float | None:
 
 def check(prev: dict, cur: dict, *, slack: float, max_slope: float,
           batch_slack: float, min_speedup: float,
-          min_goodput: float = 0.95, floor_s: float = 1e-4) -> list[str]:
+          min_goodput: float = 0.95, floor_s: float = 1e-4,
+          serving_min_speedup: float = 2.0,
+          serving_p99_slack: float = 1.25,
+          serving_min_coalesce: float = 0.3) -> list[str]:
     """Returns a list of failure messages (empty = gate passes)."""
     failures = []
     cur_po = _per_open(cur)
@@ -163,6 +177,32 @@ def check(prev: dict, cur: dict, *, slack: float, max_slope: float,
                 f"{stranded} ticket(s) stranded short of a terminal state "
                 f"under the chaos bench (must be 0)"
             )
+
+    sv = cur.get("serving")
+    if sv is None:
+        failures.append("current artifact has no serving record")
+    else:
+        speedup = float(sv.get("speedup_req_per_s", 0.0))
+        if speedup < serving_min_speedup:
+            failures.append(
+                f"continuous batching sustains only {speedup:.2f}x the "
+                f"one-request-per-solve requests/sec "
+                f"(< {serving_min_speedup}) on the seeded serving trace"
+            )
+        p99_ratio = float(sv.get("p99_ratio_vs_baseline", float("inf")))
+        if p99_ratio > serving_p99_slack:
+            failures.append(
+                f"frontend p99 latency is {p99_ratio:.2f}x the solo "
+                f"baseline's (> {serving_p99_slack}): coalescing is "
+                f"buying throughput by holding requests too long"
+            )
+        coalesce = float(sv.get("frontend", {}).get("coalesce_rate", 0.0))
+        if coalesce < serving_min_coalesce:
+            failures.append(
+                f"serving coalesce rate dropped to {coalesce:.2f} "
+                f"(< {serving_min_coalesce}): lanes are dispatching "
+                f"nearly empty on the seeded trace"
+            )
     return failures
 
 
@@ -187,6 +227,14 @@ def main(argv=None) -> int:
                     help="dispatch-floor threshold (us): grid points timed "
                          "below this in either artifact are excluded from "
                          "the cross-artifact growth comparison")
+    ap.add_argument("--serving-min-speedup", type=float, default=2.0,
+                    help="min frontend requests/sec over the "
+                         "one-request-per-solve baseline")
+    ap.add_argument("--serving-p99-slack", type=float, default=1.25,
+                    help="max frontend/baseline p99 latency ratio")
+    ap.add_argument("--serving-min-coalesce", type=float, default=0.3,
+                    help="min fraction of requests dispatched in lanes "
+                         "of size >= 2")
     args = ap.parse_args(argv)
     prev = json.loads(args.prev.read_text()) if args.prev.exists() else {}
     cur = json.loads(args.cur.read_text())
@@ -194,16 +242,23 @@ def main(argv=None) -> int:
                      batch_slack=args.batch_slack,
                      min_speedup=args.min_speedup,
                      min_goodput=args.min_goodput,
-                     floor_s=args.floor_us * 1e-6)
+                     floor_s=args.floor_us * 1e-6,
+                     serving_min_speedup=args.serving_min_speedup,
+                     serving_p99_slack=args.serving_p99_slack,
+                     serving_min_coalesce=args.serving_min_coalesce)
     for msg in failures:
         print(f"REGRESSION: {msg}", file=sys.stderr)
     if not failures:
         po = _per_open(cur)
+        sv = cur["serving"]
         print(f"bench regression gate ok: per-open incremental "
               f"slope={_loglog_slope(po):.2f}, growth "
               f"ratio={_growth_ratio(po):.2f}, adaptive/fixed128="
               f"{cur['adaptive_batch']['adaptive_over_fixed128']:.3f}, "
-              f"goodput={cur['robustness']['goodput']:.3f}")
+              f"goodput={cur['robustness']['goodput']:.3f}, "
+              f"serving {sv['speedup_req_per_s']:.1f}x req/s at "
+              f"p99 ratio {sv['p99_ratio_vs_baseline']:.2f} "
+              f"(coalesce {sv['frontend']['coalesce_rate']:.2f})")
     return 1 if failures else 0
 
 

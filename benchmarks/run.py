@@ -12,6 +12,9 @@ leaves a perf trajectory point.  Sections:
     n in {2^14, 2^16, 2^18};
   - robustness — engine goodput / latency percentiles under a seeded
     `FaultPlan` (CI gates goodput >= 0.95 with zero stranded tickets);
+  - serving — continuous-batching frontend vs one-request-per-solve on a
+    seeded open-loop Poisson trace (CI gates >= 2x requests/sec at equal
+    p99 plus a coalesce-rate floor);
   - kernel microbenchmarks — Pallas ops (interpret mode on CPU) vs jnp refs;
   - roofline — §Roofline summary from the dry-run artifacts (if present).
 """
@@ -390,6 +393,144 @@ def bench_robustness(n=1 << 12, d=16, k=4, b=16):
     return rows, record
 
 
+def bench_serving(smoke: bool = False):
+    """Continuous batching vs one-request-per-solve (ISSUE 8 acceptance).
+
+    Replays ONE seeded open-loop Poisson arrival trace of mixed-(n, k, d)
+    clustering traffic through two serving paths: a plain `ClusterEngine`
+    (the PR-7 serving core — one stacked-solve dispatch per request) and
+    the `ClusterFrontend` (hold-and-batch coalescing of compatible
+    requests into stacked `fit_batch` lanes).  Both paths see identical
+    arrival offsets and identical datasets, and every jit program either
+    path can hit (solo per class; stacked per lane key at every
+    power-of-two lane width up to ``max_batch``) is warmed before the
+    timed window, so the measured quantity is steady-state serving
+    throughput, not compile.  The fastkmeans++ seeder is used for the
+    same reason as `bench_pipeline`: the rejection schedule's vmapped
+    `lax.switch` cannot run stacked under interpret-mode CI.
+
+    Records requests/sec, p50/p99 submit-to-done latency, mean lane
+    occupancy and coalesce rate into the "serving" section of
+    ``BENCH_seeding.json``; the CI gate (`check_regression.py`) requires
+    coalescing to sustain >= 2x the one-request-per-solve requests/sec
+    at no worse than serving-p99-slack times the baseline p99, with a
+    minimum coalesce rate — the ISSUE 8 acceptance row.
+    """
+    import time as _time
+
+    from repro.core import ClusterEngine, ClusterSpec, ExecutionSpec
+    from repro.serving.frontend import ClusterFrontend
+
+    n_requests = 48 if smoke else 96
+    rate_hz = 400.0                 # open-loop: saturates the solo path
+    max_batch = 8
+    # Mixed n/k/d traffic: three lane keys across two shape buckets.  The
+    # first two classes share (spec, d, bucket) and so coalesce together.
+    classes = [
+        dict(n=300, d=8, k=4),      # bucket 1024 - lane key A
+        dict(n=900, d=8, k=4),      # bucket 1024 - lane key A (coalesces)
+        dict(n=1300, d=8, k=4),     # bucket 2048 - lane key B
+        dict(n=500, d=12, k=8),     # bucket 1024 - lane key C (k, d differ)
+    ]
+    rng = np.random.default_rng(8)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, size=n_requests))
+    which = rng.integers(len(classes), size=n_requests)
+    exe = ExecutionSpec(backend="device")
+    specs = {c["k"]: ClusterSpec(k=c["k"], seeder="fastkmeans++", seed=0)
+             for c in classes}
+
+    def make(c):
+        ctr = rng.normal(size=(8, c["d"])) * 20
+        return (ctr[rng.integers(8, size=c["n"])]
+                + rng.normal(size=(c["n"], c["d"])))
+
+    datasets = [make(classes[i]) for i in which]
+    warm_ds = [make(c) for c in classes]
+
+    def replay(submit):
+        """Drive the seeded trace; per-request latency via done-callbacks."""
+        done: dict = {}
+        tickets, sub_at = [], []
+        t0 = _time.perf_counter()
+        for off, ds, ci in zip(arrivals, datasets, which):
+            now = _time.perf_counter() - t0
+            if off > now:
+                _time.sleep(off - now)
+            sub_at.append(_time.perf_counter())
+            t = submit(ds, classes[ci]["k"])
+            t.add_done_callback(
+                lambda tk: done.setdefault(tk, _time.perf_counter()))
+            tickets.append(t)
+        for t in tickets:
+            t.result(timeout=600)
+        wall = _time.perf_counter() - t0
+        lats = sorted(done[t] - s for t, s in zip(tickets, sub_at))
+        return wall, lats
+
+    def _section(wall, lats):
+        return {
+            "wall_s": wall,
+            "req_per_s": n_requests / wall,
+            "latency_p50_s": float(np.percentile(lats, 50)),
+            "latency_p99_s": float(np.percentile(lats, 99)),
+        }
+
+    # -- baseline: one solve dispatch per request ---------------------------
+    with ClusterEngine(specs[4], exe, retain_prepared=False) as beng:
+        for c, ds in zip(classes, warm_ds):     # warm each class's solo jit
+            plan = beng.plan_for(specs[c["k"]])
+            plan.fit_prepared(plan.prepare_data(ds)).block_until_ready()
+        base_wall, base_lat = replay(
+            lambda ds, k: beng.submit(ds, cluster=specs[k]))
+    baseline = _section(base_wall, base_lat)
+
+    # -- frontend: hold-and-batch coalescing over the same trace ------------
+    feng = ClusterEngine(specs[4], exe, validate_inputs=False,
+                         retain_prepared=False)
+    with feng:
+        for ci in (0, 2, 3):                    # one class per lane key
+            plan = feng.plan_for(specs[classes[ci]["k"]])
+            bp = 1
+            while bp <= max_batch:              # every stacked lane width
+                plan.fit_batch(
+                    datasets=[warm_ds[ci]] * bp).block_until_ready()
+                bp *= 2
+        with ClusterFrontend(engine=feng, max_batch=max_batch,
+                             max_wait_ms=8.0) as fe:
+            fe_wall, fe_lat = replay(lambda ds, k: fe.submit(ds, k=k))
+            st = fe.stats()
+    frontend = _section(fe_wall, fe_lat)
+    frontend.update(
+        lanes=st["lanes"],
+        mean_lane_occupancy=st["mean_lane_occupancy"],
+        coalesce_rate=st["coalesce_rate"],
+        flush_reasons={k[len("flush_"):]: v for k, v in st.items()
+                       if k.startswith("flush_")},
+    )
+    record = {
+        "requests": n_requests, "arrival_rate_hz": rate_hz,
+        "max_batch": max_batch, "classes": classes,
+        "baseline": baseline, "frontend": frontend,
+        "speedup_req_per_s": frontend["req_per_s"] / baseline["req_per_s"],
+        "p99_ratio_vs_baseline": (frontend["latency_p99_s"]
+                                  / max(baseline["latency_p99_s"], 1e-12)),
+    }
+    rows = [
+        (f"serving.baseline[b={n_requests}]",
+         baseline["latency_p99_s"] * 1e6,
+         f"one-request-per-solve: {baseline['req_per_s']:.1f} req/s"),
+        (f"serving.frontend[b={n_requests}]",
+         frontend["latency_p99_s"] * 1e6,
+         f"coalesced: {frontend['req_per_s']:.1f} req/s, "
+         f"occupancy={frontend['mean_lane_occupancy']:.2f}, "
+         f"coalesce_rate={frontend['coalesce_rate']:.2f}"),
+        (f"serving.speedup[b={n_requests}]", 0.0,
+         f"req_per_s_speedup={record['speedup_req_per_s']:.2f}x "
+         f"p99_ratio={record['p99_ratio_vs_baseline']:.2f}"),
+    ]
+    return rows, record
+
+
 def bench_heap_update(ns=(1 << 14, 1 << 16, 1 << 18), tile=512, reps=20):
     """Per-open sample-structure update: O(n) rebuild vs incremental.
 
@@ -438,7 +579,7 @@ def bench_heap_update(ns=(1 << 14, 1 << 16, 1 << 18), tile=512, reps=20):
 
 
 def write_bench_json(seed_results, heap_update, adaptive_batch, plan_refit,
-                     pipeline, robustness, *, smoke: bool):
+                     pipeline, robustness, serving, *, smoke: bool):
     """BENCH_seeding.json: the cross-PR perf-trajectory artifact."""
     import jax
 
@@ -476,6 +617,7 @@ def write_bench_json(seed_results, heap_update, adaptive_batch, plan_refit,
         "plan_refit": plan_refit,
         "pipeline": pipeline,
         "robustness": robustness,
+        "serving": serving,
     }
     BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"wrote {BENCH_JSON}")
@@ -508,8 +650,24 @@ def main(argv=None) -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized seeding run (CPU + device backends), "
                          "skipping the heavier microbenchmarks")
+    ap.add_argument("--only", choices=["serving"], default=None,
+                    help="re-run a single section and merge its record "
+                         "into the existing BENCH_seeding.json (CI uses "
+                         "`--only serving` as a named gate step)")
     args = ap.parse_args(argv)
     all_rows = []
+    if args.only == "serving":
+        print("# serving: continuous batching vs one-request-per-solve",
+              flush=True)
+        sv_rows, serving = bench_serving(smoke=args.smoke)
+        payload = json.loads(BENCH_JSON.read_text())
+        payload["serving"] = serving
+        BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"merged serving section into {BENCH_JSON}")
+        print("\nname,us_per_call,derived")
+        for name, us, derived in sv_rows:
+            print(f"{name},{us:.1f},{derived}")
+        return
     print("# seeding tables (paper tables 1-8, CI scale)", flush=True)
     seed_rows, seed_results = bench_seeding(smoke=args.smoke)
     all_rows += seed_rows
@@ -529,12 +687,16 @@ def main(argv=None) -> None:
     print("# robustness: goodput under a seeded FaultPlan", flush=True)
     rb_rows, robustness = bench_robustness()
     all_rows += rb_rows
+    print("# serving: continuous batching vs one-request-per-solve",
+          flush=True)
+    sv_rows, serving = bench_serving(smoke=args.smoke)
+    all_rows += sv_rows
     if not args.smoke:
         print("# kernel microbenchmarks", flush=True)
         all_rows += bench_kernels()
         all_rows += bench_roofline()
     write_bench_json(seed_results, heap_update, adaptive_batch, plan_refit,
-                     pipeline, robustness, smoke=args.smoke)
+                     pipeline, robustness, serving, smoke=args.smoke)
     print("\nname,us_per_call,derived")
     for name, us, derived in all_rows:
         print(f"{name},{us:.1f},{derived}")

@@ -16,7 +16,14 @@ Intra-function dataflow, per function:
 * two consumptions without an intervening refresh-assignment flag the
   second one.  `if`/`else` branches fork the state and merge by maximum
   use count; `for`/`while` bodies are walked twice so a key created
-  outside a loop but consumed each iteration is caught.
+  outside a loop but consumed each iteration is caught;
+* a *refresh of an already-consumed key* — ``sample(logits, key)``
+  followed by ``jax.random.split(key)``, including when the split sits
+  in a host loop — is flagged at the refresh site: the split's children
+  share entropy with the earlier draw, so "split before first use" is
+  the only safe order.  (This is the serving-engine token-sampling bug
+  shape: the key was consumed via a method-call argument for token 0,
+  then split for every later token.)
 
 Nested function bodies are skipped in the linear walk (they run when
 called — e.g. one `lax.switch` branch per round, not all of them) and are
@@ -150,9 +157,23 @@ class _FunctionChecker:
 
     def _expr(self, node: ast.expr, state: _State) -> None:
         """Count tracked-key Name occurrences in consuming position."""
-        for name_node, consuming in self._occurrences(node, True):
+        for name_node, mode in self._occurrences(node, "consume"):
             key = name_node.id
-            if key not in state.uses or not consuming:
+            if key not in state.uses or mode == "skip":
+                continue
+            if mode == "refresh":
+                # split/fold_in of a key that was already consumed: the
+                # children correlate with the earlier draw.
+                if state.uses[key] >= 1:
+                    self.findings.append(Finding(
+                        path=self.ctx.path, line=name_node.lineno,
+                        rule="rng-key-reuse",
+                        message=(f"PRNG key '{key}' was consumed before "
+                                 "this jax.random.split/fold_in — the "
+                                 "refreshed keys share entropy with the "
+                                 "earlier draw; split before first use"),
+                    ))
+                    state.uses[key] = 0   # one report per refresh site
                 continue
             state.uses[key] += 1
             if state.uses[key] >= 2:
@@ -165,30 +186,36 @@ class _FunctionChecker:
                 ))
                 state.uses[key] = 0   # one report per reuse site
 
-    def _occurrences(self, node: ast.expr, consuming: bool):
-        """Yield (Name, consuming) pairs, skipping nested defs and marking
-        arguments of split/fold_in as non-consuming."""
+    def _occurrences(self, node: ast.expr, mode: str):
+        """Yield (Name, mode) pairs — mode "consume", "refresh" (argument
+        of split/fold_in/clone) or "skip" — skipping nested defs."""
         if isinstance(node, (ast.Lambda,)):
             return
         if isinstance(node, ast.Name):
-            yield node, consuming
+            yield node, mode
             return
         if isinstance(node, ast.Call):
             fn = _random_fn(node)
-            arg_consuming = consuming and not (fn in _REFRESH_FNS
-                                               or fn in ("wrap_key_data",))
+            if mode != "consume":
+                arg_mode = mode
+            elif fn in _REFRESH_FNS:
+                arg_mode = "refresh"
+            elif fn == "wrap_key_data":
+                arg_mode = "skip"
+            else:
+                arg_mode = "consume"
             # the callee expression itself (e.g. `key.method()`) consumes
-            yield from self._occurrences(node.func, consuming)
+            yield from self._occurrences(node.func, mode)
             for a in node.args:
-                yield from self._occurrences(a, arg_consuming)
+                yield from self._occurrences(a, arg_mode)
             for kw in node.keywords:
-                yield from self._occurrences(kw.value, arg_consuming)
+                yield from self._occurrences(kw.value, arg_mode)
             return
         for child in ast.iter_child_nodes(node):
             if isinstance(child, ast.expr):
-                yield from self._occurrences(child, consuming)
+                yield from self._occurrences(child, mode)
             elif isinstance(child, (ast.comprehension,)):
-                yield from self._occurrences(child.iter, consuming)
+                yield from self._occurrences(child.iter, mode)
 
 
 @rule("rng-key-reuse",

@@ -141,13 +141,18 @@ class _Item:
     """One queued request: the ticket plus what its solve needs.
 
     `points` is retained so a retry or a fallback target can re-prepare
-    the dataset after a failed (or foreign-plan) primary prepare.
+    the dataset after a failed (or foreign-plan) primary prepare.  A
+    coalesced *lane* (`submit_lane`) sets `lane_seeds`: `points` is then
+    the list of member datasets, the prepare future resolves to a list of
+    stacked `PreparedData` handles, and the solve runs
+    `fit_batch_prepared` — one ticket, one stacked `FitResult`.
     """
 
     ticket: FitTicket
     plan: ClusterPlan
     points: Any
     prep_future: cf.Future
+    lane_seeds: Optional[list] = None       # None => solo request
 
 
 class ClusterEngine:
@@ -300,6 +305,62 @@ class ClusterEngine:
                 with self._lock:
                     self._stats["quarantined"] += 1
                 raise
+        return self._admit(plan, points, seed=seed, tag=tag,
+                           deadline=deadline, retry=retry,
+                           prepare=lambda: self._timed_prepare(plan, points))
+
+    def submit_lane(self, datasets: Sequence[Any], *,
+                    cluster: Optional[ClusterSpec] = None,
+                    seeds: Optional[Sequence[Optional[int]]] = None,
+                    tag: Any = None, deadline: Optional[float] = None,
+                    retry: Optional[RetryPolicy] = None) -> FitTicket:
+        """Enqueue B datasets as ONE coalesced stacked `fit_batch` lane.
+
+        The continuous-batching dispatch primitive (`repro.serving.
+        frontend.ClusterFrontend` coalesces concurrent `submit` calls
+        into these): the whole lane is one ticket whose result is the
+        stacked `FitResult` (leading batch axis over the members, lane i
+        bit-identical to a solo stacked fit of ``datasets[i]`` in the
+        same shape bucket).  The lane members' stacked prepares run on
+        the prepare pool (each fingerprint-cached, so a member re-coalesced
+        into a later lane is a cache hit) and the solve dispatches as one
+        vmapped program per shape bucket via `ClusterPlan.
+        fit_batch_prepared`; on impls without the stacked capability the
+        lane degrades to the solo `fit_batch` loop.  Admission control,
+        deadlines, retries (per-member seeds move to fresh
+        `attempt_seed` streams together) and the circuit-breaker fallback
+        chain behave exactly as for `submit` — a lane is one queue slot.
+        `seeds` gives one solve seed per member (None entries use the
+        spec seed, i.e. the solo `refit` stream).
+        """
+        datasets = list(datasets)
+        if not datasets:
+            raise ValueError("submit_lane() needs >= 1 dataset")
+        if seeds is None:
+            seeds = [None] * len(datasets)
+        else:
+            seeds = [None if s is None else int(s) for s in seeds]
+        if len(seeds) != len(datasets):
+            raise ValueError(
+                f"got {len(seeds)} seeds for {len(datasets)} datasets")
+        plan = self.plan_for(cluster)
+        if self.validate_inputs:
+            for pts in datasets:
+                try:
+                    validate_points(pts, k=plan.cluster.k)
+                except InvalidInputError:
+                    with self._lock:
+                        self._stats["quarantined"] += 1
+                    raise
+        return self._admit(plan, datasets, seed=None, tag=tag,
+                           deadline=deadline, retry=retry,
+                           prepare=lambda: self._lane_prepare(plan, datasets),
+                           lane_seeds=seeds)
+
+    def _admit(self, plan: ClusterPlan, points, *, seed, tag, deadline,
+               retry, prepare: Callable[[], Any],
+               lane_seeds: Optional[list] = None) -> FitTicket:
+        """Shared admission control: one queue slot per request OR lane."""
         if deadline is not None and deadline <= 0:
             raise ValueError(f"deadline must be > 0 seconds, got {deadline}")
         shed: Optional[_Item] = None
@@ -332,9 +393,9 @@ class ClusterEngine:
                 deadline=None if deadline is None
                 else self._clock() + deadline,
                 retry=retry)
-            prep_future = self._pool.submit(self._timed_prepare, plan,
-                                            points)
-            self._pending.append(_Item(ticket, plan, points, prep_future))
+            prep_future = self._pool.submit(prepare)
+            self._pending.append(_Item(ticket, plan, points, prep_future,
+                                       lane_seeds=lane_seeds))
             self._lock.notify_all()
         if shed is not None:
             # Outside the lock: failing the future runs done-callbacks.
@@ -407,6 +468,47 @@ class ClusterEngine:
         with self._lock:
             self._times["prepare_seconds"] += time.perf_counter() - t0
         return prep
+
+    @staticmethod
+    def _lane_stacked(plan: ClusterPlan) -> bool:
+        return plan.impl.supports_stacked and plan.cluster.lloyd_iters == 0
+
+    def _lane_prepare(self, plan: ClusterPlan, datasets: list) -> list:
+        """Prepare every lane member (stacked handles where supported).
+
+        Runs as ONE prepare-pool task — members build sequentially inside
+        it, so a lane never deadlocks the bounded pool waiting on its own
+        sub-tasks, and each member is fingerprint-cached (a request
+        re-coalesced into a later lane, or a retry, is a cache hit).
+        """
+        prep_fn = (plan.prepare_stacked if self._lane_stacked(plan)
+                   else plan.prepare_data)
+        t0 = time.perf_counter()
+        preps = [prep_fn(pts) for pts in datasets]
+        with self._lock:
+            self._times["prepare_seconds"] += time.perf_counter() - t0
+        return preps
+
+    def _lane_solve(self, item: _Item, plan: ClusterPlan, preps: list,
+                    attempt: int) -> FitResult:
+        """Solve one coalesced lane (stacked where the impl supports it).
+
+        Attempt 0 keeps every member on its submitted seed — `None`
+        entries resolve to the spec seed, whose prepare-time rng snapshot
+        is replayed, so each lane stays bit-identical to a solo stacked
+        fit.  Retries fold the attempt index into every member's seed so
+        no attempt shares an rng stream with the primary.
+        """
+        eff = [attempt_seed(s, attempt) for s in item.lane_seeds]
+        if all(s is None for s in eff):
+            eff = None
+        else:
+            eff = [plan.cluster.seed if s is None else s for s in eff]
+        if self._lane_stacked(plan):
+            return plan.fit_batch_prepared(preps, seeds=eff)
+        # Fallback target without the stacked capability: solo loop (each
+        # member already fingerprint-cached by _lane_prepare).
+        return plan.fit_batch(datasets=item.points, seeds=eff)
 
     def _solve_loop(self) -> None:
         while True:
@@ -530,14 +632,22 @@ class ClusterEngine:
                     # Retry / fallback: (re-)prepare on the solve worker.
                     # A healed transient prepare fault is a fresh build;
                     # an earlier successful build is a fingerprint hit.
-                    prep = self._timed_prepare(plan, item.points)
+                    prep = (self._lane_prepare(plan, item.points)
+                            if item.lane_seeds is not None
+                            else self._timed_prepare(plan, item.points))
                 if not self.retain_prepared:
-                    used.append((plan, prep))
+                    if item.lane_seeds is not None:
+                        used.extend((plan, p) for p in prep)
+                    else:
+                        used.append((plan, prep))
                 self._check_cancelled()
                 self._check_deadline(ticket)
                 t0 = time.perf_counter()
-                res = plan.fit_prepared(
-                    prep, seed=attempt_seed(ticket.seed, attempt))
+                if item.lane_seeds is not None:
+                    res = self._lane_solve(item, plan, prep, attempt)
+                else:
+                    res = plan.fit_prepared(
+                        prep, seed=attempt_seed(ticket.seed, attempt))
                 with self._lock:
                     self._times["solve_seconds"] += time.perf_counter() - t0
                 # A result after expiry is still an SLO miss: the caller

@@ -451,6 +451,27 @@ class ClusterPlan:
         """
         return self._prepare_cached(points, stacked=False)
 
+    def prepare_stacked(self, points) -> PreparedData:
+        """Thread-safe *stacked-lane* prepare (canonical rescale + padding).
+
+        The multi-dataset twin of `prepare_data`: builds (or fetches, keyed
+        by ``<fingerprint>/stacked``) the dataset's `StackedLane` artifacts
+        — the exact power-of-two rescale into the unit ball plus the
+        `shape_bucket` row padding — so a later `fit_batch_prepared` call
+        can coalesce it with other same-bucket datasets into ONE vmapped
+        program.  Lane members prepared here are shared across every lane
+        composition that includes the dataset (the continuous-batching
+        front-end relies on this: a request re-coalesced into a different
+        lane never re-prepares).  Requires an impl with the stacked
+        capability (see the capability table).
+        """
+        if not self.impl.supports_stacked:
+            raise ValueError(
+                f"{self.cluster.seeder!r} on backend "
+                f"{self._ctx.backend!r} has no stacked lanes; use "
+                "prepare_data + fit_batch(datasets=...) (solo loop)")
+        return self._prepare_cached(points, stacked=True)
+
     def _prepare_cached(self, points, *, stacked: bool) -> PreparedData:
         fp = data_fingerprint(points) + ("/stacked" if stacked else "")
         with self._lock:
@@ -782,14 +803,47 @@ class ClusterPlan:
 
     def _fit_batch_stacked(self, datasets: list,
                            seeds: list[int]) -> FitResult:
-        t0 = time.perf_counter()
         preps = [self._prepare_cached(pts_i, stacked=True)
                  for pts_i in datasets]
+        return self.fit_batch_prepared(preps, seeds=seeds)
+
+    def fit_batch_prepared(self, prepared: Sequence[PreparedData], *,
+                           seeds: Optional[Sequence[int]] = None
+                           ) -> FitResult:
+        """Solve B stacked-prepared lanes (one vmapped program per bucket).
+
+        The solve stage of ``fit_batch(datasets=...)`` against explicit
+        `prepare_stacked` handles: no implicit state, no host re-prep —
+        safe to call from a solve worker while other threads prepare new
+        lane members (the `ClusterEngine` lane path is built on exactly
+        this call).  Lane i of the stacked `FitResult` is bit-identical
+        to ``fit_batch_prepared([prepared[i]], seeds=[seeds[i]])`` in the
+        same shape bucket — the PR-5 stacked-lane contract the
+        continuous-batching front-end's coalescing rests on.  `seeds`
+        defaults to the spec seed per lane (the solo `refit` stream).
+        """
+        t0 = time.perf_counter()
+        preps = list(prepared)
+        if not preps:
+            raise ValueError("fit_batch_prepared() needs >= 1 lane")
+        seeds = ([int(s) for s in seeds] if seeds is not None
+                 else [self.cluster.seed] * len(preps))
+        if len(seeds) != len(preps):
+            raise ValueError(
+                f"got {len(seeds)} seeds for {len(preps)} lanes")
+        if any(not hasattr(p.artifacts, "shape_key") for p in preps):
+            raise ValueError(
+                "fit_batch_prepared() needs prepare_stacked handles "
+                "(got a solo prepare_data handle)")
         dims = {p.pts.shape[1] for p in preps}
         if len(dims) > 1:
             raise ValueError(
                 f"stacked fit_batch needs one feature dimension, got {dims}"
             )
+        # One key per lane *composition*: retries of one lane hit the same
+        # key, so FaultPlan per-key caps model healing transient faults.
+        self._fault_inject(
+            "solve", "+".join(p.fingerprint for p in preps))
         with self._lock:
             self.stats["solves"] += len(seeds)
         k = self.cluster.k

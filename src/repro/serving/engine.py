@@ -71,9 +71,14 @@ class Engine:
             )
         else:
             logits, cache = self.replay_prefill(tokens)
+        # Thread the key linearly: split BEFORE every sample.  Consuming
+        # `key` for token 0 and then splitting the same key would correlate
+        # tokens 0 and 1 at temperature > 0 (categorical(key, .) and the
+        # children of split(key) share entropy).
         key = jax.random.key(serve.seed)
         out = []
-        cur = self._sample(logits, key)
+        key, sub = jax.random.split(key)
+        cur = self._sample(logits, sub)
         for i in range(serve.max_new_tokens):
             out.append(np.asarray(cur))
             logits, cache = self._step(self.params, cur, cache)

@@ -79,6 +79,52 @@ def test_rng_reuse_ignores_per_branch_closures():
     assert _run(_RNG_BRANCH_NEG, "rng-key-reuse") == []
 
 
+# The serving-engine token-sampling shape: the root key is consumed via a
+# method-call argument for the first draw and THEN split in a host loop —
+# the split children share entropy with that first draw.
+_RNG_SPLIT_AFTER_CONSUME_POS = """
+import jax
+
+def generate(self, logits, cache, n):
+    key = jax.random.key(0)
+    cur = self._sample(logits, key)
+    out = []
+    for i in range(n):
+        out.append(cur)
+        logits, cache = self._step(cur, cache)
+        key, sub = jax.random.split(key)
+        cur = self._sample(logits, sub)
+    return out
+"""
+
+_RNG_SPLIT_BEFORE_USE_NEG = """
+import jax
+
+def generate(self, logits, cache, n):
+    key = jax.random.key(0)
+    key, sub = jax.random.split(key)
+    cur = self._sample(logits, sub)
+    out = []
+    for i in range(n):
+        out.append(cur)
+        logits, cache = self._step(cur, cache)
+        key, sub = jax.random.split(key)
+        cur = self._sample(logits, sub)
+    return out
+"""
+
+
+def test_rng_reuse_fires_on_split_after_consume():
+    findings = _run(_RNG_SPLIT_AFTER_CONSUME_POS, "rng-key-reuse")
+    assert len(findings) == 1
+    assert "split before first use" in findings[0].message
+    assert "key" in findings[0].message
+
+
+def test_rng_reuse_quiet_on_linear_key_threading():
+    assert _run(_RNG_SPLIT_BEFORE_USE_NEG, "rng-key-reuse") == []
+
+
 # ---------------------------------------------------------------------------
 # host-sync-in-jit
 # ---------------------------------------------------------------------------

@@ -9,7 +9,8 @@ from benchmarks.check_regression import check, main
 KW = dict(slack=2.0, max_slope=1.0, batch_slack=1.15, min_speedup=0.8)
 
 
-def _payload(inc, rebuild=None, adaptive_ratio=0.9, goodput=1.0, stranded=0):
+def _payload(inc, rebuild=None, adaptive_ratio=0.9, goodput=1.0, stranded=0,
+             serving_speedup=3.0, p99_ratio=0.5, coalesce=0.8):
     rebuild = rebuild or {n: v * 3.0 for n, v in inc.items()}
     return {
         "heap_update_per_open": {"per_open": {
@@ -21,6 +22,9 @@ def _payload(inc, rebuild=None, adaptive_ratio=0.9, goodput=1.0, stranded=0):
                            "schedules": {}},
         "robustness": {"goodput": goodput, "stranded": stranded,
                        "failures": 0, "deadline_expired": 0},
+        "serving": {"speedup_req_per_s": serving_speedup,
+                    "p99_ratio_vs_baseline": p99_ratio,
+                    "frontend": {"coalesce_rate": coalesce}},
     }
 
 
@@ -75,6 +79,19 @@ def test_fails_on_goodput_or_stranded_regression():
     missing = {k: v for k, v in GOOD.items() if k != "robustness"}
     msgs = check(GOOD, missing, **KW)
     assert any("robustness" in m for m in msgs)
+
+
+def test_fails_on_serving_regression():
+    ok = {16384: 1e-4, 65536: 3e-4, 262144: 1e-3}
+    msgs = check(GOOD, _payload(ok, serving_speedup=1.4), **KW)
+    assert any("requests/sec" in m for m in msgs)
+    msgs = check(GOOD, _payload(ok, p99_ratio=2.0), **KW)
+    assert any("p99" in m for m in msgs)
+    msgs = check(GOOD, _payload(ok, coalesce=0.1), **KW)
+    assert any("coalesce" in m for m in msgs)
+    missing = {k: v for k, v in GOOD.items() if k != "serving"}
+    msgs = check(GOOD, missing, **KW)
+    assert any("serving" in m for m in msgs)
 
 
 def test_fails_when_rebuild_beats_incremental():

@@ -101,7 +101,7 @@ def test_core_public_symbols_have_docstrings():
 @pytest.mark.parametrize("modname", [
     "repro.core", "repro.core.plan", "repro.core.registry",
     "repro.core.batch_schedule", "repro.core.engine", "repro.core.tracing",
-    "repro.core.resilience",
+    "repro.core.resilience", "repro.serving.frontend",
 ])
 def test_module_docstrings(modname):
     import importlib
@@ -113,10 +113,11 @@ def test_module_docstrings(modname):
 def test_plan_engine_registry_methods_documented():
     from repro.core import ClusterEngine, ClusterPlan, FitResult, FitTicket
     from repro.core.registry import BackendImpl, SeederSpec
+    from repro.serving.frontend import ClusterFrontend
 
     undocumented = []
     for cls in (ClusterPlan, ClusterEngine, FitResult, FitTicket,
-                BackendImpl, SeederSpec):
+                BackendImpl, SeederSpec, ClusterFrontend):
         for name, member in _public_methods(cls):
             fn = member.fget if isinstance(member, property) else member
             if not (getattr(fn, "__doc__", "") or "").strip():

@@ -1,0 +1,170 @@
+"""Continuous-batching front-end suite (repro.serving.frontend).
+
+ISSUE 8 acceptance coverage: coalesced-lane-vs-solo bit-identity across
+mixed shape buckets, deadline-at-risk early flush, priority dispatch
+ordering under a full admission queue, and ledger conservation
+(``completed + failed + cancelled == submitted``) under a seeded
+`FaultPlan` chaos run and under ``close(cancel_pending=True)``.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CircuitBreakerPolicy,
+    ClusterEngine,
+    ClusterPlan,
+    ClusterSpec,
+    ExecutionSpec,
+    FaultPlan,
+    InvalidInputError,
+    QueueFullError,
+    RetryPolicy,
+)
+from repro.serving.frontend import ClusterFrontend
+
+pytestmark = pytest.mark.timeout(300)
+
+SPEC = ClusterSpec(k=4, seeder="fastkmeans++", seed=3)
+DEV = ExecutionSpec(backend="device")
+CPU = ExecutionSpec(backend="cpu")
+
+
+def _mixture(n, d=4, k_true=6, seed=0):
+    rng = np.random.default_rng(seed)
+    ctr = rng.normal(size=(k_true, d)) * 25
+    return ctr[rng.integers(k_true, size=n)] + rng.normal(size=(n, d))
+
+
+def test_coalesced_lanes_bit_identical_to_solo_fit():
+    """Every member of every coalesced lane must equal its solo stacked
+    fit bit-for-bit — the PR-5 stacked-lane contract, across three
+    different shape buckets in one traffic mix."""
+    sizes = (300, 420, 350, 600, 1500, 1600, 3000)
+    datasets = [_mixture(n, seed=10 + i) for i, n in enumerate(sizes)]
+    plan = ClusterPlan(SPEC, DEV)
+    refs = [plan.fit_batch(datasets=[d]) for d in datasets]
+    with ClusterFrontend(SPEC, DEV, max_batch=4,
+                         max_wait_ms=10_000.0) as fe:
+        tickets = [fe.submit(d) for d in datasets]
+        # the 1024-rung bucket has 4 compatible members = max_batch, so
+        # it must flush "full" on its own; wait before draining the rest
+        t0 = time.monotonic()
+        while fe.stats()["lanes"] < 1:
+            assert time.monotonic() - t0 < 30, "full bucket never flushed"
+            time.sleep(0.005)
+        fe.flush()
+        results = [t.result(timeout=120) for t in tickets]
+        st = fe.stats()
+    for ref, res in zip(refs, results):
+        np.testing.assert_array_equal(np.asarray(ref.indices[0]),
+                                      np.asarray(res.indices))
+        np.testing.assert_array_equal(np.asarray(ref.centers[0]),
+                                      np.asarray(res.centers))
+        np.testing.assert_array_equal(np.asarray(ref.cost[0]),
+                                      np.asarray(res.cost))
+        assert res.extras["lane_size"] >= 1
+        assert res.extras["bucket"] >= 1024
+        assert res.extras["queue_wait"] >= 0.0
+    assert st["completed"] == len(datasets)
+    assert st["lanes"] < len(datasets), "nothing coalesced"
+    assert any(r.extras["lane_size"] >= 2 for r in results)
+    full = [r for r in results if r.extras["flush_reason"] == "full"]
+    assert len(full) == 4 and all(r.extras["bucket"] == 1024 for r in full)
+    assert st["coalesce_rate"] > 0
+    assert st["mean_lane_occupancy"] > 1.0
+
+
+def test_deadline_at_risk_flushes_early():
+    """A held request whose deadline approaches must flush its lane well
+    before the hold-window timer (60s here) expires."""
+    ds = _mixture(300, seed=1)
+    with ClusterFrontend(SPEC, CPU, max_batch=8, max_wait_ms=60_000.0,
+                         deadline_margin_ms=400.0) as fe:
+        t0 = time.monotonic()
+        ticket = fe.submit(ds, deadline=1.0)
+        res = ticket.result(timeout=30)
+        elapsed = time.monotonic() - t0
+    assert res.extras["flush_reason"] == "deadline"
+    assert elapsed < 5.0, "early flush never happened"
+    # it really was *held* until deadline - margin, not flushed at once
+    assert 0.2 <= res.extras["queue_wait"] <= 1.0
+
+
+def test_priority_dispatch_order_and_admission_control():
+    """Under a full hold queue: priority lanes dispatch first (the engine
+    then completes them in dispatch order), the next submit is rejected
+    with the PR-7 typed error, and bad input is quarantined."""
+    sizes = (300, 1500, 3000, 6000)          # four distinct shape buckets
+    prios = (0, 5, 1, 9)
+    datasets = [_mixture(n, seed=20 + i) for i, n in enumerate(sizes)]
+    done = []
+    with ClusterFrontend(SPEC, CPU, max_batch=8, max_wait_ms=60_000.0,
+                         max_pending=4, backpressure="reject") as fe:
+        tickets = []
+        for ds, p in zip(datasets, prios):
+            t = fe.submit(ds, priority=p, tag=p)
+            t.add_done_callback(lambda tk: done.append(tk.tag))
+            tickets.append(t)
+        with pytest.raises(QueueFullError, match="reject"):
+            fe.submit(_mixture(300, seed=99))
+        with pytest.raises(InvalidInputError):
+            fe.submit(np.full((64, 4), np.nan))
+        fe.flush()
+        for t in tickets:
+            t.result(timeout=60)
+        st = fe.stats()
+    assert done == [9, 5, 1, 0], f"dispatch order was {done}"
+    assert st["rejected"] == 1
+    assert st["quarantined"] == 1
+    # rejected/quarantined requests never enter the ledger
+    assert st["submitted"] == st["completed"] == 4
+
+
+def test_ledger_conservation_under_chaos():
+    """Seeded FaultPlan chaos: every request reaches a typed terminal
+    state and the ledger balances exactly."""
+    # A lane amplifies fault rates (every member's fault key is drawn per
+    # attempt, and any member fault fails the whole lane attempt), so:
+    # per-key caps make faults transient-that-heal, the retry budget
+    # covers the amplification, and a lenient breaker keeps the chaos on
+    # the retry path instead of short-circuiting everything.  The engine
+    # is built by hand and *shared*, exercising the `engine=` mode.
+    fp = FaultPlan(seed=11, solve_failure_rate=0.15,
+                   prepare_failure_rate=0.1, max_failures_per_key=1)
+    B = 40
+    datasets = [_mixture(260 + 7 * i, seed=i) for i in range(B)]
+    engine = ClusterEngine(
+        SPEC, CPU, validate_inputs=False, retain_prepared=False,
+        fault_plan=fp, retry=RetryPolicy(max_attempts=6, backoff=0.0),
+        breaker=CircuitBreakerPolicy(failure_threshold=1000))
+    with engine:
+        fe = ClusterFrontend(engine=engine, max_batch=4, max_wait_ms=5.0)
+        with fe:
+            tickets = [fe.submit(ds, deadline=None if i % 5 else 60.0)
+                       for i, ds in enumerate(datasets)]
+        # close() drained everything: no ticket may be left pending
+        assert all(t.done() for t in tickets), "a ticket was stranded"
+        st = fe.stats()
+    assert st["submitted"] == B
+    assert st["completed"] + st["failed"] + st["cancelled"] \
+        == st["submitted"], f"ledger does not balance: {st}"
+    assert st["held"] == 0 and st["inflight"] == 0
+    assert fp.stats()["injected"] > 0, "chaos too gentle"
+    # with retries + the fallback chain most traffic still completes
+    assert st["completed"] >= 0.8 * B, f"goodput collapsed: {st}"
+
+
+def test_cancel_pending_close_balances_ledger():
+    """close(cancel_pending=True) must cancel held work as typed
+    cancellations, never strand a ticket."""
+    fe = ClusterFrontend(SPEC, CPU, max_batch=64, max_wait_ms=60_000.0)
+    tickets = [fe.submit(_mixture(300, seed=i)) for i in range(6)]
+    fe.close(cancel_pending=True)
+    assert all(t.done() for t in tickets)
+    st = fe.stats()
+    assert st["completed"] + st["failed"] + st["cancelled"] \
+        == st["submitted"] == 6
+    assert st["cancelled"] >= 1

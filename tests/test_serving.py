@@ -40,6 +40,32 @@ def test_engine_generates_deterministically():
     np.testing.assert_array_equal(out1, out2)  # greedy => deterministic
 
 
+def test_sampling_keys_are_distinct_per_token(monkeypatch):
+    """Regression: token 0 consumed the root key that was then split for
+    token 1, correlating adjacent samples at temperature > 0.  Every
+    `_sample` call must now receive a distinct key from a linear chain,
+    none of them the root `jax.random.key(seed)` itself."""
+    cfg, params = _setup()
+    serve = ServeConfig(max_new_tokens=6, max_seq=64, temperature=0.7,
+                        seed=3)
+    eng = Engine(params, cfg, serve)
+    seen = []
+    orig = Engine._sample
+
+    def spy(self, logits, key):
+        seen.append(np.asarray(jax.random.key_data(key)).tobytes())
+        return orig(self, logits, key)
+
+    monkeypatch.setattr(Engine, "_sample", spy)
+    prompts = np.random.default_rng(4).integers(1, cfg.vocab_size, (2, 6))
+    eng.generate(prompts)
+    assert len(seen) == serve.max_new_tokens + 1
+    assert len(set(seen)) == len(seen)
+    root = np.asarray(
+        jax.random.key_data(jax.random.key(serve.seed))).tobytes()
+    assert root not in seen
+
+
 def test_engine_hybrid_replay_path():
     cfg, params = _setup("rwkv6-3b")
     eng = Engine(params, cfg, ServeConfig(max_new_tokens=4, max_seq=32))
