@@ -54,6 +54,16 @@ continuous-batching acceptance row.  The trace is seeded and replayed
 identically against both paths on the same machine, so the ratios are
 machine-speed-independent.
 
+And the wire-transport serving subsection (ISSUE 9): on the seeded
+loopback trace of `bench_serving_net` the `repro.serving.net` transport
+may add at most --net-max-p99-overhead (default 1.5) times the
+in-process frontend's p99 (both paths replay the identical trace on the
+same warmed engine, best-of-reps, so the ratio isolates framing +
+socket + serialisation cost from machine speed), and the per-tenant
+Jain fairness index over equal-weight tenants must stay >=
+--net-min-fairness (default 0.8) — a fairness collapse means the
+weighted-fair dispatch hook stopped interleaving tenants.
+
 Fields absent from the previous artifact (older PRs) are skipped, so the
 gate is self-bootstrapping.
 """
@@ -97,7 +107,9 @@ def check(prev: dict, cur: dict, *, slack: float, max_slope: float,
           min_goodput: float = 0.95, floor_s: float = 1e-4,
           serving_min_speedup: float = 2.0,
           serving_p99_slack: float = 1.25,
-          serving_min_coalesce: float = 0.3) -> list[str]:
+          serving_min_coalesce: float = 0.3,
+          net_max_p99_overhead: float = 1.5,
+          net_min_fairness: float = 0.8) -> list[str]:
     """Returns a list of failure messages (empty = gate passes)."""
     failures = []
     cur_po = _per_open(cur)
@@ -203,6 +215,28 @@ def check(prev: dict, cur: dict, *, slack: float, max_slope: float,
                 f"(< {serving_min_coalesce}): lanes are dispatching "
                 f"nearly empty on the seeded trace"
             )
+        net = sv.get("net")
+        if net is None:
+            failures.append(
+                "serving record has no net (wire transport) subsection"
+            )
+        else:
+            overhead = float(net.get("p99_overhead_ratio", float("inf")))
+            if overhead > net_max_p99_overhead:
+                failures.append(
+                    f"wire transport p99 is {overhead:.2f}x the "
+                    f"in-process frontend's (> {net_max_p99_overhead}) "
+                    f"on the seeded loopback trace: framing/socket/"
+                    f"serialisation overhead regressed"
+                )
+            fairness = float(net.get("fairness_index", 0.0))
+            if fairness < net_min_fairness:
+                failures.append(
+                    f"per-tenant Jain fairness index dropped to "
+                    f"{fairness:.3f} (< {net_min_fairness}) over "
+                    f"equal-weight tenants: weighted-fair dispatch is "
+                    f"starving a tenant"
+                )
     return failures
 
 
@@ -235,6 +269,12 @@ def main(argv=None) -> int:
     ap.add_argument("--serving-min-coalesce", type=float, default=0.3,
                     help="min fraction of requests dispatched in lanes "
                          "of size >= 2")
+    ap.add_argument("--net-max-p99-overhead", type=float, default=1.5,
+                    help="max wire-transport/in-process p99 latency "
+                         "ratio on the seeded loopback trace")
+    ap.add_argument("--net-min-fairness", type=float, default=0.8,
+                    help="min per-tenant Jain fairness index over "
+                         "equal-weight tenants on the loopback trace")
     args = ap.parse_args(argv)
     prev = json.loads(args.prev.read_text()) if args.prev.exists() else {}
     cur = json.loads(args.cur.read_text())
@@ -245,7 +285,9 @@ def main(argv=None) -> int:
                      floor_s=args.floor_us * 1e-6,
                      serving_min_speedup=args.serving_min_speedup,
                      serving_p99_slack=args.serving_p99_slack,
-                     serving_min_coalesce=args.serving_min_coalesce)
+                     serving_min_coalesce=args.serving_min_coalesce,
+                     net_max_p99_overhead=args.net_max_p99_overhead,
+                     net_min_fairness=args.net_min_fairness)
     for msg in failures:
         print(f"REGRESSION: {msg}", file=sys.stderr)
     if not failures:
@@ -258,7 +300,9 @@ def main(argv=None) -> int:
               f"goodput={cur['robustness']['goodput']:.3f}, "
               f"serving {sv['speedup_req_per_s']:.1f}x req/s at "
               f"p99 ratio {sv['p99_ratio_vs_baseline']:.2f} "
-              f"(coalesce {sv['frontend']['coalesce_rate']:.2f})")
+              f"(coalesce {sv['frontend']['coalesce_rate']:.2f}), "
+              f"wire p99 overhead {sv['net']['p99_overhead_ratio']:.2f}x "
+              f"(fairness {sv['net']['fairness_index']:.3f})")
     return 1 if failures else 0
 
 

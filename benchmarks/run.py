@@ -15,6 +15,11 @@ leaves a perf trajectory point.  Sections:
   - serving — continuous-batching frontend vs one-request-per-solve on a
     seeded open-loop Poisson trace (CI gates >= 2x requests/sec at equal
     p99 plus a coalesce-rate floor);
+  - serving.net — the same trace replayed over the loopback wire
+    transport (`repro.serving.net`) vs the in-process frontend: wire
+    req/s, added p99, per-tenant Jain fairness index (CI gates the
+    p99 overhead ratio and a fairness floor; `--only serving
+    --transport net` re-runs just this subsection);
   - kernel microbenchmarks — Pallas ops (interpret mode on CPU) vs jnp refs;
   - roofline — §Roofline summary from the dry-run artifacts (if present).
 """
@@ -531,6 +536,150 @@ def bench_serving(smoke: bool = False):
     return rows, record
 
 
+def bench_serving_net(smoke: bool = False):
+    """Wire-transport overhead and tenant fairness (ISSUE 9 acceptance).
+
+    Replays one seeded open-loop Poisson trace of two coalescible
+    request classes through the SAME warmed engine twice: once via an
+    in-process `ClusterFrontend` (the bench_serving fast path) and once
+    over the `repro.serving.net` loopback RPC (`ClusterClient` ->
+    `ClusterServer` sharing a second frontend on that engine, with a
+    two-tenant `TenantScheduler` installed).  Both replays see identical
+    arrival offsets, datasets and stacked-lane programs, so the wire
+    numbers isolate what the transport adds: framing, socket hops, and
+    result serialisation — not solve time and not compile.
+
+    Records wire req/s, p50/p99 submit-to-done latency, the added p99
+    and its ratio vs in-process, the per-tenant Jain fairness index
+    (equal-weight tenants alternating on the trace: fair scheduling
+    means near-equal median queue waits, J -> 1), and the server's
+    queue_wait / solve / network attribution into
+    ``BENCH_seeding.json["serving"]["net"]``.  CI gates the p99
+    overhead ratio (`check_regression.py --net-max-p99-overhead`) and a
+    fairness floor.
+    """
+    import threading as _threading
+    import time as _time
+
+    from repro.core import ClusterEngine, ClusterSpec, ExecutionSpec
+    from repro.serving.frontend import ClusterFrontend
+    from repro.serving.net import (
+        ClusterClient, ClusterServer, TenantPolicy, TenantScheduler)
+
+    n_requests = 32 if smoke else 64
+    rate_hz = 400.0
+    max_batch = 8
+    # Two classes sharing one lane key (bucket 1024) so both paths
+    # coalesce identically; tenants alternate with EQUAL weights, so a
+    # fair scheduler shows near-equal per-tenant queue waits.
+    classes = [dict(n=300, d=8), dict(n=900, d=8)]
+    tenants = ("bulk", "batch")
+    spec = ClusterSpec(k=4, seeder="fastkmeans++", seed=0)
+    rng = np.random.default_rng(9)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, size=n_requests))
+    which = rng.integers(len(classes), size=n_requests)
+
+    def make(c):
+        ctr = rng.normal(size=(8, c["d"])) * 20
+        return (ctr[rng.integers(8, size=c["n"])]
+                + rng.normal(size=(c["n"], c["d"])))
+
+    datasets = [make(classes[i]) for i in which]
+    exe = ExecutionSpec(backend="device")
+    feng = ClusterEngine(spec, exe, validate_inputs=False,
+                         retain_prepared=False)
+    with feng:
+        plan = feng.plan_for(spec)              # warm every lane width
+        bp = 1
+        while bp <= max_batch:
+            plan.fit_batch(datasets=[datasets[0]] * bp).block_until_ready()
+            bp *= 2
+
+        def replay(submit):
+            """Drive the trace open-loop; done-stamps via waiter threads."""
+            done: dict = {}
+            handles, sub_at, waiters = [], [], []
+            t0 = _time.perf_counter()
+            for i, (off, ds) in enumerate(zip(arrivals, datasets)):
+                now = _time.perf_counter() - t0
+                if off > now:
+                    _time.sleep(off - now)
+                sub_at.append(_time.perf_counter())
+                h, wait = submit(ds, i)
+                handles.append(h)
+
+                def _stamp(h=h, wait=wait):
+                    wait(h)
+                    done[h] = _time.perf_counter()
+
+                w = _threading.Thread(target=_stamp, daemon=True)
+                w.start()
+                waiters.append(w)
+            for w in waiters:
+                w.join(timeout=600)
+            wall = _time.perf_counter() - t0
+            lats = sorted(done[h] - s for h, s in zip(handles, sub_at))
+            return {"wall_s": wall, "req_per_s": n_requests / wall,
+                    "latency_p50_s": float(np.percentile(lats, 50)),
+                    "latency_p99_s": float(np.percentile(lats, 99))}
+
+        # Alternate timed replays of both paths and keep each path's
+        # best rep (min-p99, the noise-robust statistic used across this
+        # harness): the p99 of one short trace is nearly its max, so a
+        # single rep on a shared CI runner measures scheduler jitter,
+        # not transport overhead.  One untimed warm replay first pays
+        # the residual prepare/compile warmup.
+        reps = 3 if smoke else 5
+        sched = TenantScheduler({t: TenantPolicy(weight=1.0)
+                                 for t in tenants})
+        fe2 = ClusterFrontend(engine=feng, max_batch=max_batch,
+                              max_wait_ms=8.0, admission=sched)
+        with ClusterFrontend(engine=feng, max_batch=max_batch,
+                             max_wait_ms=8.0) as fe, \
+                fe2, ClusterServer(frontend=fe2, port=0) as srv, \
+                ClusterClient(*srv.address, read_timeout=600) as cl:
+            replay(lambda ds, i: (                  # untimed warmup
+                fe.submit(ds), lambda t: t.result(timeout=600)))
+            inproc_reps, wire_reps = [], []
+            for _ in range(reps):
+                inproc_reps.append(replay(lambda ds, i: (
+                    fe.submit(ds), lambda t: t.result(timeout=600))))
+                wire_reps.append(replay(lambda ds, i: (
+                    cl.submit(ds, tenant=tenants[i % len(tenants)]),
+                    lambda rid: cl.result(rid, timeout=600))))
+            inproc = min(inproc_reps, key=lambda r: r["latency_p99_s"])
+            wire = min(wire_reps, key=lambda r: r["latency_p99_s"])
+            st = srv.stats()
+
+    waits = [float(rec["queue_wait"].get("p50") or 0.0)
+             for rec in st.get("tenants", {}).values()]
+    sq = sum(w * w for w in waits)              # Jain's fairness index
+    fairness = ((sum(waits) ** 2 / (len(waits) * sq)) if sq > 0 else 1.0)
+    record = {
+        "requests": n_requests, "arrival_rate_hz": rate_hz,
+        "max_batch": max_batch, "tenants": list(tenants),
+        "inproc": inproc, "wire": wire,
+        "req_per_s": wire["req_per_s"],
+        "added_p99_s": wire["latency_p99_s"] - inproc["latency_p99_s"],
+        "p99_overhead_ratio": (wire["latency_p99_s"]
+                               / max(inproc["latency_p99_s"], 1e-12)),
+        "fairness_index": float(fairness),
+        "per_tenant": st.get("tenants", {}),
+        "breakdown": st.get("net", {}).get("breakdown", {}),
+    }
+    rows = [
+        (f"serving.net.wire[b={n_requests}]",
+         wire["latency_p99_s"] * 1e6,
+         f"loopback: {wire['req_per_s']:.1f} req/s, "
+         f"p99_overhead={record['p99_overhead_ratio']:.2f}x "
+         f"(+{record['added_p99_s'] * 1e3:.1f}ms)"),
+        (f"serving.net.fairness[b={n_requests}]", 0.0,
+         f"jain={record['fairness_index']:.3f} over "
+         f"{len(waits)} equal-weight tenants"),
+    ]
+    return rows, record
+
+
 def bench_heap_update(ns=(1 << 14, 1 << 16, 1 << 18), tile=512, reps=20):
     """Per-open sample-structure update: O(n) rebuild vs incremental.
 
@@ -654,14 +803,30 @@ def main(argv=None) -> None:
                     help="re-run a single section and merge its record "
                          "into the existing BENCH_seeding.json (CI uses "
                          "`--only serving` as a named gate step)")
+    ap.add_argument("--transport", choices=["inproc", "net"],
+                    default="inproc",
+                    help="with `--only serving`: `net` re-measures just "
+                         "the loopback wire transport (bench_serving_net) "
+                         "and merges it as serving.net, leaving the "
+                         "in-process record untouched")
     args = ap.parse_args(argv)
     all_rows = []
     if args.only == "serving":
-        print("# serving: continuous batching vs one-request-per-solve",
-              flush=True)
-        sv_rows, serving = bench_serving(smoke=args.smoke)
         payload = json.loads(BENCH_JSON.read_text())
-        payload["serving"] = serving
+        prior = payload.get("serving", {})
+        if args.transport == "net":
+            print("# serving.net: loopback wire transport vs in-process",
+                  flush=True)
+            sv_rows, net = bench_serving_net(smoke=args.smoke)
+            prior["net"] = net
+            payload["serving"] = prior
+        else:
+            print("# serving: continuous batching vs one-request-per-solve",
+                  flush=True)
+            sv_rows, serving = bench_serving(smoke=args.smoke)
+            if "net" in prior:        # keep the wire subsection current
+                serving["net"] = prior["net"]
+            payload["serving"] = serving
         BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
         print(f"merged serving section into {BENCH_JSON}")
         print("\nname,us_per_call,derived")
@@ -691,6 +856,10 @@ def main(argv=None) -> None:
           flush=True)
     sv_rows, serving = bench_serving(smoke=args.smoke)
     all_rows += sv_rows
+    print("# serving.net: loopback wire transport vs in-process",
+          flush=True)
+    net_rows, serving["net"] = bench_serving_net(smoke=args.smoke)
+    all_rows += net_rows
     if not args.smoke:
         print("# kernel microbenchmarks", flush=True)
         all_rows += bench_kernels()

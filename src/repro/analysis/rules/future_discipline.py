@@ -16,6 +16,16 @@ the *same receiver expression*.  ``except Exception`` is not enough —
 it is exactly the ``BaseException``-shaped escapes that strand waiters.
 ``set_exception``-only paths (cancellation, shedding) are not
 constrained: they cannot strand a waiter, only resolve it.
+
+The wire layer (`repro.serving.net`) has the same hazard one level up:
+a server connection's ``RESULT`` frame is the remote client's
+``set_result``, and an escape between the ticket resolving and the
+frame going out leaves the *remote* waiter hanging with a balanced
+local ledger.  The rule therefore checks the same pairing for the
+per-connection writer vocabulary: every ``X.send_result(...)`` must be
+covered by a ``BaseException`` handler calling ``X.send_error(...)`` on
+the same receiver (``send_error`` is the typed terminal frame and is
+itself non-raising).
 """
 
 from __future__ import annotations
@@ -25,9 +35,17 @@ import ast
 from repro.analysis.findings import Finding
 from repro.analysis.registry import rule
 
+#: Result-call name -> the failure-forwarding partner that must cover it.
+#: ``set_result``/``set_exception`` is the in-process Future pairing;
+#: ``send_result``/``send_error`` its wire twin on connection writers.
+_PAIRS = {
+    "set_result": "set_exception",
+    "send_result": "send_error",
+}
+
 
 def _receiver(call: ast.Call) -> str | None:
-    """Unparsed receiver of an ``<expr>.set_result/set_exception`` call."""
+    """Unparsed receiver of an ``<expr>.<method>(...)`` call."""
     if isinstance(call.func, ast.Attribute):
         return ast.unparse(call.func.value)
     return None
@@ -42,19 +60,20 @@ def _is_base_exception_handler(handler: ast.ExceptHandler) -> bool:
     return isinstance(t, ast.Name) and t.id == "BaseException"
 
 
-def _forwards(handler: ast.ExceptHandler, receiver: str) -> bool:
-    """Does the handler call ``<receiver>.set_exception(...)``?"""
+def _forwards(handler: ast.ExceptHandler, receiver: str,
+              partner: str) -> bool:
+    """Does the handler call ``<receiver>.<partner>(...)``?"""
     for node in ast.walk(handler):
         if isinstance(node, ast.Call) and \
                 isinstance(node.func, ast.Attribute) and \
-                node.func.attr == "set_exception" and \
+                node.func.attr == partner and \
                 _receiver(node) == receiver:
             return True
     return False
 
 
 class _Scan(ast.NodeVisitor):
-    """Collect set_result calls with the try-handlers covering them.
+    """Collect result-delivery calls with the try-handlers covering them.
 
     Only the ``try:`` body is covered by a statement's handlers — code in
     ``else``/``finally``/the handlers themselves is not, matching Python
@@ -63,7 +82,7 @@ class _Scan(ast.NodeVisitor):
 
     def __init__(self):
         self.covering: list = []       # stack of handler lists
-        self.calls: list = []          # (call, receiver, [handlers...])
+        self.calls: list = []          # (call, receiver, partner, handlers)
 
     def visit_Try(self, node: ast.Try) -> None:
         self.covering.append(node.handlers)
@@ -77,29 +96,32 @@ class _Scan(ast.NodeVisitor):
 
     def visit_Call(self, node: ast.Call) -> None:
         if isinstance(node.func, ast.Attribute) and \
-                node.func.attr == "set_result":
+                node.func.attr in _PAIRS:
             receiver = _receiver(node)
             if receiver is not None:
                 handlers = [h for hs in self.covering for h in hs]
-                self.calls.append((node, receiver, handlers))
+                self.calls.append((node, receiver,
+                                   _PAIRS[node.func.attr], handlers))
         self.generic_visit(node)
 
 
 @rule("future-discipline",
-      doc="every Future.set_result path must be covered by a try/except "
-          "BaseException handler that set_exception-forwards to the same "
-          "future")
+      doc="every Future.set_result / connection send_result path must be "
+          "covered by a try/except BaseException handler forwarding to "
+          "set_exception / send_error on the same receiver")
 def check(ctx, project):
     scan = _Scan()
     scan.visit(ctx.tree)
-    for call, receiver, handlers in scan.calls:
-        if any(_is_base_exception_handler(h) and _forwards(h, receiver)
+    for call, receiver, partner, handlers in scan.calls:
+        if any(_is_base_exception_handler(h) and
+               _forwards(h, receiver, partner)
                for h in handlers):
             continue
+        name = call.func.attr
         yield Finding(
             path=ctx.path, line=call.lineno, rule="future-discipline",
-            message=(f"'{receiver}.set_result(...)' is not covered by a "
+            message=(f"'{receiver}.{name}(...)' is not covered by a "
                      f"try/except BaseException handler forwarding to "
-                     f"'{receiver}.set_exception' — an escape between "
-                     f"compute and set_result strands every waiter"),
+                     f"'{receiver}.{partner}' — an escape between "
+                     f"compute and {name} strands every waiter"),
         )

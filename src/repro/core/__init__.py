@@ -41,11 +41,15 @@ from repro.core.resilience import (
     InjectedFault,
     InvalidInputError,
     QueueFullError,
+    RemoteError,
     RetryPolicy,
     ServiceUnavailableError,
     attempt_seed,
     classify_failure,
+    exception_from_wire,
+    exception_to_wire,
     fallback_chain,
+    register_wire_error,
     validate_points,
 )
 from repro.core.lloyd import assign, lloyd
@@ -83,9 +87,13 @@ __all__ = [
     "KMeansConfig",
     "PreparedData",
     "QueueFullError",
+    "RemoteError",
     "RetryPolicy",
     "ServiceUnavailableError",
     "shape_bucket",
+    "exception_from_wire",
+    "exception_to_wire",
+    "register_wire_error",
     "SEEDER_SPECS",
     "SeederSpec",
     "RetraceError",

@@ -58,11 +58,15 @@ __all__ = [
     "InjectedFault",
     "InvalidInputError",
     "QueueFullError",
+    "RemoteError",
     "RetryPolicy",
     "ServiceUnavailableError",
     "attempt_seed",
     "classify_failure",
+    "exception_from_wire",
+    "exception_to_wire",
     "fallback_chain",
+    "register_wire_error",
     "validate_points",
 ]
 
@@ -111,6 +115,94 @@ class InjectedFault(RuntimeError):
         self.transient = transient
         self.stage = stage
         self.key = key
+
+
+# ---------------------------------------------------------------------------
+# Wire-safe error serialization.
+# ---------------------------------------------------------------------------
+
+class RemoteError(RuntimeError):
+    """A failure that crossed the wire without a registered typed twin.
+
+    `exception_from_wire` reconstructs registered codes as their typed
+    exception (so a client catches `DeadlineExceededError` exactly as an
+    in-process caller would); anything else — internal server errors,
+    codes from a newer protocol revision — lands here with the original
+    ``code`` preserved for logging/metrics.
+    """
+
+    def __init__(self, message: str, *, code: int = 0):
+        super().__init__(message)
+        self.code = code
+
+
+#: Stable wire codes for the serving error taxonomy.  Codes are part of
+#: the protocol contract (docs/net.md): never renumber, only append.
+WIRE_INVALID_INPUT = 1
+WIRE_QUEUE_FULL = 2
+WIRE_DEADLINE_EXCEEDED = 3
+WIRE_SERVICE_UNAVAILABLE = 4
+WIRE_CANCELLED = 5
+WIRE_PROTOCOL_ERROR = 6         # malformed/unsupported frame (protocol.py)
+WIRE_INTERNAL = 7               # unregistered exception type
+WIRE_QUOTA_EXCEEDED = 8         # registered by repro.serving.net.tenancy
+
+_WIRE_BY_TYPE: dict = {}        # exc type -> code (most-derived wins)
+_WIRE_BY_CODE: dict = {}        # code -> exc type
+
+
+def register_wire_error(code: int, exc_type: type) -> None:
+    """Bind an exception type to a stable wire code (both directions).
+
+    Later layers (e.g. `repro.serving.net.tenancy`'s quota error) extend
+    the taxonomy without core importing them.  Re-registering a code with
+    a different type is an error — wire codes are a published contract.
+    """
+    if not (isinstance(exc_type, type)
+            and issubclass(exc_type, BaseException)):
+        raise TypeError(f"not an exception type: {exc_type!r}")
+    bound = _WIRE_BY_CODE.get(code)
+    if bound is not None and bound is not exc_type:
+        raise ValueError(
+            f"wire code {code} already bound to {bound.__name__}")
+    _WIRE_BY_CODE[code] = exc_type
+    _WIRE_BY_TYPE[exc_type] = code
+
+
+register_wire_error(WIRE_INVALID_INPUT, InvalidInputError)
+register_wire_error(WIRE_QUEUE_FULL, QueueFullError)
+register_wire_error(WIRE_DEADLINE_EXCEEDED, DeadlineExceededError)
+register_wire_error(WIRE_SERVICE_UNAVAILABLE, ServiceUnavailableError)
+register_wire_error(WIRE_CANCELLED, cf.CancelledError)
+
+
+def exception_to_wire(exc: BaseException) -> tuple:
+    """``(code, message)`` for an exception, walking its MRO.
+
+    A subclass of a registered type serializes as its nearest registered
+    ancestor (the *taxonomy* crosses the wire, not the class hierarchy);
+    unregistered types become `WIRE_INTERNAL` — the message still crosses,
+    typed retry/backpressure semantics do not.
+    """
+    for klass in type(exc).__mro__:
+        code = _WIRE_BY_TYPE.get(klass)
+        if code is not None:
+            return code, str(exc)
+    return WIRE_INTERNAL, f"{type(exc).__name__}: {exc}"
+
+
+def exception_from_wire(code: int, message: str) -> BaseException:
+    """Reconstruct the typed exception for a wire ``(code, message)``.
+
+    Registered codes come back as their exact type — `classify_failure`,
+    retry policies and caller except-clauses treat a remote failure
+    exactly like a local one.  Unregistered codes come back as
+    `RemoteError` with the code attached.
+    """
+    exc_type = _WIRE_BY_CODE.get(code)
+    if exc_type is None:
+        return RemoteError(message, code=code)
+    return exc_type(message)
 
 
 # ---------------------------------------------------------------------------

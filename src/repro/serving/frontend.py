@@ -65,6 +65,13 @@ __all__ = ["ClusterFrontend"]
 #: Backpressure policies for the *held* (not-yet-coalesced) queue.
 _BACKPRESSURE_POLICIES = ("block", "reject")
 
+#: Recent-window size for the queue-wait percentile reservoirs (per
+#: priority and per tenant) surfaced by `stats()` / the wire STATS frame.
+_QW_WINDOW = 4096
+
+#: Percentiles `stats()` reports for each queue-wait reservoir.
+_QW_PERCENTILES = (50, 90, 99)
+
 
 @dataclasses.dataclass(eq=False)
 class _Held:
@@ -74,11 +81,23 @@ class _Held:
     points: Any
     priority: int
     arrival: float
+    tenant: Optional[str] = None
 
     def sort_key(self) -> tuple:
         dl = self.ticket.deadline
         return (-self.priority, float("inf") if dl is None else dl,
                 self.arrival)
+
+
+def _qw_summary(samples) -> dict:
+    """p50/p90/p99/count of one queue-wait reservoir (seconds)."""
+    if not samples:
+        return {"count": 0, "p50": 0.0, "p90": 0.0, "p99": 0.0}
+    arr = np.asarray(samples, dtype=np.float64)
+    out = {"count": int(arr.size)}
+    for p in _QW_PERCENTILES:
+        out[f"p{p}"] = float(np.percentile(arr, p))
+    return out
 
 
 def _flush_reason(q: list, max_batch: int, max_wait: float, margin: float,
@@ -129,6 +148,17 @@ class ClusterFrontend:
     or ``"reject"`` (raise `QueueFullError`); dispatched lanes queue in
     the engine beyond that.  All timing — deadlines, the hold window,
     the service EMA — runs on the injectable monotonic ``clock``.
+
+    ``admission`` is the multi-tenant hook (duck-typed so the wire layer
+    stays optional; `repro.serving.net.tenancy.TenantScheduler` is the
+    stdlib implementation): an object with ``admit(tenant)`` (raise a
+    typed error to reject the request before it takes a hold-queue
+    slot), ``virtual_time(tenant)`` (weighted-fair dequeue key — ready
+    lanes drain smallest-first, so tenant fairness dominates request
+    ``priority`` *across* tenants while priority still orders work
+    within one) and ``on_dispatch(tenant, n)`` (charge dispatched
+    members).  `submit(tenant=)` names the paying tenant (defaults to
+    ``"default"`` whenever an admission hook is installed).
     """
 
     def __init__(self, cluster: Optional[ClusterSpec] = None,
@@ -142,6 +172,7 @@ class ClusterFrontend:
                  retry: Optional[RetryPolicy] = None,
                  degrade: bool = True,
                  fault_plan: Optional[FaultPlan] = None,
+                 admission: Optional[Any] = None,
                  clock: Callable[[], float] = time.monotonic):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -175,6 +206,7 @@ class ClusterFrontend:
         self.max_pending = max_pending
         self.backpressure = backpressure
         self.validate_inputs = validate_inputs
+        self.admission = admission
         self._max_wait = max_wait_ms / 1e3
         self._margin_floor = deadline_margin_ms / 1e3
         self._clock = clock
@@ -190,6 +222,11 @@ class ClusterFrontend:
         self._service_ema = 0.0
         self._stats: collections.Counter = collections.Counter()
         self._queue_wait_total = 0.0
+        # Bounded recent-window queue-wait samples (completed requests),
+        # keyed by priority / tenant: the percentile source for stats()
+        # and, through it, the wire STATS frame.
+        self._qw_by_prio: dict = {}
+        self._tenant_stats: dict = {}       # tenant -> Counter + samples
         self._batcher = threading.Thread(
             target=self._batch_loop, name="cluster-frontend-batch",
             daemon=True)
@@ -200,7 +237,8 @@ class ClusterFrontend:
     def submit(self, points, *, k: Optional[int] = None,
                seed: Optional[int] = None, tag: Any = None,
                deadline: Optional[float] = None,
-               priority: int = 0) -> FitTicket:
+               priority: int = 0,
+               tenant: Optional[str] = None) -> FitTicket:
         """Admit one fit request; returns its `FitTicket` immediately.
 
         The request is held (at most `max_wait_ms`) for coalescing with
@@ -213,17 +251,36 @@ class ClusterFrontend:
         ``priority`` lanes dispatch first; ties go deadline-soonest.
         ``seed=None`` uses the spec seed — the solo `refit` stream, so
         the coalesced result is bit-identical to an uncoalesced one.
+
+        ``tenant`` names the paying tenant for multi-tenant serving:
+        with an ``admission`` hook installed the request is charged
+        against the tenant's quota (a typed rejection — e.g.
+        `QuotaExceededError` — raises here, before the request takes a
+        hold-queue slot) and dispatched under weighted-fair ordering;
+        without one, the label still flows into per-tenant `stats()`
+        counters and ``extras["tenant"]``.
         """
         spec = self.cluster if k is None \
             else dataclasses.replace(self.cluster, k=int(k))
         if deadline is not None and deadline <= 0:
             raise ValueError(f"deadline must be > 0 seconds, got {deadline}")
+        if tenant is None and self.admission is not None:
+            tenant = "default"
         if self.validate_inputs:
             try:
                 validate_points(points, k=spec.k)
             except InvalidInputError:
                 with self._lock:
                     self._stats["quarantined"] += 1
+                    self._bump_tenant(tenant, "quarantined")
+                raise
+        if self.admission is not None:
+            try:
+                self.admission.admit(tenant)
+            except BaseException:
+                with self._lock:
+                    self._stats["throttled"] += 1
+                    self._bump_tenant(tenant, "throttled")
                 raise
         n, d = np.shape(points)
         key = (spec, int(d),
@@ -236,6 +293,7 @@ class ClusterFrontend:
                         self._lock.wait()
                 elif self._held_count >= self.max_pending:
                     self._stats["rejected"] += 1
+                    self._bump_tenant(tenant, "rejected")
                     raise QueueFullError(
                         f"frontend hold queue full ({self.max_pending} "
                         "held); request rejected (backpressure='reject')")
@@ -247,11 +305,27 @@ class ClusterFrontend:
                 deadline=None if deadline is None else now + deadline)
             self._next_index += 1
             self._stats["submitted"] += 1
+            self._bump_tenant(tenant, "submitted")
             self._held.setdefault(key, []).append(
-                _Held(ticket, points, int(priority), now))
+                _Held(ticket, points, int(priority), now, tenant=tenant))
             self._held_count += 1
             self._lock.notify_all()
         return ticket
+
+    def _bump_tenant(self, tenant: Optional[str], counter: str,
+                     queue_wait: Optional[float] = None) -> None:
+        """Per-tenant ledger bump (lock held by the caller)."""
+        if tenant is None:
+            return
+        rec = self._tenant_stats.get(tenant)
+        if rec is None:
+            rec = self._tenant_stats[tenant] = {
+                "counters": collections.Counter(),
+                "queue_wait": collections.deque(maxlen=_QW_WINDOW),
+            }
+        rec["counters"][counter] += 1
+        if queue_wait is not None:
+            rec["queue_wait"].append(queue_wait)
 
     def flush(self) -> None:
         """Dispatch everything currently held, without waiting for results.
@@ -320,10 +394,19 @@ class ClusterFrontend:
                     continue
                 self._dispatching = True
                 self._lock.notify_all()    # blocked submitters: space freed
-            # Priority lanes first; the engine solves in submission order,
-            # so dispatch order here IS completion order.
-            ready.sort(key=lambda lane: min(
-                m.sort_key() for m in lane[1]))
+            # The engine solves in submission order, so dispatch order
+            # here IS completion order.  Without an admission scheduler:
+            # priority-first (ties deadline-soonest, then arrival).  With
+            # one: weighted-fair virtual time across tenants dominates,
+            # so a hot tenant's flood cannot starve a cold tenant's lane;
+            # priority still orders lanes within one tenant (equal vt).
+            if self.admission is None:
+                ready.sort(key=lambda lane: min(
+                    m.sort_key() for m in lane[1]))
+            else:
+                ready.sort(key=lambda lane: min(
+                    (self.admission.virtual_time(m.tenant),)
+                    + m.sort_key() for m in lane[1]))
             for key, members, reason in ready:
                 self._dispatch(key, members, reason)
             with self._lock:
@@ -339,7 +422,7 @@ class ClusterFrontend:
             if m.ticket.deadline is not None and m.ticket.deadline <= now:
                 # Expired while held: fail it here rather than poison the
                 # whole lane's engine deadline.
-                self._resolve(m.ticket, error=DeadlineExceededError(
+                self._resolve(m, error=DeadlineExceededError(
                     f"request {m.ticket.index} expired in the coalescing "
                     f"window by {now - m.ticket.deadline:.3f}s"))
                 continue
@@ -356,8 +439,11 @@ class ClusterFrontend:
                 deadline=lane_deadline, tag=("lane",) + key[1:])
         except BaseException as e:  # noqa: BLE001 — forwarded per member
             for m in live:
-                self._resolve(m.ticket, error=e)
+                self._resolve(m, error=e)
             return
+        if self.admission is not None:
+            for m in live:
+                self.admission.on_dispatch(m.tenant, 1)
         with self._lock:
             self._inflight += 1
             self._stats["lanes"] += 1
@@ -377,7 +463,7 @@ class ClusterFrontend:
             exc = eng_ticket.exception()
             if exc is not None:
                 for m in members:
-                    self._resolve(m.ticket, error=exc)
+                    self._resolve(m, error=exc)
                 return
             res = eng_ticket.result()
             for i, m in enumerate(members):
@@ -391,16 +477,17 @@ class ClusterFrontend:
                     extras.update(
                         lane_size=len(members), lane_index=i, bucket=key[2],
                         queue_wait=t0 - m.arrival, flush_reason=reason)
+                    if m.tenant is not None:
+                        extras["tenant"] = m.tenant
                     out = FitResult(
                         indices=res.indices[i], centers=res.centers[i],
                         cost=res.cost[i], k=m.ticket.cluster.k,
                         prepare_seconds=res.prepare_seconds,
                         solve_seconds=res.solve_seconds, extras=extras)
                 except BaseException as e:  # noqa: BLE001 — per-member fail
-                    self._resolve(m.ticket, error=e)
+                    self._resolve(m, error=e)
                     continue
-                self._resolve(m.ticket, result=out,
-                              queue_wait=t0 - m.arrival)
+                self._resolve(m, result=out, queue_wait=t0 - m.arrival)
         finally:
             with self._lock:
                 dur = now - t0
@@ -409,16 +496,19 @@ class ClusterFrontend:
                 self._inflight -= 1
                 self._lock.notify_all()
 
-    def _resolve(self, ticket: FitTicket, *, result: Optional[FitResult]
+    def _resolve(self, held: _Held, *, result: Optional[FitResult]
                  = None, error: Optional[BaseException] = None,
                  queue_wait: float = 0.0) -> None:
-        """Settle one ticket and bump exactly one ledger counter."""
+        """Settle one held request and bump exactly one ledger counter."""
+        ticket = held.ticket
         if error is not None:
             with self._lock:
                 if isinstance(error, cf.CancelledError):
                     self._stats["cancelled"] += 1
+                    self._bump_tenant(held.tenant, "cancelled")
                 else:
                     self._stats["failed"] += 1
+                    self._bump_tenant(held.tenant, "failed")
                     if isinstance(error, DeadlineExceededError):
                         self._stats["deadline_expired"] += 1
             ticket._future.set_exception(error)
@@ -427,6 +517,13 @@ class ClusterFrontend:
             with self._lock:
                 self._stats["completed"] += 1
                 self._queue_wait_total += queue_wait
+                q = self._qw_by_prio.get(held.priority)
+                if q is None:
+                    q = self._qw_by_prio[held.priority] = \
+                        collections.deque(maxlen=_QW_WINDOW)
+                q.append(queue_wait)
+                self._bump_tenant(held.tenant, "completed",
+                                  queue_wait=queue_wait)
             ticket._future.set_result(result)
         except BaseException as e:  # noqa: BLE001 — never strand a waiter
             ticket._future.set_exception(e)
@@ -444,8 +541,13 @@ class ClusterFrontend:
         a lane), per-reason ``flush_*`` counts, and ``deadline_expired``.
         Derived: ``mean_lane_occupancy``, ``coalesce_rate`` (fraction of
         dispatched members in lanes of size >= 2) and
-        ``mean_queue_wait`` over completed requests.  ``engine`` nests
-        the owned/shared `ClusterEngine.stats()`.
+        ``mean_queue_wait`` over completed requests.
+        ``queue_wait_by_priority`` maps each priority class to
+        p50/p90/p99/count over a bounded recent window of completed
+        queue waits, and ``tenants`` maps each tenant label to its own
+        counters plus the same percentile breakdown — both feed the wire
+        STATS frame.  ``engine`` nests the owned/shared
+        `ClusterEngine.stats()`.
         """
         with self._lock:
             s: dict = dict(self._stats)
@@ -462,6 +564,13 @@ class ClusterFrontend:
                                   if members else 0.0)
             s["mean_queue_wait"] = (self._queue_wait_total / s["completed"]
                                     if s["completed"] else 0.0)
+            s["queue_wait_by_priority"] = {
+                prio: _qw_summary(samples)
+                for prio, samples in sorted(self._qw_by_prio.items())}
+            s["tenants"] = {
+                tenant: {**dict(rec["counters"]),
+                         "queue_wait": _qw_summary(rec["queue_wait"])}
+                for tenant, rec in sorted(self._tenant_stats.items())}
         s["engine"] = self._engine.stats()
         return s
 
@@ -488,7 +597,7 @@ class ClusterFrontend:
                 self._held_count = 0
             self._lock.notify_all()
         for m in dropped:
-            self._resolve(m.ticket, error=cf.CancelledError(
+            self._resolve(m, error=cf.CancelledError(
                 "frontend closed with cancel_pending"))
         self._batcher.join()
         if self._own_engine:

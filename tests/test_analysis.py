@@ -508,6 +508,65 @@ def test_future_discipline_quiet_on_forwarding_try():
     assert _run(_FUTURE_NEG_BARE, "future-discipline") == []
 
 
+# The wire twin: a connection's send_result is the remote set_result, and
+# must be covered by a send_error forward on the same connection.
+
+_WIRE_POS = """
+def deliver(conn, rid, ticket):
+    conn.send_result(rid, ticket.result(), {})   # a raise strands the peer
+"""
+
+_WIRE_NARROW = """
+def deliver(conn, rid, ticket):
+    try:
+        conn.send_result(rid, ticket.result(), {})
+    except Exception as e:            # BaseException escapes still strand
+        conn.send_error(rid, e)
+"""
+
+_WIRE_WRONG_RECEIVER = """
+def deliver(a, b, rid, ticket):
+    try:
+        a.send_result(rid, ticket.result(), {})
+    except BaseException as e:
+        b.send_error(rid, e)          # a DIFFERENT connection
+"""
+
+_WIRE_NEG = """
+def deliver(conn, rid, ticket):
+    try:
+        res = ticket.result()
+        conn.send_result(rid, res, {})
+    except BaseException as e:
+        conn.send_error(rid, e)
+"""
+
+_WIRE_ERROR_ONLY_NEG = """
+def refuse(conn, rid, exc):
+    conn.send_error(rid, exc)         # error-only paths are unconstrained
+"""
+
+
+def test_future_discipline_fires_on_unguarded_send_result():
+    findings = _run(_WIRE_POS, "future-discipline")
+    assert len(findings) == 1
+    assert "send_result" in findings[0].message
+    assert "send_error" in findings[0].message
+
+
+def test_future_discipline_wire_rejects_narrow_except():
+    assert len(_run(_WIRE_NARROW, "future-discipline")) == 1
+
+
+def test_future_discipline_wire_requires_same_receiver():
+    assert len(_run(_WIRE_WRONG_RECEIVER, "future-discipline")) == 1
+
+
+def test_future_discipline_quiet_on_wire_forwarding_try():
+    assert _run(_WIRE_NEG, "future-discipline") == []
+    assert _run(_WIRE_ERROR_ONLY_NEG, "future-discipline") == []
+
+
 # ---------------------------------------------------------------------------
 # framework behaviour
 # ---------------------------------------------------------------------------

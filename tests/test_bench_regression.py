@@ -10,7 +10,8 @@ KW = dict(slack=2.0, max_slope=1.0, batch_slack=1.15, min_speedup=0.8)
 
 
 def _payload(inc, rebuild=None, adaptive_ratio=0.9, goodput=1.0, stranded=0,
-             serving_speedup=3.0, p99_ratio=0.5, coalesce=0.8):
+             serving_speedup=3.0, p99_ratio=0.5, coalesce=0.8,
+             net_overhead=1.1, net_fairness=0.95):
     rebuild = rebuild or {n: v * 3.0 for n, v in inc.items()}
     return {
         "heap_update_per_open": {"per_open": {
@@ -24,7 +25,10 @@ def _payload(inc, rebuild=None, adaptive_ratio=0.9, goodput=1.0, stranded=0,
                        "failures": 0, "deadline_expired": 0},
         "serving": {"speedup_req_per_s": serving_speedup,
                     "p99_ratio_vs_baseline": p99_ratio,
-                    "frontend": {"coalesce_rate": coalesce}},
+                    "frontend": {"coalesce_rate": coalesce},
+                    "net": {"p99_overhead_ratio": net_overhead,
+                            "fairness_index": net_fairness,
+                            "req_per_s": 100.0}},
     }
 
 
@@ -92,6 +96,18 @@ def test_fails_on_serving_regression():
     missing = {k: v for k, v in GOOD.items() if k != "serving"}
     msgs = check(GOOD, missing, **KW)
     assert any("serving" in m for m in msgs)
+
+
+def test_fails_on_wire_transport_regression():
+    ok = {16384: 1e-4, 65536: 3e-4, 262144: 1e-3}
+    msgs = check(GOOD, _payload(ok, net_overhead=2.3), **KW)
+    assert any("wire transport p99" in m for m in msgs)
+    msgs = check(GOOD, _payload(ok, net_fairness=0.4), **KW)
+    assert any("fairness" in m for m in msgs)
+    cur = _payload(ok)
+    del cur["serving"]["net"]
+    msgs = check(GOOD, cur, **KW)
+    assert any("net (wire transport)" in m for m in msgs)
 
 
 def test_fails_when_rebuild_beats_incremental():

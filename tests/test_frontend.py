@@ -157,6 +157,32 @@ def test_ledger_conservation_under_chaos():
     assert st["completed"] >= 0.8 * B, f"goodput collapsed: {st}"
 
 
+def test_stats_queue_wait_percentiles_by_priority():
+    """ISSUE 9: stats() reports per-priority queue-wait percentiles over
+    completed requests (the reservoir that feeds the wire STATS frame),
+    and per-tenant counters when submits carry a tenant label."""
+    sizes = (300, 1500, 3000)                # three distinct shape buckets
+    datasets = [_mixture(n, seed=40 + i) for i, n in enumerate(sizes)]
+    with ClusterFrontend(SPEC, CPU, max_batch=8, max_wait_ms=50.0) as fe:
+        tickets = [fe.submit(ds, priority=p, tenant="acme")
+                   for ds, p in zip(datasets, (0, 0, 7))]
+        fe.flush()
+        for t in tickets:
+            t.result(timeout=60)
+        st = fe.stats()
+    qw = st["queue_wait_by_priority"]
+    assert sorted(qw) == [0, 7]
+    assert qw[0]["count"] == 2 and qw[7]["count"] == 1
+    for rec in qw.values():
+        assert 0.0 <= rec["p50"] <= rec["p90"] <= rec["p99"]
+        # the hold window bounds queue wait (generous slack for CI)
+        assert rec["p99"] < 30.0
+    acme = st["tenants"]["acme"]
+    assert acme["submitted"] == acme["completed"] == 3
+    assert acme["queue_wait"]["count"] == 3
+    assert acme["queue_wait"]["p99"] >= acme["queue_wait"]["p50"] >= 0.0
+
+
 def test_cancel_pending_close_balances_ledger():
     """close(cancel_pending=True) must cancel held work as typed
     cancellations, never strand a ticket."""

@@ -39,6 +39,7 @@ EXPECTED_ALL = sorted([
     "MultiTreeSampler",
     "PreparedData",
     "QueueFullError",
+    "RemoteError",
     "RetraceError",
     "RetryPolicy",
     "SEEDERS",
@@ -56,6 +57,8 @@ EXPECTED_ALL = sorted([
     "clustering_cost",
     "data_fingerprint",
     "ensure_host_f64",
+    "exception_from_wire",
+    "exception_to_wire",
     "fallback_chain",
     "fast_kmeanspp",
     "fit",
@@ -63,6 +66,7 @@ EXPECTED_ALL = sorted([
     "kmeanspp",
     "lloyd",
     "no_retrace",
+    "register_wire_error",
     "rejection_sampling",
     "resolve_seeder",
     "shape_bucket",
