@@ -64,6 +64,21 @@ Jain fairness index over equal-weight tenants must stay >=
 --net-min-fairness (default 0.8) — a fairness collapse means the
 weighted-fair dispatch hook stopped interleaving tenants.
 
+And the streaming section (ISSUE 10), enforced under
+``--extend-beats-reprep``: on the n=2^16 stream of `bench_streaming` the
+incremental `ClusterPlan.extend` mutation must beat the from-scratch
+`prepare_data` of the concatenated rows — the work incrementality
+replaces; the solve-only refit is common to both paths and recorded,
+not gated — by >= --streaming-min-speedup (default 1.2; both rounds
+share data, seeds and warmed programs, so the ratio is
+machine-independent),
+the drift detector must have fired >= 1 reseed on the seeded
+distribution shift, and the post-reseed clustering cost may be at most
+--streaming-max-quality-ratio (default 1.5) times a from-scratch fit on
+the same drifted live set.  Without the flag the checks still run
+whenever the section is present; the flag makes its *absence* a failure
+(the named CI step that just regenerated it must not silently no-op).
+
 Fields absent from the previous artifact (older PRs) are skipped, so the
 gate is self-bootstrapping.
 """
@@ -109,7 +124,10 @@ def check(prev: dict, cur: dict, *, slack: float, max_slope: float,
           serving_p99_slack: float = 1.25,
           serving_min_coalesce: float = 0.3,
           net_max_p99_overhead: float = 1.5,
-          net_min_fairness: float = 0.8) -> list[str]:
+          net_min_fairness: float = 0.8,
+          extend_beats_reprep: bool = False,
+          streaming_min_speedup: float = 1.2,
+          streaming_max_quality_ratio: float = 1.5) -> list[str]:
     """Returns a list of failure messages (empty = gate passes)."""
     failures = []
     cur_po = _per_open(cur)
@@ -237,6 +255,40 @@ def check(prev: dict, cur: dict, *, slack: float, max_slope: float,
                     f"equal-weight tenants: weighted-fair dispatch is "
                     f"starving a tenant"
                 )
+
+    st = cur.get("streaming")
+    if st is None:
+        if extend_beats_reprep:
+            failures.append(
+                "current artifact has no streaming record "
+                "(--extend-beats-reprep requires one)"
+            )
+    else:
+        speedup = float(st.get("extend_speedup", 0.0))
+        if speedup < streaming_min_speedup:
+            failures.append(
+                f"incremental extend is only {speedup:.2f}x the "
+                f"from-scratch re-prepare "
+                f"(< {streaming_min_speedup}) at n={st.get('n')}: "
+                f"streaming is no longer cheaper than starting over"
+            )
+        drift = st.get("drift", {})
+        reseeds = int(drift.get("reseeds", 0))
+        if reseeds < 1:
+            failures.append(
+                "drift detector fired no reseed on the seeded "
+                "distribution shift (expected >= 1): degradation goes "
+                "unanswered"
+            )
+        quality = float(drift.get("post_reseed_cost_ratio_vs_fresh",
+                                  float("inf")))
+        if quality > streaming_max_quality_ratio:
+            failures.append(
+                f"post-reseed clustering cost is {quality:.2f}x a "
+                f"from-scratch fit on the drifted live set "
+                f"(> {streaming_max_quality_ratio}): the cheap reseed "
+                f"stopped recovering quality"
+            )
     return failures
 
 
@@ -275,6 +327,17 @@ def main(argv=None) -> int:
     ap.add_argument("--net-min-fairness", type=float, default=0.8,
                     help="min per-tenant Jain fairness index over "
                          "equal-weight tenants on the loopback trace")
+    ap.add_argument("--extend-beats-reprep", action="store_true",
+                    help="require the streaming section to exist and "
+                         "pass (incremental extend beats re-prepare, "
+                         "drift reseed fires, post-reseed quality holds)")
+    ap.add_argument("--streaming-min-speedup", type=float, default=1.2,
+                    help="min extend-then-refit speedup over the "
+                         "re-prepare-then-fit baseline")
+    ap.add_argument("--streaming-max-quality-ratio", type=float,
+                    default=1.5,
+                    help="max post-reseed cost vs a from-scratch fit on "
+                         "the drifted live set")
     args = ap.parse_args(argv)
     prev = json.loads(args.prev.read_text()) if args.prev.exists() else {}
     cur = json.loads(args.cur.read_text())
@@ -287,12 +350,21 @@ def main(argv=None) -> int:
                      serving_p99_slack=args.serving_p99_slack,
                      serving_min_coalesce=args.serving_min_coalesce,
                      net_max_p99_overhead=args.net_max_p99_overhead,
-                     net_min_fairness=args.net_min_fairness)
+                     net_min_fairness=args.net_min_fairness,
+                     extend_beats_reprep=args.extend_beats_reprep,
+                     streaming_min_speedup=args.streaming_min_speedup,
+                     streaming_max_quality_ratio=(
+                         args.streaming_max_quality_ratio))
     for msg in failures:
         print(f"REGRESSION: {msg}", file=sys.stderr)
     if not failures:
         po = _per_open(cur)
         sv = cur["serving"]
+        st = cur.get("streaming", {})
+        st_note = (f", extend {st['extend_speedup']:.1f}x re-prepare "
+                   f"({st['drift']['reseeds']} drift reseed(s), quality "
+                   f"{st['drift']['post_reseed_cost_ratio_vs_fresh']:.2f}x)"
+                   if st else "")
         print(f"bench regression gate ok: per-open incremental "
               f"slope={_loglog_slope(po):.2f}, growth "
               f"ratio={_growth_ratio(po):.2f}, adaptive/fixed128="
@@ -302,7 +374,8 @@ def main(argv=None) -> int:
               f"p99 ratio {sv['p99_ratio_vs_baseline']:.2f} "
               f"(coalesce {sv['frontend']['coalesce_rate']:.2f}), "
               f"wire p99 overhead {sv['net']['p99_overhead_ratio']:.2f}x "
-              f"(fairness {sv['net']['fairness_index']:.3f})")
+              f"(fairness {sv['net']['fairness_index']:.3f})"
+              f"{st_note}")
     return 1 if failures else 0
 
 

@@ -65,6 +65,15 @@ from repro.core.seeding import (
     rejection_sampling,
     uniform_sampling,
 )
+from repro.core.streaming import (
+    DriftDetector,
+    DriftPolicy,
+    MiniBatchRefiner,
+    StreamingController,
+    StreamingOps,
+    StreamState,
+    split_merge_k,
+)
 from repro.core.tracing import RetraceError, TRACE_COUNTS, no_retrace
 from repro.core.tree_embedding import MultiTreeEmbedding, build_multitree
 
@@ -122,4 +131,11 @@ __all__ = [
     "uniform_sampling",
     "MultiTreeEmbedding",
     "build_multitree",
+    "DriftDetector",
+    "DriftPolicy",
+    "MiniBatchRefiner",
+    "StreamingController",
+    "StreamingOps",
+    "StreamState",
+    "split_merge_k",
 ]

@@ -48,6 +48,9 @@ from repro.core.registry import (
     capability_table,
 )
 from repro.core.seeding import SEEDERS, SeedingResult, clustering_cost
+# Streaming ops attach to the registered BackendImpls at import time, so
+# this must come after the backend-registering imports above.
+from repro.core import streaming  # noqa: F401  attaches streaming ops
 
 __all__ = [
     "KMeansConfig", "KMeans", "fit", "resolve_seeder", "BACKENDS",

@@ -163,6 +163,8 @@ def device_fast_kmeanspp(
     tile: int = 512,
     interpret: bool | None = None,
     n_real: jax.Array | None = None,
+    w0: jax.Array | None = None,
+    base0: jax.Array | None = None,
 ) -> jax.Array:
     """Algorithm 3.  Returns (k,) int32 chosen indices.  One jit program,
     cached by (shapes, static args) — repeated fits never re-trace
@@ -178,6 +180,16 @@ def device_fast_kmeanspp(
     first draw is bounded by it.  The stacked multi-dataset path pads every
     lane to a common shape bucket and passes each lane's true row count
     here; `None` (the solo path) means all `n` rows are live.
+
+    `w0` (traced, `(n_pad,)` f32, streaming path) replaces the
+    arange-masked base weights: live rows carry `m_init`, retired/padded
+    rows 0 — they are never sampled and never perturb the loop, so the
+    program draws the exact law over the live set.  With `w0` the uniform
+    first-center draw becomes an equal-weight `TiledSampleTree.sample`
+    over `w0` (exactly uniform on live rows; rows at weight 0 have zero
+    mass in the exact intra-tile cumsum).  `base0` optionally supplies
+    the matching coarse heap (the streaming state's incrementally patched
+    `base_heap`); `None` rebuilds it from `w0` at O(T) trace cost.
     """
     count_trace("fastkmeans++/device")        # trace-time only
     t, h, n = codes_lo.shape
@@ -189,12 +201,25 @@ def device_fast_kmeanspp(
                                     num_levels=num_levels, tile=tile,
                                     interpret=interpret)
 
+    # Padded tail lanes start (and stay) at weight 0: never sampled.
+    if w0 is None:
+        weights0 = jnp.where(jnp.arange(ts.n_pad) < live, m_init,
+                             0.0).astype(jnp.float32)
+        coarse0 = ts.init(weights0)
+    else:
+        weights0 = _pad_axis(w0.astype(jnp.float32), 0, ts.n_pad)
+        coarse0 = ts.init(weights0) if base0 is None else base0
+
     def body(i, state):
         weights, coarse, chosen, key = state
         key, k_unif, k_samp = jax.random.split(key, 3)
+        if w0 is None:
+            first = jax.random.randint(k_unif, (), 0, live)
+        else:
+            first = ts.sample(coarse0, weights0, k_unif, 1)[0]
         x = jnp.where(
             i == 0,
-            jax.random.randint(k_unif, (), 0, live),
+            first,
             ts.sample(coarse, weights, k_samp, 1)[0],
         ).astype(jnp.int32)
         weights, tsums = open_center(weights, x)
@@ -202,11 +227,6 @@ def device_fast_kmeanspp(
         chosen = chosen.at[i].set(x)
         return weights, coarse, chosen, key
 
-    # Padded tail lanes start (and stay) at weight 0: never sampled.
-    weights0 = jnp.where(jnp.arange(ts.n_pad) < live, m_init, 0.0).astype(
-        jnp.float32
-    )
-    coarse0 = ts.init(weights0)
     chosen0 = jnp.zeros((k,), jnp.int32)
     _, _, chosen, _ = jax.lax.fori_loop(
         0, k, body, (weights0, coarse0, chosen0, key)
@@ -308,6 +328,8 @@ def device_rejection_sampling(
     tile: int = 512,
     interpret: bool | None = None,
     n_real: jax.Array | None = None,
+    w0: jax.Array | None = None,
+    base0: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Algorithm 4 as one device program (jit-able end to end).
 
@@ -349,6 +371,12 @@ def device_rejection_sampling(
     `n_real` (a *traced* int32 scalar, `None` on the solo path) bounds the
     live rows for the stacked multi-dataset lanes — see
     `device_fast_kmeanspp`.
+
+    `w0` / `base0` (traced, streaming path) replace the arange base
+    weights with the stream's patched leaf-weight vector and its coarse
+    heap — semantics as in `device_fast_kmeanspp`: rows at weight 0
+    (retired or padding) are never proposed and the uniform fallback draw
+    is exactly uniform on the live rows.
     """
     count_trace("rejection/device")           # trace-time only
     t, h, n = codes_lo.shape
@@ -370,11 +398,24 @@ def device_rejection_sampling(
                                     num_levels=num_levels, tile=tile,
                                     interpret=interpret)
 
+    if w0 is None:
+        weights0 = jnp.where(jnp.arange(ts.n_pad) < live, m_init,
+                             0.0).astype(jnp.float32)
+        coarse0 = ts.init(weights0)
+    else:
+        weights0 = _pad_axis(w0.astype(jnp.float32), 0, ts.n_pad)
+        coarse0 = ts.init(weights0) if base0 is None else base0
+
     def body(i, state):
         (weights, coarse, chosen, ctr_pts, ck_lo, ck_hi, trials, b_idx,
          acc_ema, key) = state
         key, k_unif = jax.random.split(key)
-        x_unif = jax.random.randint(k_unif, (), 0, live).astype(jnp.int32)
+        if w0 is None:
+            x_unif = jax.random.randint(k_unif, (), 0, live).astype(
+                jnp.int32)
+        else:
+            x_unif = ts.sample(coarse0, weights0, k_unif, 1)[0].astype(
+                jnp.int32)
 
         def round_cond(carry):
             key, x_sel, done, t_i, rounds, b_idx, acc_ema = carry
@@ -440,10 +481,6 @@ def device_rejection_sampling(
         return (weights, coarse, chosen, ctr_pts, ck_lo, ck_hi, trials,
                 b_idx, acc_ema, key)
 
-    weights0 = jnp.where(jnp.arange(ts.n_pad) < live, m_init, 0.0).astype(
-        jnp.float32
-    )
-    coarse0 = ts.init(weights0)
     chosen0 = jnp.zeros((k,), jnp.int32)
     ctr_pts0 = jnp.full((k, d), _FAR, jnp.float32)
     ck_lo0 = jnp.zeros((l, k), jnp.int32)

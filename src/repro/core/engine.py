@@ -88,7 +88,7 @@ _BACKPRESSURE_POLICIES = ("block", "reject", "shed-oldest")
 _COUNTERS = (
     "submitted", "completed", "failed", "cancelled",
     "quarantined", "rejected", "shed", "deadline_expired",
-    "retries", "fallback_served", "short_circuited",
+    "retries", "fallback_served", "short_circuited", "extends",
 )
 
 
@@ -153,6 +153,12 @@ class _Item:
     points: Any
     prep_future: cf.Future
     lane_seeds: Optional[list] = None       # None => solo request
+    # Streaming extend (`submit_extend`): the mutation is one-shot — the
+    # solve worker applies it exactly once (clearing `points`) and stores
+    # the mutated handle in `prep`, so retries only refit and a replayed
+    # attempt can never double-append the batch.
+    stream: bool = False
+    prep: Any = None
 
 
 class ClusterEngine:
@@ -357,9 +363,60 @@ class ClusterEngine:
                            prepare=lambda: self._lane_prepare(plan, datasets),
                            lane_seeds=seeds)
 
+    def submit_extend(self, points, *, prepared=None,
+                      cluster: Optional[ClusterSpec] = None,
+                      seed: Optional[int] = None, tag: Any = None,
+                      deadline: Optional[float] = None,
+                      retry: Optional[RetryPolicy] = None) -> FitTicket:
+        """Enqueue a streaming extend-then-refit; returns its `FitTicket`.
+
+        The streaming dispatch primitive (the wire `EXTEND` frame lands
+        here): `points` are appended *in place* to the stream behind
+        `prepared` (default: the plan's active handle, converted to a
+        stream if needed) via `ClusterPlan.extend` — frozen-scale
+        quantisation, incremental code/key encode, leaf-weight patching,
+        no re-prepare — and the refit solves over the grown live set.
+        The mutation runs exactly once on the solve worker, in submission
+        order (so interleaved `submit`/`submit_extend` traffic sees a
+        deterministic stream history); retries refit the already-mutated
+        stream on attempt-derived seeds without re-appending, and the
+        circuit-breaker fallback chain is bypassed — a foreign
+        (seeder, backend) target has no access to this stream's
+        artifacts, so degrading would silently drop the mutation.
+        Streaming handles are never auto-evicted
+        (``retain_prepared=False`` only governs per-request datasets);
+        release them explicitly with ``plan.forget(prepared)``.
+        `deadline`/`retry`/`tag` behave as for `submit`; the extend batch
+        is quarantined on NaN/Inf/non-2D input (it may be smaller than
+        k — only the refit needs k live rows).  ``points=None`` skips
+        the mutation and just refits the stream as-is (the
+        drift-triggered reseed path) — that form requires an explicit
+        ``prepared`` handle.
+        """
+        plan = self.plan_for(cluster)
+        if points is None:
+            if prepared is None:
+                raise ValueError(
+                    "refit-only submit_extend (points=None) needs an "
+                    "explicit prepared stream handle")
+        elif self.validate_inputs:
+            try:
+                validate_points(points)
+            except InvalidInputError:
+                with self._lock:
+                    self._stats["quarantined"] += 1
+                raise
+        with self._lock:
+            if points is not None:
+                self._stats["extends"] += 1
+        return self._admit(plan, points, seed=seed, tag=tag,
+                           deadline=deadline, retry=retry,
+                           prepare=lambda: prepared, stream=True)
+
     def _admit(self, plan: ClusterPlan, points, *, seed, tag, deadline,
                retry, prepare: Callable[[], Any],
-               lane_seeds: Optional[list] = None) -> FitTicket:
+               lane_seeds: Optional[list] = None,
+               stream: bool = False) -> FitTicket:
         """Shared admission control: one queue slot per request OR lane."""
         if deadline is not None and deadline <= 0:
             raise ValueError(f"deadline must be > 0 seconds, got {deadline}")
@@ -395,7 +452,7 @@ class ClusterEngine:
                 retry=retry)
             prep_future = self._pool.submit(prepare)
             self._pending.append(_Item(ticket, plan, points, prep_future,
-                                       lane_seeds=lane_seeds))
+                                       lane_seeds=lane_seeds, stream=stream))
             self._lock.notify_all()
         if shed is not None:
             # Outside the lock: failing the future runs done-callbacks.
@@ -567,7 +624,10 @@ class ClusterEngine:
         plan = item.plan
         primary = (plan.cluster.seeder, plan.execution.backend)
         targets = [primary]
-        if self.degrade:
+        # Streaming extends pin the primary: a fallback (seeder, backend)
+        # has no access to this stream's mutable artifacts, so degrading
+        # would silently drop the mutation instead of serving it.
+        if self.degrade and not item.stream:
             targets += fallback_chain(*primary)
         path: list = []
         last_exc: Optional[BaseException] = None
@@ -618,7 +678,17 @@ class ClusterEngine:
             self._check_cancelled()
             self._check_deadline(ticket)
             try:
-                if prep_future is not None and attempt == 0:
+                if item.stream:
+                    # One-shot mutation: apply the extend on the first
+                    # attempt only, then retries refit the mutated stream.
+                    if item.prep is None:
+                        item.prep = prep_future.result()
+                    if item.points is not None:
+                        item.prep = plan.extend(
+                            item.points, prepared=item.prep)
+                        item.points = None
+                    prep = item.prep
+                elif prep_future is not None and attempt == 0:
                     try:
                         prep = prep_future.result(
                             timeout=self._remaining(ticket))
@@ -635,7 +705,7 @@ class ClusterEngine:
                     prep = (self._lane_prepare(plan, item.points)
                             if item.lane_seeds is not None
                             else self._timed_prepare(plan, item.points))
-                if not self.retain_prepared:
+                if not self.retain_prepared and not item.stream:
                     if item.lane_seeds is not None:
                         used.extend((plan, p) for p in prep)
                     else:

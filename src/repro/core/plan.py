@@ -292,6 +292,14 @@ def _cost_program(points: jax.Array, centers: jax.Array) -> jax.Array:
     return jnp.sum(jnp.min(_pairwise_d2(points, centers), axis=1))
 
 
+@jax.jit
+def _masked_cost_program(points: jax.Array, centers: jax.Array,
+                         mask: jax.Array) -> jax.Array:
+    # Streaming cost: retired rows stay in place (global ids are stable,
+    # rows are never compacted on device) and are masked out here.
+    return jnp.sum(jnp.min(_pairwise_d2(points, centers), axis=1) * mask)
+
+
 # ---------------------------------------------------------------------------
 # Batched (vmapped) device programs for fit_batch.  Outer jit caches by
 # (shapes incl. batch size, statics); the per-lane results are bit-identical
@@ -363,6 +371,14 @@ class PreparedData:
     rng_state: dict                   # np.Generator state after prep draws
     prepare_seconds: float
     points_dev: Any = None            # lazy device copy for gather/cost
+    # Streaming (ISSUE 10): a mutable `repro.core.streaming.StreamState`
+    # makes this handle extendable/retirable in place.  Because mutation
+    # invalidates the content fingerprint above, the prepare cache re-keys
+    # a mutated handle on `generation` (``<fp>#g<generation>``) — see
+    # `ClusterPlan.extend` — so a stale content key can never alias a
+    # mutated prep.
+    streaming: Any = None
+    generation: int = 0
 
 
 def _load_backend(backend: str) -> None:
@@ -413,7 +429,9 @@ class ClusterPlan:
         self._active: Optional[PreparedData] = None
         self._lock = threading.Lock()      # cache dict + stats counters
         self.stats = {"prepare_calls": 0, "prepare_hits": 0,
-                      "prepare_builds": 0, "solves": 0}
+                      "prepare_builds": 0, "solves": 0, "extends": 0,
+                      "retires": 0}
+        self._stream_seq = 0           # uniquifies streaming cache keys
         # Chaos hook (resilience.FaultPlan): seeded failure/latency
         # injection at the top of the prepare build and the solve; None
         # (the default) costs nothing on the hot path.
@@ -471,6 +489,142 @@ class ClusterPlan:
                 f"{self._ctx.backend!r} has no stacked lanes; use "
                 "prepare_data + fit_batch(datasets=...) (solo loop)")
         return self._prepare_cached(points, stacked=True)
+
+    def prepare_streaming(self, points) -> PreparedData:
+        """Prepare `points` as a *mutable stream* (extend/retire in place).
+
+        The streaming twin of `prepare_data`: the backend's streaming ops
+        (see the capability table) freeze an exact power-of-two
+        quantisation scale and build capacity-padded artifacts that
+        `extend`/`retire` mutate incrementally — new rows are encoded
+        against the frozen trees/LSH and the sample-tree leaf weights are
+        patched via scatter updates, never re-fingerprinted.  Every call
+        builds a fresh independent stream (cache keys carry a per-plan
+        sequence number plus the mutation generation, so a stream can
+        never be aliased by a content-fingerprint cache hit); `forget`
+        releases it.  Requires an impl with the streaming capability.
+        """
+        ops = self._streaming_ops()
+        self._fault_inject("prepare", "stream")
+        t0 = time.perf_counter()
+        pts = ensure_host_f64(points)
+        rng = np.random.default_rng(self.cluster.seed)
+        options = dict(self.cluster.options_dict(),
+                       _seeder=self.cluster.seeder)
+        state = ops.prepare(pts, rng, resolution=options.get("resolution"),
+                            options=options, execution=self._ctx)
+        with self._lock:
+            seq = self._stream_seq
+            self._stream_seq += 1
+        fp = f"{data_fingerprint(pts)}/stream{seq}#g{state.generation}"
+        prep = PreparedData(
+            fingerprint=fp, pts=pts, seed_pts=pts, resolution=None,
+            artifacts=None, rng_state=rng.bit_generator.state,
+            prepare_seconds=time.perf_counter() - t0,
+            streaming=state, generation=state.generation,
+        )
+        with self._lock:
+            self._prepared[fp] = prep
+            self.stats["prepare_calls"] += 1
+            self.stats["prepare_builds"] += 1
+            self._active = prep
+        return prep
+
+    def _streaming_ops(self):
+        ops = self.impl.streaming
+        if ops is None:
+            raise ValueError(
+                f"{self.cluster.seeder!r} on backend {self._ctx.backend!r} "
+                "has no streaming support (see the capability table); "
+                "extend/retire need prepare_streaming-capable impls")
+        return ops
+
+    def extend(self, points, *, prepared: Optional[PreparedData] = None
+               ) -> PreparedData:
+        """Append `points` to a prepared stream *in place* (no re-prep).
+
+        Incoming rows are quantised with the stream's frozen pow2 scale,
+        encoded against the frozen tree embeddings / LSH tables, and the
+        sample-tree leaf weights are patched via `scatter_update` — so the
+        next `refit`/`fit_prepared` draws the exact D^2 law over the grown
+        live set without re-fingerprinting (rows outside the frozen grid
+        domain trigger a logged embedding rebuild; the sharded backend
+        re-shards on next solve, also logged).  `prepared` defaults to the
+        plan's active handle; a non-streaming handle is converted to a
+        stream in place first.  The handle is re-keyed in the prepare
+        cache on its bumped mutation generation.  Returns the handle.
+        """
+        ops = self._streaming_ops()
+        prep = self._mutable_prep(prepared)
+        ops.extend(prep.streaming, ensure_host_f64(points),
+                   execution=self._ctx)
+        self._rekey_mutated(prep)
+        with self._lock:
+            self.stats["extends"] += 1
+        return prep
+
+    def retire(self, indices, *, prepared: Optional[PreparedData] = None
+               ) -> PreparedData:
+        """Retire rows (by global row id) from a prepared stream in place.
+
+        Retired rows keep their ids (rows are never compacted) but their
+        leaf weights drop to exactly zero — they have zero mass in the
+        tile cumsum, are never proposed, and are masked out of the
+        reported cost.  Extend-then-retire of the same rows round-trips
+        the leaf weights bit-exactly (tests/test_streaming.py).  Same
+        conversion/re-key semantics as `extend`.  Returns the handle.
+        """
+        ops = self._streaming_ops()
+        prep = self._mutable_prep(prepared)
+        ops.retire(prep.streaming, np.asarray(indices, dtype=np.int64),
+                   execution=self._ctx)
+        self._rekey_mutated(prep)
+        with self._lock:
+            self.stats["retires"] += 1
+        return prep
+
+    def _mutable_prep(self, prepared: Optional[PreparedData]
+                      ) -> PreparedData:
+        if prepared is None:
+            with self._lock:
+                prepared = self._active
+            if prepared is None:
+                raise RuntimeError(
+                    "no prepared data: call plan.prepare_streaming(points) "
+                    "(or prepare/fit) before extend/retire")
+        if prepared.streaming is None:
+            # In-place conversion of a static prep: stream over its rows
+            # with a fresh spec-seeded rng (the original artifacts are
+            # superseded; the rng replay snapshot stays untouched so
+            # seed=None refits remain deterministic).
+            ops = self._streaming_ops()
+            rng = np.random.default_rng(self.cluster.seed)
+            options = dict(self.cluster.options_dict(),
+                           _seeder=self.cluster.seeder)
+            prepared.streaming = ops.prepare(
+                prepared.pts, rng, resolution=options.get("resolution"),
+                options=options, execution=self._ctx)
+            prepared.artifacts = None
+            prepared.generation = prepared.streaming.generation
+        return prepared
+
+    def _rekey_mutated(self, prep: PreparedData) -> None:
+        """Re-key a mutated prep on its generation counter (the ISSUE-10
+        cache fix): the content fingerprint no longer matches the mutated
+        data, so the stale key is dropped and the entry lives under
+        ``<base>#g<generation>`` instead — `forget` and engine eviction
+        keep working, and a fresh `prepare_data` of the original points
+        can never alias the mutated handle."""
+        state = prep.streaming
+        base = prep.fingerprint.split("#g")[0]
+        with self._lock:
+            old_key = prep.fingerprint
+            prep.generation = state.generation
+            new_key = f"{base}#g{state.generation}"
+            if self._prepared.pop(old_key, None) is not None:
+                self._prepared[new_key] = prep
+            prep.fingerprint = new_key
+            prep.points_dev = None        # row set changed: stale gather
 
     def _prepare_cached(self, points, *, stacked: bool) -> PreparedData:
         fp = data_fingerprint(points) + ("/stacked" if stacked else "")
@@ -637,6 +791,13 @@ class ClusterPlan:
         rng = self._solve_rng(prep, seed)
         options = self.cluster.options_dict()
         options.pop("resolution", None)
+        if prep.streaming is not None:
+            idx_raw, extras = self.impl.streaming.solve(
+                prep.streaming, k, rng,
+                c=self.cluster.c, schedule=self.cluster.schedule,
+                options=options, execution=self._ctx,
+            )
+            return self._finish_streaming(prep, k, idx_raw, extras, t0)
         if self.impl.preparable:
             idx_raw, extras = self.impl.solve(
                 prep.artifacts, prep.seed_pts, k, rng,
@@ -674,6 +835,43 @@ class ClusterPlan:
             extras = dict(extras, lloyd_iterations=refinement.iterations)
         else:
             cost = _cost_program(pts_dev, centers)
+        return FitResult(
+            indices=idx, centers=centers, cost=cost, k=k,
+            prepare_seconds=prep.prepare_seconds,
+            solve_seconds=time.perf_counter() - t0,
+            extras=extras,
+        )
+
+    def _finish_streaming(self, prep: PreparedData, k: int, idx_raw,
+                          extras: dict, t0: float) -> FitResult:
+        """Streaming `_finish`: gather/cost over the stream's current rows.
+
+        Global row ids are stable (device/cpu streams never compact), so
+        the gather indexes the full row block and the cost masks retired
+        rows to zero weight.
+        """
+        state = prep.streaming
+        idx = jnp.asarray(idx_raw, jnp.int32)
+        with state.lock:
+            n_rows = state.n_rows
+            if prep.points_dev is None or \
+                    prep.points_dev.shape[0] != n_rows:
+                prep.points_dev = jnp.asarray(
+                    state.host_pts[:n_rows], jnp.dtype(self._ctx.dtype))
+            pts_dev = prep.points_dev
+            mask = state.live_mask_device()
+        centers = jnp.take(pts_dev, idx, axis=0)
+        if self.cluster.lloyd_iters > 0:
+            live_pts = state.live_points()
+            refinement = lloyd(
+                live_pts, state.host_pts[np.asarray(idx, dtype=np.int64)],
+                max_iters=self.cluster.lloyd_iters)
+            centers = jnp.asarray(refinement.centers,
+                                  jnp.dtype(self._ctx.dtype))
+            cost = jnp.asarray(refinement.cost, jnp.float32)
+            extras = dict(extras, lloyd_iterations=refinement.iterations)
+        else:
+            cost = _masked_cost_program(pts_dev, centers, mask)
         return FitResult(
             indices=idx, centers=centers, cost=cost, k=k,
             prepare_seconds=prep.prepare_seconds,

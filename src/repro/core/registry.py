@@ -85,6 +85,14 @@ class BackendImpl:
         options, execution) -> ((B, k) indices, extras)`` runs ONE vmapped
         jit program over all lanes of a shape bucket.  ``None`` means the
         backend solves multiple datasets by looping the solo path.
+    streaming:
+        The mutable-data split (`repro.core.streaming.StreamingOps`):
+        ``prepare``/``extend``/``retire``/``solve`` over a capacity-padded
+        `StreamState` whose leaf weights are patched via
+        `TiledSampleTree` scatter updates instead of re-fingerprinting.
+        ``None`` means `ClusterPlan.extend`/`retire` are unavailable on
+        this backend.  Ops with ``native=False`` (the sharded fallback)
+        re-shard on mutation with a logged reason instead of patching.
     """
 
     run: Callable
@@ -93,6 +101,7 @@ class BackendImpl:
     solve: Optional[Callable] = None
     prepare_stacked: Optional[Callable] = None
     solve_stacked: Optional[Callable] = None
+    streaming: Optional[Any] = None
 
     @property
     def preparable(self) -> bool:
@@ -104,6 +113,11 @@ class BackendImpl:
         """True when B *different* datasets can run as one stacked program."""
         return (self.prepare_stacked is not None
                 and self.solve_stacked is not None)
+
+    @property
+    def supports_streaming(self) -> bool:
+        """True when the backend exposes streaming extend/retire ops."""
+        return self.streaming is not None
 
 
 @dataclasses.dataclass
@@ -201,9 +215,9 @@ def capability_table() -> str:
     """Markdown capability matrix generated from the live registry
     (docs/api.md embeds the output; a test keeps the doc in sync)."""
     header = ("| seeder | backends | device-native | cached prepare "
-              "| stacked | quantize | accepts `c` | accepts schedule "
-              "| degrades to |")
-    sep = "|---" * 9 + "|"
+              "| stacked | streaming | quantize | accepts `c` "
+              "| accepts schedule | degrades to |")
+    sep = "|---" * 10 + "|"
     rows = [header, sep]
     for name in sorted(SEEDER_SPECS):
         spec = SEEDER_SPECS[name]
@@ -211,12 +225,19 @@ def capability_table() -> str:
         prep = [b for b in spec.backends if spec.impls[b].preparable]
         stacked = [b for b in spec.backends
                    if spec.impls[b].supports_stacked]
+        streaming = []
+        for b in spec.backends:
+            ops = spec.impls[b].streaming
+            if ops is not None:
+                native_ops = getattr(ops, "native", True)
+                streaming.append(b if native_ops else f"{b} (fallback)")
         fallback = f"`{spec.fallback}`" if spec.fallback else "—"
         rows.append(
             f"| `{name}` | {', '.join(spec.backends)} "
             f"| {', '.join(native) or '—'} "
             f"| {', '.join(prep) or '—'} "
             f"| {', '.join(stacked) or '—'} "
+            f"| {', '.join(streaming) or '—'} "
             f"| {'yes' if spec.caps.needs_quantize else '—'} "
             f"| {'yes' if spec.caps.accepts_c else '—'} "
             f"| {'yes' if spec.caps.accepts_schedule else '—'} "

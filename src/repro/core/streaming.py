@@ -1,0 +1,857 @@
+"""Online / streaming clustering: incremental extend/retire over a
+prepared plan, drift-triggered reseeding, and dynamic k.
+
+The paper's prepare stage (tree-embedding codes + LSH bucket keys +
+`TiledSampleTree` leaf weights) was built immutable: any new point forced
+a full re-fingerprint and rebuild.  This module makes the prepared
+artifacts a *mutable stream* while keeping every statistical guarantee:
+
+  * **Frozen pow2 quantisation.**  `prepare` fixes an exact power-of-two
+    scale ``s = canonical_pow2_scale(points) / 2`` (mantissas untouched,
+    so all distance ratios — everything D^2 sampling and the Algorithm-4
+    acceptance ratio consume — are preserved bit-for-bit) and builds the
+    trees in scaled space with the canonical stacked geometry
+    (``max_dist=1.0``, fixed resolution).  The halved scale leaves a 2x
+    domain headroom above the origin, so later points that land inside
+    the frozen grid domain are *encoded against the frozen trees* —
+    `TreeEmbedding.point_codes` / `MonotoneLSH.hash_keys` on the new rows
+    only — instead of re-embedding all n rows.
+
+  * **Capacity padding + leaf-weight patching.**  All device tensors are
+    padded to a `shape_bucket` capacity rung; extend writes columns,
+    retire flips weights.  The base leaf-weight vector ``w0`` (``m_init``
+    on live rows, 0 on retired/padding rows) and its coarse heap are
+    patched in place via `TiledSampleTree` scatter updates on the touched
+    tiles only — never re-fingerprinted, the ROADMAP's sublinear
+    insertion/deletion promise.  The device programs consume ``w0``
+    directly: rows at weight 0 have zero mass in the exact intra-tile
+    cumsum, so they are never proposed and never perturb a draw — a refit
+    after any extend/retire history draws the exact D^2 law over the
+    *live* set (proven statistically by the streaming section of
+    tests/test_conformance.py on all three backends).
+
+  * **Out-of-domain growth = correctness-preserving rebuild.**  A point
+    outside the frozen grid domain cannot be encoded against the frozen
+    shifts; the stream then rebuilds its embedding (new scale, new
+    origin) over all rows with a logged reason, preserving the live mask
+    and leaf weights.  The sharded backend has no native patch path at
+    all: its ops are registered with ``native=False`` and re-shard on the
+    next solve with a logged reason (the documented fallback).
+
+Draw-stream note: a streaming refit is *law-identical* but not
+*stream-identical* to a from-scratch fit — the uniform first-center draw
+runs through the tree sampler (exactly uniform on live rows) instead of
+`jax.random.randint`, so the consumed key stream differs.  What IS
+bit-identical: ``prepare_streaming(A); extend(B)`` versus
+``prepare_streaming(A + B)`` (same scale/origin/capacity), which
+tests/test_streaming.py locks down property-style.
+
+The drift layer (`DriftDetector`, cost-ratio EMA against the last full
+fit), mini-batch refinement (`MiniBatchRefiner`, Sculley 2010) and
+dynamic k (`split_merge_k` over the PR-3 k-means|| oversampling rounds;
+bias analysis Makarychev et al., arXiv:2010.14487) compose in
+`StreamingController`: refine cheaply between refits, reseed only on
+measured degradation.  See docs/streaming.md for the full contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import threading
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import registry
+from repro.core.batch_schedule import shape_bucket
+from repro.core.lsh import MonotoneLSH
+from repro.core.sample_tree import TiledSampleTree
+from repro.core.tree_embedding import build_multitree
+
+__all__ = [
+    "StreamingOps",
+    "StreamState",
+    "DriftPolicy",
+    "DriftDetector",
+    "MiniBatchRefiner",
+    "StreamingController",
+    "split_merge_k",
+]
+
+logger = logging.getLogger("repro.core.streaming")
+
+# Streams share the stacked lanes' canonical geometry: trees are built in
+# the frozen pow2-scaled space with a forced unit diameter bound, so the
+# jit statics (scale, num_levels, m_init) depend only on d and every
+# capacity bucket compiles exactly one program.
+_STREAM_RESOLUTION = 2.0 ** -10
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamingOps:
+    """One backend's streaming implementation (`BackendImpl.streaming`).
+
+    ``prepare(pts, rng, *, resolution, options, execution) -> StreamState``
+    builds the mutable stream; ``extend(state, pts, *, execution)`` and
+    ``retire(state, indices, *, execution)`` mutate it in place;
+    ``solve(state, k, rng, *, c, schedule, options, execution) ->
+    (indices, extras)`` draws k centers over the live rows.  ``native``
+    is False for the sharded fallback, which re-shards on the next solve
+    (with a logged reason) instead of patching artifacts in place.
+    """
+
+    prepare: Callable
+    extend: Callable
+    retire: Callable
+    solve: Callable
+    native: bool = True
+
+
+@dataclasses.dataclass
+class StreamState:
+    """Mutable per-stream artifacts shared by the backend ops.
+
+    Host truth: `host_pts` (original coordinates) and `host_scaled`
+    (frozen pow2-scaled coordinates) in capacity-padded arrays, plus the
+    `live` mask — global row ids are stable across retire (rows are
+    never compacted on the native backends).  Device truth (device
+    backend only): capacity-padded code/key/point tensors plus the
+    patched `w0` leaf weights and their coarse `base_heap`.  The sharded
+    fallback keeps `artifacts` + `live_snapshot` from its last re-shard
+    and a `dirty` flag.  All mutations hold `lock`.
+    """
+
+    seeder: str
+    backend: str
+    scale: float                      # frozen pow2 quantisation factor s
+    tile: int
+    capacity: int
+    n_rows: int
+    live: np.ndarray                  # (capacity,) bool
+    host_pts: np.ndarray              # (capacity, d) f64, original units
+    host_scaled: np.ndarray           # (capacity, d) f64, scaled units
+    options: dict
+    reseed_root: int                  # seeds deterministic rebuilds
+    generation: int = 0
+    rebuilds: int = 0
+    lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
+    # --- device backend ---
+    emb: Any = None                   # frozen MultiTreeEmbedding
+    lsh: Any = None                   # frozen MonotoneLSH (rejection only)
+    statics: tuple = ()               # (scale, num_levels, m_init)
+    codes_lo: Any = None              # (T, H-1, capacity) int32
+    codes_hi: Any = None
+    keys_lo: Any = None               # (L, capacity) int32
+    keys_hi: Any = None
+    pts_scaled: Any = None            # (capacity, d) f32, program space
+    ts: Any = None                    # TiledSampleTree(capacity, tile)
+    w0: Any = None                    # (n_pad,) f32 base leaf weights
+    base_heap: Any = None             # patched coarse heap over w0
+    mask_dev: Any = None              # (n_rows,) f32 live mask (lazy)
+    # --- sharded fallback ---
+    artifacts: Any = None
+    live_snapshot: Any = None         # live_ids at last (re-)shard
+    dirty: bool = False
+
+    @property
+    def dim(self) -> int:
+        """Ambient dimension d."""
+        return int(self.host_pts.shape[1])
+
+    @property
+    def live_count(self) -> int:
+        """Number of live (non-retired) rows."""
+        return int(self.live[: self.n_rows].sum())
+
+    def live_ids(self) -> np.ndarray:
+        """Global ids of the live rows, ascending."""
+        return np.flatnonzero(self.live[: self.n_rows])
+
+    def live_points(self) -> np.ndarray:
+        """Live rows in original coordinates (copy)."""
+        return self.host_pts[self.live_ids()]
+
+    def live_mask_device(self) -> jax.Array:
+        """(n_rows,) f32 device mask for the masked cost reduction."""
+        if self.mask_dev is None or self.mask_dev.shape[0] != self.n_rows:
+            self.mask_dev = jnp.asarray(
+                self.live[: self.n_rows].astype(np.float32))
+        return self.mask_dev
+
+
+def _capacity_for(n: int, tile: int) -> int:
+    return shape_bucket(max(n, 1), min_bucket=max(1024, tile))
+
+
+def _grow_host(a: np.ndarray, capacity: int) -> np.ndarray:
+    out = np.zeros((capacity,) + a.shape[1:], dtype=a.dtype)
+    out[: a.shape[0]] = a
+    return out
+
+
+def _pow2_half_scale(pts: np.ndarray) -> float:
+    from repro.core.device_seeding import canonical_pow2_scale
+
+    # Half the canonical factor: spread stays <= 0.5 per coordinate, so
+    # the frozen grid domain [origin, origin + 1) has 2x headroom for
+    # future points before an out-of-domain rebuild is forced.
+    return canonical_pow2_scale(pts) * 0.5
+
+
+def _scaled_options(options: dict, s: float) -> dict:
+    """User options re-expressed in the frozen scaled space.
+
+    `lsh_r` and `resolution` are lengths in original data units; points
+    handed to the faithful CPU/sharded implementations are pre-scaled by
+    ``s``, so these must scale with them (the same rule as the stacked
+    lanes' `lsh_r * s`).
+    """
+    out = dict(options)
+    for key in ("lsh_r", "resolution"):
+        if out.get(key) is not None:
+            out[key] = float(out[key]) * s
+    return out
+
+
+def _patch_weights(state: StreamState, ids: np.ndarray,
+                   value: float) -> None:
+    """Set `w0[ids] = value` and fix the coarse heap on touched tiles.
+
+    Leaf scatter + one `SampleTreeJax.scatter_update` over the unique
+    touched tiles: O(|ids| + touched * (tile + log T)) — never a full
+    O(n) heap rebuild.  All weights are exact f32 integers (0 or
+    ``m_init = 16 d``), so the incremental ancestor deltas are exact and
+    the patched heap is bit-identical to a from-scratch `ts.init`.
+    """
+    ids = np.asarray(ids, dtype=np.int64)
+    if ids.size == 0:
+        return
+    ts = state.ts
+    state.w0 = state.w0.at[jnp.asarray(ids)].set(jnp.float32(value))
+    touched = np.unique(ids // state.tile).astype(np.int32)
+    tsums = state.w0.reshape(ts.num_tiles, state.tile)[touched].sum(axis=1)
+    state.base_heap = ts.coarse.scatter_update(
+        state.base_heap, jnp.asarray(touched), tsums)
+
+
+# ---------------------------------------------------------------------------
+# Device backend: native extend/retire against frozen trees + LSH.
+# ---------------------------------------------------------------------------
+
+def _dev_statics(d: int) -> tuple:
+    # build_multitree with max_dist=1.0 and the canonical resolution:
+    # scale = 2 sqrt(d), H = 12, M = 16 d — shared with the stacked lanes.
+    from repro.core.tree_embedding import _num_levels
+
+    return (2.0 * float(np.sqrt(d)),
+            _num_levels(1.0, _STREAM_RESOLUTION),
+            16.0 * d)
+
+
+def _dev_build_embedding(state: StreamState, rng) -> None:
+    """(Re)build the frozen embedding/LSH over rows 0..n_rows in scaled
+    space and refresh the capacity-padded device tensors."""
+    pts_scaled = state.host_scaled[: state.n_rows]
+    emb = build_multitree(
+        pts_scaled, seed=int(rng.integers(2 ** 31)),
+        resolution=_STREAM_RESOLUTION, max_dist=1.0)
+    state.emb = emb
+    from repro.kernels.ops import split_codes_u64
+
+    codes = emb.codes_array()[:, 1:, :]                  # (T, H-1, n)
+    lo, hi = split_codes_u64(codes)
+    pad = state.capacity - state.n_rows
+    state.codes_lo = jnp.asarray(np.pad(lo, ((0, 0), (0, 0), (0, pad))))
+    state.codes_hi = jnp.asarray(np.pad(hi, ((0, 0), (0, 0), (0, pad))))
+    state.pts_scaled = jnp.asarray(
+        np.pad(pts_scaled, ((0, pad), (0, 0))), jnp.float32)
+    if state.seeder == "rejection":
+        opts = state.options
+        lsh_r = opts.get("lsh_r")
+        lsh_r = (float(lsh_r) * state.scale if lsh_r is not None
+                 else 10.0 * _STREAM_RESOLUTION)
+        lsh = MonotoneLSH(
+            state.dim, r=lsh_r,
+            num_tables=opts.get("num_tables", 15),
+            hashes_per_table=opts.get("hashes_per_table", 1),
+            seed=int(rng.integers(2 ** 31)), capacity=16)
+        state.lsh = lsh
+        klo, khi = split_codes_u64(lsh.hash_keys(pts_scaled))   # (n, L)
+        state.keys_lo = jnp.asarray(np.pad(klo.T, ((0, 0), (0, pad))))
+        state.keys_hi = jnp.asarray(np.pad(khi.T, ((0, 0), (0, pad))))
+
+
+def _dev_prepare(pts, rng, *, resolution, options, execution) -> StreamState:
+    """Streaming prepare (device): frozen pow2 scale + capacity padding."""
+    pts = np.asarray(pts, dtype=np.float64)
+    n, d = pts.shape
+    tile = execution.tile
+    capacity = _capacity_for(n, tile)
+    s = _pow2_half_scale(pts)
+    state = StreamState(
+        seeder=options["_seeder"], backend="device", scale=s, tile=tile,
+        capacity=capacity, n_rows=n,
+        live=np.zeros(capacity, dtype=bool),
+        host_pts=_grow_host(pts, capacity),
+        host_scaled=_grow_host(pts * s, capacity),
+        options={k: v for k, v in options.items() if k != "_seeder"},
+        reseed_root=0)
+    state.live[:n] = True
+    state.statics = _dev_statics(d)
+    _dev_build_embedding(state, rng)
+    state.reseed_root = int(rng.integers(2 ** 31))
+    ts = TiledSampleTree(capacity, tile=tile)
+    state.ts = ts
+    w_host = np.zeros(ts.n_pad, dtype=np.float32)
+    w_host[:n] = state.statics[2]                        # m_init
+    state.w0 = jnp.asarray(w_host)
+    state.base_heap = ts.init(state.w0)
+    return state
+
+
+def _dev_in_domain(state: StreamState, scaled: np.ndarray) -> bool:
+    """True iff every new scaled row encodes against every frozen tree."""
+    for tree in state.emb.trees:
+        y = (scaled - tree.origin) + tree.shift
+        if (y < 0.0).any() or (y >= 2.0 * tree.max_dist).any():
+            return False
+    return True
+
+
+def _dev_grow_capacity(state: StreamState, need: int) -> None:
+    new_cap = _capacity_for(need, state.tile)
+    if new_cap <= state.capacity:
+        return
+    pad = new_cap - state.capacity
+    state.host_pts = _grow_host(state.host_pts, new_cap)
+    state.host_scaled = _grow_host(state.host_scaled, new_cap)
+    state.live = _grow_host(state.live, new_cap)
+    state.codes_lo = jnp.pad(state.codes_lo,
+                             ((0, 0), (0, 0), (0, pad)))
+    state.codes_hi = jnp.pad(state.codes_hi,
+                             ((0, 0), (0, 0), (0, pad)))
+    state.pts_scaled = jnp.pad(state.pts_scaled, ((0, pad), (0, 0)))
+    if state.keys_lo is not None:
+        state.keys_lo = jnp.pad(state.keys_lo, ((0, 0), (0, pad)))
+        state.keys_hi = jnp.pad(state.keys_hi, ((0, 0), (0, pad)))
+    ts = TiledSampleTree(new_cap, tile=state.tile)
+    state.ts = ts
+    w = jnp.zeros((ts.n_pad,), jnp.float32)
+    state.w0 = w.at[: state.w0.shape[0]].set(state.w0)
+    # Capacity growth re-bases the heap (new tree shape): exact rebuild.
+    state.base_heap = ts.init(state.w0)
+    state.capacity = new_cap
+
+
+def _dev_extend(state: StreamState, pts, *, execution) -> None:
+    """Append rows: encode against the frozen trees/LSH, write columns,
+    patch leaf weights.  Out-of-domain rows force a logged full rebuild
+    of the embedding (live mask and weights preserved)."""
+    from repro.kernels.ops import split_codes_u64
+
+    pts = np.asarray(pts, dtype=np.float64)
+    b = pts.shape[0]
+    if b == 0:
+        return
+    with state.lock:
+        scaled = pts * state.scale
+        rebuild = not _dev_in_domain(state, scaled)
+        n0 = state.n_rows
+        _dev_grow_capacity(state, n0 + b)
+        state.host_pts[n0:n0 + b] = pts
+        state.host_scaled[n0:n0 + b] = scaled
+        state.live[n0:n0 + b] = True
+        state.n_rows = n0 + b
+        if rebuild:
+            logger.warning(
+                "stream extend: %d row(s) outside the frozen grid domain; "
+                "rebuilding embedding over %d rows (reason=out-of-domain)",
+                b, state.n_rows)
+            s = _pow2_half_scale(state.host_pts[: state.n_rows])
+            state.scale = s
+            state.host_scaled[: state.n_rows] = (
+                state.host_pts[: state.n_rows] * s)
+            rng = np.random.default_rng(
+                (state.reseed_root, state.generation))
+            _dev_build_embedding(state, rng)
+            state.rebuilds += 1
+        else:
+            codes = np.stack([t.point_codes(scaled)
+                              for t in state.emb.trees])   # (T, H, b)
+            lo, hi = split_codes_u64(codes[:, 1:, :])
+            state.codes_lo = state.codes_lo.at[:, :, n0:n0 + b].set(
+                jnp.asarray(lo))
+            state.codes_hi = state.codes_hi.at[:, :, n0:n0 + b].set(
+                jnp.asarray(hi))
+            state.pts_scaled = state.pts_scaled.at[n0:n0 + b].set(
+                jnp.asarray(scaled, jnp.float32))
+            if state.lsh is not None:
+                klo, khi = split_codes_u64(state.lsh.hash_keys(scaled))
+                state.keys_lo = state.keys_lo.at[:, n0:n0 + b].set(
+                    jnp.asarray(klo.T))
+                state.keys_hi = state.keys_hi.at[:, n0:n0 + b].set(
+                    jnp.asarray(khi.T))
+        _patch_weights(state, np.arange(n0, n0 + b), state.statics[2])
+        state.mask_dev = None
+        state.generation += 1
+
+
+def _dev_retire(state: StreamState, indices, *, execution) -> None:
+    """Retire rows by global id: zero their leaf weights (never sampled,
+    never perturbing a draw) and drop them from the cost mask.  Columns
+    stay in place — ids are stable, extend-then-retire round-trips."""
+    ids = np.asarray(indices, dtype=np.int64).ravel()
+    if ids.size == 0:
+        return
+    with state.lock:
+        _check_retire_ids(state, ids)
+        state.live[ids] = False
+        _patch_weights(state, ids, 0.0)
+        state.mask_dev = None
+        state.generation += 1
+
+
+def _check_retire_ids(state: StreamState, ids: np.ndarray) -> None:
+    if (ids < 0).any() or (ids >= state.n_rows).any():
+        raise IndexError(
+            f"retire ids out of range [0, {state.n_rows})")
+    if not state.live[ids].all():
+        dead = ids[~state.live[ids]]
+        raise ValueError(f"rows already retired: {dead[:8].tolist()}")
+
+
+def _dev_solve(state: StreamState, k, rng, *, c, schedule, options,
+               execution):
+    """Solve over the live rows: the solo device programs with the
+    stream's patched ``w0``/``base_heap`` as the base weights."""
+    from repro.core.device_seeding import (
+        device_fast_kmeanspp,
+        device_rejection_sampling,
+        resolve_schedule,
+    )
+
+    if k > state.live_count:
+        raise ValueError(
+            f"k={k} exceeds {state.live_count} live rows in stream")
+    scale, num_levels, m_init = state.statics
+    seed_int = int(rng.integers(2 ** 31))
+    extras = {"streaming": True, "generation": state.generation,
+              "stream_rebuilds": state.rebuilds}
+    if state.seeder == "rejection":
+        sched = resolve_schedule(schedule, options.get("batch"))
+        chosen, trials = device_rejection_sampling(
+            state.codes_lo, state.codes_hi, state.pts_scaled,
+            state.keys_lo, state.keys_hi, k, jax.random.key(seed_int),
+            scale=scale, num_levels=num_levels, m_init=m_init, c=c,
+            schedule=sched, max_rounds=options.get("max_rounds", 32),
+            tile=execution.tile, interpret=execution.interpret,
+            w0=state.w0, base0=state.base_heap)
+        extras.update(trials=trials, batch_buckets=sched.buckets())
+        return chosen, extras
+    chosen = device_fast_kmeanspp(
+        state.codes_lo, state.codes_hi, k, jax.random.key(seed_int),
+        scale=scale, num_levels=num_levels, m_init=m_init,
+        tile=execution.tile, interpret=execution.interpret,
+        w0=state.w0, base0=state.base_heap)
+    extras.update(num_candidates=k)
+    return chosen, extras
+
+
+# ---------------------------------------------------------------------------
+# CPU backend: native host-side stream; solves run the faithful
+# implementations on the compacted live rows (scaled space).
+# ---------------------------------------------------------------------------
+
+def _cpu_prepare(pts, rng, *, resolution, options, execution) -> StreamState:
+    """Streaming prepare (cpu): scaled host rows + live mask only — the
+    faithful seeders rebuild their structures per solve, so there is
+    nothing device-resident to patch."""
+    pts = np.asarray(pts, dtype=np.float64)
+    n = pts.shape[0]
+    tile = execution.tile
+    capacity = _capacity_for(n, tile)
+    s = _pow2_half_scale(pts)
+    state = StreamState(
+        seeder=options["_seeder"], backend="cpu", scale=s, tile=tile,
+        capacity=capacity, n_rows=n,
+        live=np.zeros(capacity, dtype=bool),
+        host_pts=_grow_host(pts, capacity),
+        host_scaled=_grow_host(pts * s, capacity),
+        options={k: v for k, v in options.items() if k != "_seeder"},
+        reseed_root=int(rng.integers(2 ** 31)))
+    state.live[:n] = True
+    return state
+
+
+def _cpu_extend(state: StreamState, pts, *, execution) -> None:
+    """Append rows in the frozen scaled space (host arrays only)."""
+    pts = np.asarray(pts, dtype=np.float64)
+    b = pts.shape[0]
+    if b == 0:
+        return
+    with state.lock:
+        n0 = state.n_rows
+        new_cap = _capacity_for(n0 + b, state.tile)
+        if new_cap > state.capacity:
+            state.host_pts = _grow_host(state.host_pts, new_cap)
+            state.host_scaled = _grow_host(state.host_scaled, new_cap)
+            state.live = _grow_host(state.live, new_cap)
+            state.capacity = new_cap
+        state.host_pts[n0:n0 + b] = pts
+        state.host_scaled[n0:n0 + b] = pts * state.scale
+        state.live[n0:n0 + b] = True
+        state.n_rows = n0 + b
+        state.generation += 1
+
+
+def _cpu_retire(state: StreamState, indices, *, execution) -> None:
+    """Retire rows by global id (host mask flip)."""
+    ids = np.asarray(indices, dtype=np.int64).ravel()
+    if ids.size == 0:
+        return
+    with state.lock:
+        _check_retire_ids(state, ids)
+        state.live[ids] = False
+        state.generation += 1
+
+
+def _cpu_solve(state: StreamState, k, rng, *, c, schedule, options,
+               execution):
+    """Solve: run the faithful CPU seeder on the compacted live rows
+    (stable global-id order) and map indices back through `live_ids`."""
+    if k > state.live_count:
+        raise ValueError(
+            f"k={k} exceeds {state.live_count} live rows in stream")
+    live_ids = state.live_ids()
+    pts_live = state.host_scaled[live_ids]
+    opts = _scaled_options({**state.options, **options}, state.scale)
+    run = registry.SEEDER_SPECS[state.seeder].impl("cpu").run
+    res = run(pts_live, k, rng, c=c, schedule=schedule, **opts)
+    idx = live_ids[np.asarray(res.indices, dtype=np.int64)]
+    extras = dict(res.extras)
+    extras.update(streaming=True, generation=state.generation,
+                  num_candidates=res.num_candidates)
+    return idx, extras
+
+
+# ---------------------------------------------------------------------------
+# Sharded backend: documented fallback — no native patch path; mutations
+# mark the stream dirty and the next solve re-shards the live rows.
+# ---------------------------------------------------------------------------
+
+def _sh_impl(state: StreamState):
+    return registry.SEEDER_SPECS[state.seeder].impl("sharded")
+
+
+def _sh_reshard(state: StreamState, *, execution) -> None:
+    rng = np.random.default_rng((state.reseed_root, state.generation))
+    live_ids = state.live_ids()
+    pts_live = state.host_scaled[live_ids]
+    opts = _scaled_options(state.options, state.scale)
+    state.artifacts = _sh_impl(state).prepare(
+        pts_live, rng, resolution=opts.get("resolution"), options=opts,
+        execution=execution)
+    state.live_snapshot = live_ids
+    state.dirty = False
+
+
+def _sh_prepare(pts, rng, *, resolution, options, execution) -> StreamState:
+    """Streaming prepare (sharded): host stream + one initial shard."""
+    state = _cpu_prepare(pts, rng, resolution=resolution, options=options,
+                         execution=execution)
+    state.backend = "sharded"
+    _sh_reshard(state, execution=execution)
+    return state
+
+
+def _sh_extend(state: StreamState, pts, *, execution) -> None:
+    """Fallback extend: host append + dirty flag (re-shard on next solve,
+    logged — the sharded programs pre-place artifacts per mesh and have
+    no in-place patch path)."""
+    pts = np.asarray(pts, dtype=np.float64)
+    if pts.shape[0] == 0:
+        return
+    _cpu_extend(state, pts, execution=execution)
+    with state.lock:
+        if not state.dirty:
+            logger.warning(
+                "sharded backend has no native streaming extend: stream "
+                "will re-shard %d live rows on next solve "
+                "(reason=mesh-placed artifacts)", state.live_count)
+        state.dirty = True
+
+
+def _sh_retire(state: StreamState, indices, *, execution) -> None:
+    """Fallback retire: host mask flip + dirty flag (re-shard, logged)."""
+    ids = np.asarray(indices, dtype=np.int64).ravel()
+    if ids.size == 0:
+        return
+    _cpu_retire(state, ids, execution=execution)
+    with state.lock:
+        if not state.dirty:
+            logger.warning(
+                "sharded backend has no native streaming retire: stream "
+                "will re-shard %d live rows on next solve "
+                "(reason=mesh-placed artifacts)", state.live_count)
+        state.dirty = True
+
+
+def _sh_solve(state: StreamState, k, rng, *, c, schedule, options,
+              execution):
+    """Solve: re-shard if dirty (deterministic rng from the stream's
+    reseed root + generation), then the sharded solve over the snapshot."""
+    if k > state.live_count:
+        raise ValueError(
+            f"k={k} exceeds {state.live_count} live rows in stream")
+    with state.lock:
+        if state.dirty or state.artifacts is None:
+            _sh_reshard(state, execution=execution)
+    live_ids = state.live_snapshot
+    pts_live = state.host_scaled[live_ids]
+    opts = _scaled_options({**state.options, **options}, state.scale)
+    idx, extras = _sh_impl(state).solve(
+        state.artifacts, pts_live, k, rng, c=c, schedule=schedule,
+        options=opts, execution=execution)
+    idx = live_ids[np.asarray(idx, dtype=np.int64)]
+    extras = dict(extras)
+    extras.update(streaming=True, generation=state.generation,
+                  resharded=True)
+    return idx, extras
+
+
+# ---------------------------------------------------------------------------
+# Drift detection, mini-batch refinement, dynamic k.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DriftPolicy:
+    """When to reseed: cost-ratio EMA vs the last full fit.
+
+    ``threshold`` is the smoothed cost ratio above which drift is
+    declared (1.25 = 25% degradation); ``ema`` the smoothing factor on
+    the per-batch ratio (higher = reacts faster, noisier).
+    """
+
+    threshold: float = 1.25
+    ema: float = 0.5
+
+
+class DriftDetector:
+    """Cost-ratio EMA drift detector (the tentpole's reseed trigger).
+
+    `observe_fit(cost)` anchors the baseline after a full refit;
+    `observe(cost)` folds a fresh cost measurement into the EMA ratio
+    and returns True when the smoothed ratio exceeds the policy
+    threshold — i.e. reseed only on measured degradation, never on a
+    schedule.
+    """
+
+    def __init__(self, policy: Optional[DriftPolicy] = None):
+        self.policy = policy or DriftPolicy()
+        self.baseline: Optional[float] = None
+        self.ratio: float = 1.0
+
+    def observe_fit(self, cost: float) -> None:
+        """Anchor the baseline at a full fit's cost; reset the ratio."""
+        self.baseline = max(float(cost), 1e-300)
+        self.ratio = 1.0
+
+    def observe(self, cost: float) -> bool:
+        """Fold one cost sample in; True = drift (reseed recommended)."""
+        if self.baseline is None:
+            return False
+        a = self.policy.ema
+        self.ratio = (1.0 - a) * self.ratio + a * (float(cost)
+                                                   / self.baseline)
+        return self.ratio > self.policy.threshold
+
+
+class MiniBatchRefiner:
+    """Mini-batch k-means center refinement (Sculley 2010).
+
+    Between refits, each ingested batch nudges its nearest centers with
+    per-center learning rate 1/count — O(batch * k * d) per step, no
+    full-data pass.  Centers drift toward the current distribution while
+    the (much cheaper than a refit) drift detector decides when a real
+    reseed is warranted.
+    """
+
+    def __init__(self, centers: np.ndarray,
+                 counts: Optional[np.ndarray] = None):
+        self.centers = np.array(centers, dtype=np.float64)
+        k = len(self.centers)
+        self.counts = (np.zeros(k, dtype=np.int64) if counts is None
+                       else np.asarray(counts, dtype=np.int64).copy())
+
+    def step(self, batch: np.ndarray) -> np.ndarray:
+        """One mini-batch pass; returns the refined centers (view)."""
+        batch = np.asarray(batch, dtype=np.float64)
+        if batch.size == 0:
+            return self.centers
+        d2 = ((batch[:, None, :] - self.centers[None, :, :]) ** 2).sum(-1)
+        nearest = d2.argmin(axis=1)
+        for j, x in zip(nearest, batch):
+            self.counts[j] += 1
+            eta = 1.0 / self.counts[j]
+            self.centers[j] = (1.0 - eta) * self.centers[j] + eta * x
+        return self.centers
+
+
+def split_merge_k(points: np.ndarray, centers: np.ndarray, rng,
+                  *, k_min: int = 1, k_max: Optional[int] = None,
+                  split_factor: float = 2.0,
+                  merge_factor: float = 0.25) -> np.ndarray:
+    """Dynamic k: merge near-duplicate centers, split overloaded ones.
+
+    Merging collapses center pairs closer than ``merge_factor`` times the
+    median inter-center distance (count-weighted mean, down to `k_min`).
+    Splitting targets the cluster with the largest cost share while it
+    exceeds ``split_factor`` times the mean — its two replacement centers
+    come from the PR-3 k-means|| oversampling rounds
+    (`seeding.kmeans_parallel` over the cluster's members, the machinery
+    whose bias is analyzed by Makarychev et al., arXiv:2010.14487), up
+    to `k_max`.  Returns the new (k', d) center array.
+    """
+    from repro.core.seeding import kmeans_parallel
+
+    pts = np.asarray(points, dtype=np.float64)
+    ctrs = np.array(centers, dtype=np.float64)
+    k_max = len(ctrs) if k_max is None else int(k_max)
+
+    def _assign():
+        d2 = ((pts[:, None, :] - ctrs[None, :, :]) ** 2).sum(-1)
+        a = d2.argmin(axis=1)
+        return a, d2[np.arange(len(pts)), a]
+
+    # Merge pass.
+    while len(ctrs) > max(k_min, 1):
+        cd2 = ((ctrs[:, None, :] - ctrs[None, :, :]) ** 2).sum(-1)
+        iu = np.triu_indices(len(ctrs), k=1)
+        if iu[0].size == 0:
+            break
+        pair = np.argmin(cd2[iu])
+        i, j = iu[0][pair], iu[1][pair]
+        med = np.median(np.sqrt(cd2[iu]))
+        if np.sqrt(cd2[i, j]) >= merge_factor * max(med, 1e-300):
+            break
+        a, _ = _assign()
+        wi, wj = max((a == i).sum(), 1), max((a == j).sum(), 1)
+        ctrs[i] = (wi * ctrs[i] + wj * ctrs[j]) / (wi + wj)
+        ctrs = np.delete(ctrs, j, axis=0)
+
+    # Split pass.
+    while len(ctrs) < k_max:
+        a, d2min = _assign()
+        cost = np.bincount(a, weights=d2min, minlength=len(ctrs))
+        worst = int(np.argmax(cost))
+        if cost[worst] <= split_factor * max(cost.mean(), 1e-300):
+            break
+        members = pts[a == worst]
+        if len(members) < 2:
+            break
+        res = kmeans_parallel(members, 2, rng, rounds=2)
+        ctrs = np.vstack([np.delete(ctrs, worst, axis=0), res.centers])
+    return ctrs
+
+
+class StreamingController:
+    """Ties a streaming plan to the drift/refine/reseed policy.
+
+    ``ingest(points)`` extends the stream, refines the centers with one
+    mini-batch step, measures the clustering cost of the refined centers
+    over the live rows, and — only when the `DriftDetector` declares
+    degradation — triggers a cheap reseed (`refit` on the patched
+    artifacts: solve-only, no re-prepare).  ``adapt_k()`` runs the
+    split/merge pass and reports the suggested k.
+    """
+
+    def __init__(self, plan, points, *, seed: Optional[int] = None,
+                 drift: Optional[DriftPolicy] = None):
+        self.plan = plan
+        self.prepared = plan.prepare_streaming(points)
+        self.result = plan.fit_prepared(self.prepared, seed=seed)
+        self.centers = np.asarray(self.result.centers, dtype=np.float64)
+        self.detector = DriftDetector(drift)
+        self.detector.observe_fit(float(self.result.cost))
+        self.refiner = MiniBatchRefiner(self.centers)
+        self.reseeds = 0
+        self._base_seed = plan.cluster.seed if seed is None else int(seed)
+
+    def cost_now(self) -> float:
+        """Clustering cost of the current centers over the live rows."""
+        from repro.core.seeding import clustering_cost
+
+        return float(clustering_cost(
+            self.prepared.streaming.live_points(), self.centers))
+
+    def ingest(self, points, *, retire=None) -> dict:
+        """Extend (and optionally retire), refine, detect, maybe reseed."""
+        self.plan.extend(points, prepared=self.prepared)
+        if retire is not None and len(retire):
+            self.plan.retire(retire, prepared=self.prepared)
+        self.centers = self.refiner.step(points).copy()
+        cost = self.cost_now()
+        drifted = self.detector.observe(cost)
+        if drifted:
+            self.reseed()
+        return {"cost": cost, "ratio": self.detector.ratio,
+                "drifted": drifted, "reseeds": self.reseeds,
+                "live": self.prepared.streaming.live_count}
+
+    def reseed(self) -> None:
+        """Cheap reseed: refit on the patched artifacts (solve-only)."""
+        self.reseeds += 1
+        seed = int(np.random.default_rng(
+            (self._base_seed, self.reseeds)).integers(2 ** 31))
+        self.result = self.plan.fit_prepared(self.prepared, seed=seed)
+        self.centers = np.asarray(self.result.centers, dtype=np.float64)
+        self.refiner = MiniBatchRefiner(self.centers)
+        self.detector.observe_fit(float(self.result.cost))
+
+    def adapt_k(self, *, k_min: int = 1,
+                k_max: Optional[int] = None) -> np.ndarray:
+        """Split/merge pass over the live rows; returns new centers."""
+        rng = np.random.default_rng(
+            (self._base_seed, self.reseeds, self.prepared.streaming
+             .generation))
+        self.centers = split_merge_k(
+            self.prepared.streaming.live_points(), self.centers, rng,
+            k_min=k_min, k_max=k_max)
+        return self.centers
+
+
+# ---------------------------------------------------------------------------
+# Registration: attach the ops to the already-registered BackendImpls.
+# ---------------------------------------------------------------------------
+
+_DEVICE_OPS = StreamingOps(prepare=_dev_prepare, extend=_dev_extend,
+                           retire=_dev_retire, solve=_dev_solve,
+                           native=True)
+_CPU_OPS = StreamingOps(prepare=_cpu_prepare, extend=_cpu_extend,
+                        retire=_cpu_retire, solve=_cpu_solve, native=True)
+_SHARDED_OPS = StreamingOps(prepare=_sh_prepare, extend=_sh_extend,
+                            retire=_sh_retire, solve=_sh_solve,
+                            native=False)
+
+
+def _attach() -> None:
+    # The backend modules must have registered their impls first; the
+    # facade (repro.core.api) imports them before this module.
+    ops_by_backend = {"cpu": _CPU_OPS, "device": _DEVICE_OPS,
+                      "sharded": _SHARDED_OPS}
+    for name in ("rejection", "fastkmeans++"):
+        spec = registry.SEEDER_SPECS.get(name)
+        if spec is None:
+            continue
+        for backend, ops in ops_by_backend.items():
+            impl = spec.impls.get(backend)
+            if impl is not None and impl.streaming is None:
+                spec.impls[backend] = dataclasses.replace(
+                    impl, streaming=ops)
+
+
+_attach()

@@ -312,6 +312,88 @@ class ClusterFrontend:
             self._lock.notify_all()
         return ticket
 
+    def submit_extend(self, points, *, prepared: Any = None,
+                      seed: Optional[int] = None, tag: Any = None,
+                      deadline: Optional[float] = None,
+                      tenant: Optional[str] = None) -> FitTicket:
+        """Admit one streaming extend-then-refit request (no coalescing).
+
+        Streaming mutations are one-shot and ordered, so they bypass
+        the hold-and-batch window entirely: the request goes straight
+        to `ClusterEngine.submit_extend`, which applies the extend to
+        the streaming `PreparedData` on the solve worker (in submission
+        order) and refits.  Admission bookkeeping matches `submit` —
+        quarantine via `validate_points` (no ``k`` floor: an extend
+        batch may be smaller than k), tenant quota/accounting when an
+        ``admission`` hook is installed — and the settled ticket lands
+        in the frontend ledger (``extends`` counts these separately).
+        ``points=None`` refits the stream without mutating it (requires
+        an explicit ``prepared`` handle; the drift-reseed path).
+        """
+        if deadline is not None and deadline <= 0:
+            raise ValueError(f"deadline must be > 0 seconds, got {deadline}")
+        if tenant is None and self.admission is not None:
+            tenant = "default"
+        if points is not None and self.validate_inputs:
+            try:
+                validate_points(points)
+            except InvalidInputError:
+                with self._lock:
+                    self._stats["quarantined"] += 1
+                    self._bump_tenant(tenant, "quarantined")
+                raise
+        if self.admission is not None:
+            try:
+                self.admission.admit(tenant)
+            except BaseException:
+                with self._lock:
+                    self._stats["throttled"] += 1
+                    self._bump_tenant(tenant, "throttled")
+                raise
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("frontend is closed")
+            self._stats["submitted"] += 1
+            self._stats["extends"] += 1
+            self._bump_tenant(tenant, "submitted")
+            self._inflight += 1
+        ticket = None
+        try:
+            ticket = self._engine.submit_extend(
+                points, prepared=prepared, seed=seed, tag=tag,
+                deadline=deadline)
+        finally:
+            if ticket is None:
+                with self._lock:
+                    self._stats["failed"] += 1
+                    self._bump_tenant(tenant, "failed")
+                    self._inflight -= 1
+                    self._lock.notify_all()
+        if self.admission is not None:
+            self.admission.on_dispatch(tenant, 1)
+        ticket.add_done_callback(
+            lambda t, tenant=tenant: self._settle_extend(t, tenant))
+        return ticket
+
+    def _settle_extend(self, ticket: FitTicket,
+                       tenant: Optional[str]) -> None:
+        """Ledger a finished extend ticket (done-callback; no fan-out)."""
+        exc = ticket.exception()
+        with self._lock:
+            if exc is None:
+                self._stats["completed"] += 1
+                self._bump_tenant(tenant, "completed")
+            elif isinstance(exc, cf.CancelledError):
+                self._stats["cancelled"] += 1
+                self._bump_tenant(tenant, "cancelled")
+            else:
+                self._stats["failed"] += 1
+                self._bump_tenant(tenant, "failed")
+                if isinstance(exc, DeadlineExceededError):
+                    self._stats["deadline_expired"] += 1
+            self._inflight -= 1
+            self._lock.notify_all()
+
     def _bump_tenant(self, tenant: Optional[str], counter: str,
                      queue_wait: Optional[float] = None) -> None:
         """Per-tenant ledger bump (lock held by the caller)."""
@@ -346,6 +428,16 @@ class ClusterFrontend:
     def as_completed(self, tickets: Iterable[FitTicket]) -> Iterator[FitTicket]:
         """Yield tickets as their results land (completion order)."""
         return self._engine.as_completed(tickets)
+
+    @property
+    def engine(self) -> ClusterEngine:
+        """The backing `ClusterEngine` (owned or shared).
+
+        The wire server uses this to reach the shared `ClusterPlan`
+        (stream creation needs `plan.prepare_streaming`); a shared
+        engine is still never closed by the frontend.
+        """
+        return self._engine
 
     # -- batcher ------------------------------------------------------------
 
@@ -553,7 +645,7 @@ class ClusterFrontend:
             s: dict = dict(self._stats)
             for key in ("submitted", "completed", "failed", "cancelled",
                         "rejected", "quarantined", "deadline_expired",
-                        "lanes", "lane_members", "coalesced"):
+                        "lanes", "lane_members", "coalesced", "extends"):
                 s.setdefault(key, 0)
             s["held"] = self._held_count
             s["inflight"] = self._inflight

@@ -54,6 +54,7 @@ from repro.core import (
 from repro.serving.net.protocol import (
     ChunkFrame,
     ErrorFrame,
+    ExtendFrame,
     FrameReader,
     ProtocolError,
     ResultFrame,
@@ -276,6 +277,51 @@ class ClusterClient:
             head = SubmitFrame.from_points(
                 rid, arr, k=k, seed=seed, deadline=deadline,
                 priority=priority, tenant=tenant, streamed=True)
+            frames = [head.encode()]
+            raw = (arr.astype("<f4", copy=False) if arr.dtype == np.float32
+                   else arr.astype("<f8")).tobytes()
+            for off in range(0, len(raw), self.chunk_bytes):
+                chunk = raw[off:off + self.chunk_bytes]
+                frames.append(ChunkFrame(
+                    rid, chunk,
+                    last=off + self.chunk_bytes >= len(raw)).encode())
+        return self._register_as(rid, frames)
+
+    def extend(self, points, *, stream: str = "default",
+               seed: Optional[int] = None,
+               deadline: Optional[float] = None,
+               tenant: Optional[str] = None) -> int:
+        """Send one streaming extend-then-refit; returns its request id.
+
+        ``stream`` names the server-side stream: the first `extend` for
+        a label creates it from this batch (and the refit's RESULT
+        comes back like any fit); later calls append to it in server
+        admission order.  ``points=None`` refits the stream without
+        appending (the remote drift-reseed nudge; the stream must
+        already exist).  Unlike `submit`, an extend is a *mutation* —
+        the reconnect-and-resend retry loop makes it at-least-once, so
+        a replay after a lost RESULT can append the batch twice (see
+        docs/streaming.md before retrying extends aggressively).
+        Large batches stream as chunks exactly like `submit`.
+        """
+        tenant = self.tenant if tenant is None else tenant
+        rid = next(self._ids)
+        if points is None:
+            head = ExtendFrame(request_id=rid, stream=stream, n=0, d=0,
+                               dtype="f64", seed=seed, deadline=deadline,
+                               tenant=tenant)
+            return self._register_as(rid, [head.encode()])
+        arr = np.ascontiguousarray(points)
+        nbytes = arr.size * (4 if arr.dtype == np.float32 else 8)
+        if nbytes <= self.stream_threshold_bytes:
+            head = ExtendFrame.from_points(
+                rid, stream, arr, seed=seed, deadline=deadline,
+                tenant=tenant)
+            frames = [head.encode()]
+        else:
+            head = ExtendFrame.from_points(
+                rid, stream, arr, seed=seed, deadline=deadline,
+                tenant=tenant, streamed=True)
             frames = [head.encode()]
             raw = (arr.astype("<f4", copy=False) if arr.dtype == np.float32
                    else arr.astype("<f8")).tobytes()

@@ -20,6 +20,12 @@ Frame types:
 * ``SUBMIT`` — dtype+shape header (n, d, f32/f64), optional k/seed
   overrides, deadline seconds, priority, tenant, and — unless the
   ``streamed`` flag is set — the raw point buffer inline.
+* ``EXTEND`` — one streaming append-then-refit against a named
+  server-side stream (`docs/streaming.md`): the stream label plus the
+  same dtype+shape header and point buffer as ``SUBMIT`` (chunked
+  uploads reuse ``STREAM_CHUNK``).  The first ``EXTEND`` for a label
+  creates the stream from its batch; an ``n == 0`` frame refits the
+  stream without mutating it (the remote drift-reseed nudge).
 * ``STREAM_CHUNK`` — one fragment of a streamed point upload (large
   datasets cross the wire in bounded chunks instead of one giant frame);
   the fragment flagged ``last`` completes the upload.
@@ -54,12 +60,14 @@ from repro.core.resilience import WIRE_PROTOCOL_ERROR
 
 __all__ = [
     "FRAME_ERROR",
+    "FRAME_EXTEND",
     "FRAME_RESULT",
     "FRAME_STATS",
     "FRAME_STREAM_CHUNK",
     "FRAME_SUBMIT",
     "ChunkFrame",
     "ErrorFrame",
+    "ExtendFrame",
     "FrameReader",
     "MAX_FRAME_BYTES",
     "PROTOCOL_VERSION",
@@ -84,6 +92,7 @@ FRAME_RESULT = 2
 FRAME_STREAM_CHUNK = 3
 FRAME_STATS = 4
 FRAME_ERROR = 5
+FRAME_EXTEND = 6
 
 _HEADER = struct.Struct("<BBQ")          # version, frame type, request id
 _LENGTH = struct.Struct("<I")
@@ -325,6 +334,104 @@ class SubmitFrame:
         return frame
 
 
+_EXTEND_FIXED = struct.Struct("<BBIIBqd")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExtendFrame:
+    """One streaming append-then-refit against a named server stream.
+
+    Layout mirrors `SubmitFrame` (dtype+shape header, inline or chunked
+    point buffer) with the k/priority fields replaced by the ``stream``
+    label the server keys its prepared-stream registry on.  ``n == 0``
+    carries no points and asks for a refit of the stream as-is.
+    Extends are applied in admission order and are **at-least-once**
+    under client replay (a reconnect can re-apply a delivered extend);
+    see docs/streaming.md for the mutation contract.
+    """
+
+    request_id: int
+    stream: str
+    n: int
+    d: int
+    dtype: str                       # "f32" | "f64"
+    payload: bytes = b""
+    seed: Optional[int] = None
+    deadline: Optional[float] = None
+    tenant: str = "default"
+    streamed: bool = False
+
+    def expected_bytes(self) -> int:
+        """Total point-buffer size the header promises."""
+        return self.n * self.d * _NP_DTYPES[self.dtype].itemsize
+
+    def points(self, payload: Optional[bytes] = None) -> np.ndarray:
+        """The (n, d) point array (``payload`` overrides for streamed)."""
+        raw = self.payload if payload is None else payload
+        if len(raw) != self.expected_bytes():
+            raise ProtocolError(
+                f"point buffer is {len(raw)} bytes; header promised "
+                f"{self.expected_bytes()} ({self.n}x{self.d} {self.dtype})")
+        return np.frombuffer(raw, dtype=_NP_DTYPES[self.dtype]).reshape(
+            self.n, self.d)
+
+    @classmethod
+    def from_points(cls, request_id: int, stream: str, points, *,
+                    seed: Optional[int] = None,
+                    deadline: Optional[float] = None,
+                    tenant: str = "default",
+                    streamed: bool = False) -> "ExtendFrame":
+        """Build a frame from an array (f32 kept, everything else f64)."""
+        arr = np.ascontiguousarray(points)
+        if arr.ndim != 2:
+            raise ProtocolError(
+                f"points must be 2-D (n, d), got shape {arr.shape}")
+        if arr.dtype != np.float32:
+            arr = arr.astype("<f8")
+        else:
+            arr = arr.astype("<f4", copy=False)
+        dtype = "f32" if arr.dtype.itemsize == 4 else "f64"
+        return cls(request_id=request_id, stream=stream, n=arr.shape[0],
+                   d=arr.shape[1], dtype=dtype,
+                   payload=b"" if streamed else arr.tobytes(),
+                   seed=seed, deadline=deadline, tenant=tenant,
+                   streamed=streamed)
+
+    def encode(self) -> bytes:
+        """The complete wire frame (length prefix included)."""
+        flags = _SUBMIT_FLAG_STREAMED if self.streamed else 0
+        fixed = _EXTEND_FIXED.pack(
+            flags, _DTYPE_CODES[self.dtype], self.n, self.d,
+            0 if self.seed is None else 1,
+            0 if self.seed is None else int(self.seed),
+            -1.0 if self.deadline is None else float(self.deadline))
+        body = fixed + _pack_str(self.stream) + _pack_str(self.tenant) + \
+            (b"" if self.streamed else self.payload)
+        return _frame(FRAME_EXTEND, self.request_id, body)
+
+    @classmethod
+    def _decode(cls, request_id: int, body: _Body) -> "ExtendFrame":
+        (flags, dtype_code, n, d, has_seed, seed,
+         deadline) = body.unpack(_EXTEND_FIXED)
+        dtype = _DTYPE_NAMES.get(dtype_code)
+        if dtype is None:
+            raise ProtocolError(f"unknown dtype code {dtype_code}")
+        stream = _unpack_str(body)
+        tenant = _unpack_str(body)
+        streamed = bool(flags & _SUBMIT_FLAG_STREAMED)
+        payload = b"" if streamed else body.rest()
+        frame = cls(request_id=request_id, stream=stream, n=n, d=d,
+                    dtype=dtype, payload=payload,
+                    seed=seed if has_seed else None,
+                    deadline=None if deadline < 0 else deadline,
+                    tenant=tenant, streamed=streamed)
+        if not streamed and len(payload) != frame.expected_bytes():
+            raise ProtocolError(
+                f"inline point buffer is {len(payload)} bytes; header "
+                f"promised {frame.expected_bytes()}")
+        return frame
+
+
 @dataclasses.dataclass(frozen=True)
 class ChunkFrame:
     """One fragment of a streamed point upload (``last`` completes it)."""
@@ -453,6 +560,7 @@ _DECODERS = {
     FRAME_STREAM_CHUNK: ChunkFrame._decode,
     FRAME_STATS: StatsFrame._decode,
     FRAME_ERROR: ErrorFrame._decode,
+    FRAME_EXTEND: ExtendFrame._decode,
 }
 
 

@@ -48,6 +48,7 @@ from repro.serving.frontend import ClusterFrontend
 from repro.serving.net.protocol import (
     ChunkFrame,
     ErrorFrame,
+    ExtendFrame,
     FrameReader,
     ProtocolError,
     ResultFrame,
@@ -175,6 +176,12 @@ class ClusterServer:
             self.admission = admission
         self._clock = clock
         self._lock = threading.Lock()
+        # Stream label -> streaming PreparedData handle.  Get-or-create
+        # happens under one lock so two connections racing the same
+        # label build one stream; creation (`prepare_streaming`) runs on
+        # the creating connection's reader thread, a one-time cost.
+        self._streams: dict = {}
+        self._slock = threading.Lock()
         self._counters: collections.Counter = collections.Counter()
         self._breakdown = {"queue_wait_s": 0.0, "solve_s": 0.0,
                            "network_s": 0.0}
@@ -232,7 +239,7 @@ class ClusterServer:
     def _handle(self, conn: _Connection, staging: dict, frame) -> None:
         """Dispatch one decoded frame (reader thread only)."""
         rid = frame.request_id
-        if isinstance(frame, SubmitFrame):
+        if isinstance(frame, (SubmitFrame, ExtendFrame)):
             if frame.streamed:
                 if rid in staging:
                     raise ProtocolError(
@@ -240,13 +247,13 @@ class ClusterServer:
                         f"mid-stream")
                 staging[rid] = [frame, bytearray()]
                 return
-            self._admit(conn, frame, frame.points())
+            self._dispatch_points(conn, frame, frame.points())
         elif isinstance(frame, ChunkFrame):
             st = staging.get(rid)
             if st is None:
                 raise ProtocolError(
                     f"request {rid}: STREAM_CHUNK without a streamed "
-                    f"SUBMIT header")
+                    f"SUBMIT/EXTEND header")
             head, buf = st
             buf.extend(frame.payload)
             if len(buf) > head.expected_bytes():
@@ -255,7 +262,7 @@ class ClusterServer:
                     f"({len(buf)} > {head.expected_bytes()} bytes)")
             if frame.last:
                 del staging[rid]
-                self._admit(conn, head, head.points(bytes(buf)))
+                self._dispatch_points(conn, head, head.points(bytes(buf)))
         elif isinstance(frame, StatsFrame):
             if frame.payload is not None:
                 raise ProtocolError(
@@ -270,6 +277,62 @@ class ClusterServer:
                 f"clients must not send {type(frame).__name__}")
 
     # -- admission / delivery ------------------------------------------------
+
+    def _dispatch_points(self, conn: _Connection, frame, points) -> None:
+        """Route one complete header+buffer to its admission path."""
+        if isinstance(frame, ExtendFrame):
+            self._admit_extend(conn, frame, points)
+        else:
+            self._admit(conn, frame, points)
+
+    def _admit_extend(self, conn: _Connection, frame: ExtendFrame,
+                      points) -> None:
+        """Feed one complete EXTEND into the frontend; arrange delivery.
+
+        The first EXTEND for a stream label creates the server-side
+        stream from its batch (`ClusterPlan.prepare_streaming`, on this
+        reader thread) and refits it; later EXTENDs append in admission
+        order.  Duplicate-id handling matches SUBMIT — but note an
+        extend is a *mutation*, so a client replay after a delivered
+        result re-applies it (at-least-once; docs/streaming.md).
+        """
+        rid = frame.request_id
+        if not conn.try_begin(rid):
+            with self._lock:
+                self._counters["duplicates_dropped"] += 1
+            return
+        t_recv = self._clock()
+        try:
+            pts = None if frame.n == 0 else points
+            with self._slock:
+                prep = self._streams.get(frame.stream)
+                if prep is None:
+                    if pts is None:
+                        raise ValueError(
+                            f"stream {frame.stream!r} does not exist; the "
+                            f"creating EXTEND must carry points (n > 0)")
+                    plan = self._frontend.engine.plan_for(
+                        self._frontend.cluster)
+                    prep = plan.prepare_streaming(pts)
+                    self._streams[frame.stream] = prep
+                    pts = None       # creation consumed the batch
+            ticket = self._frontend.submit_extend(
+                pts, prepared=prep, seed=frame.seed,
+                deadline=frame.deadline, tenant=frame.tenant)
+        except BaseException as e:  # noqa: BLE001 — typed wire refusal
+            conn.finish(rid)
+            with self._lock:
+                self._counters["errors_sent"] += 1
+            conn.send_error(rid, e)
+            return
+        with self._lock:
+            self._counters["requests_admitted"] += 1
+            self._counters["extends_admitted"] += 1
+        submitted_at = self._clock()
+        ticket.add_done_callback(
+            lambda t, conn=conn, rid=rid, t_recv=t_recv,
+            submitted_at=submitted_at:
+                self._deliver(conn, rid, t_recv, submitted_at, t))
 
     def _admit(self, conn: _Connection, frame: SubmitFrame, points) -> None:
         """Feed one complete SUBMIT into the frontend; arrange delivery."""
@@ -358,10 +421,12 @@ class ClusterServer:
             net: dict = dict(self._counters)
             net["breakdown"] = dict(self._breakdown)
         for key in ("connections_total", "requests_admitted",
-                    "results_sent", "errors_sent", "duplicates_dropped",
-                    "bytes_in"):
+                    "extends_admitted", "results_sent", "errors_sent",
+                    "duplicates_dropped", "bytes_in"):
             net.setdefault(key, 0)
         net["connections_active"] = len(self._conns)
+        with self._slock:
+            net["streams"] = len(self._streams)
         s["net"] = net
         if self.admission is not None and hasattr(self.admission, "stats"):
             s["tenancy"] = self.admission.stats()

@@ -25,6 +25,15 @@ repetitions are tested against the exact law with a chi-square test on
 mass-balanced bins (expected count >= ~40 per bin) at a
 Bonferroni-adjusted threshold, plus a coarser total-variation bound.
 Every seed is fixed, so the suite is deterministic.
+
+The streaming section (ISSUE 10) re-proves the same law over a *mutated*
+stream: each backend prepares part of the fixture, extends the rest,
+then extends 1024 all-duplicate rows (forcing capacity growth past a
+``shape_bucket`` boundary) and retires every duplicate — so the live set
+is exactly the fixture again, but reached through the incremental
+extend/retire path (scatter-patched leaf weights, frozen pow2 geometry,
+sharded re-shard-on-solve).  If the patched artifacts deviate from a
+fresh build in law, the chi-square/TV gates catch it here.
 """
 
 import functools
@@ -39,8 +48,9 @@ N, D = 96, 4
 R = 360                     # seeded repetitions per backend
 BINS = 8
 ALPHA = 0.01
-# Bonferroni over the whole suite: 3 backends x 2 chi-square tests.
-N_TESTS = 6
+# Bonferroni over the whole suite: 3 backends x 2 chi-square tests, for
+# both the static draws and the mutated-stream draws.
+N_TESTS = 12
 TV_BOUND = 0.15             # binned total variation, ~2.3x the H0 mean
 SEEDER_KW = dict(lsh_r=1e6, c=1.2, resolution=0.05)
 BACKENDS = {
@@ -181,6 +191,93 @@ def test_backends_pairwise_close():
         for b in names[i + 1:]:
             tv = 0.5 * np.abs(hists[a] - hists[b]).sum()
             assert tv < 2 * TV_BOUND, (a, b, tv)
+
+
+# -- streaming conformance (ISSUE 10) ---------------------------------------
+
+_STREAM_BACKENDS = {
+    "cpu": {},
+    "device": {},
+    "sharded": {"tile": 32},
+}
+
+
+@functools.lru_cache(maxsize=None)
+def _stream_draws(backend: str) -> np.ndarray:
+    """First-two-center draws from a stream mutated back to the fixture.
+
+    History: prepare rows 0..63, extend rows 64..95 (live = fixture),
+    extend 1024 duplicate rows (all-duplicate insert; 96 + 1024 rows
+    crosses the 1024-row capacity bucket, forcing a capacity grow), then
+    retire every duplicate.  Global row ids are stable, so the returned
+    indices land directly in 0..N-1 and the static laws apply verbatim.
+    """
+    from repro.core import ClusterPlan, ClusterSpec, ExecutionSpec
+
+    pts = _fixture()
+    spec = ClusterSpec(
+        k=2, seeder="rejection", c=SEEDER_KW["c"], quantize=False, seed=0,
+        options={"lsh_r": SEEDER_KW["lsh_r"],
+                 "resolution": SEEDER_KW["resolution"]})
+    plan = ClusterPlan(spec, ExecutionSpec(
+        backend=backend, **_STREAM_BACKENDS[backend]))
+    prep = plan.prepare_streaming(pts[:64])
+    plan.extend(pts[64:], prepared=prep)
+    dup = pts[np.random.default_rng(777).integers(0, N, size=1024)]
+    plan.extend(dup, prepared=prep)
+    plan.retire(np.arange(N, N + 1024), prepared=prep)
+    assert prep.streaming.live_count == N
+    np.testing.assert_array_equal(prep.streaming.live_ids(), np.arange(N))
+
+    def one(s: int) -> np.ndarray:
+        res = plan.fit_prepared(prep, seed=10_000 + s)
+        return np.asarray(res.indices, dtype=np.int64)
+
+    out = np.empty((R, 2), dtype=np.int64)
+    # Same rep-0 warm / steady-state discipline as the static draws: the
+    # mutated stream must refit as a pure cache hit too.
+    out[0] = one(0)
+    with no_retrace():
+        for s in range(1, R):
+            out[s] = one(s)
+    plan.forget(prep)
+    assert (out >= 0).all() and (out < N).all()   # retired rows never drawn
+    return out
+
+
+@pytest.fixture(scope="module", params=sorted(_STREAM_BACKENDS))
+def stream_draws(request):
+    return request.param, _stream_draws(request.param)
+
+
+def test_streaming_first_center_uniform(stream_draws):
+    """After the extend/retire history, center 0 is still uniform on the
+    live rows (the retired duplicates carry exactly zero mass)."""
+    backend, draws = stream_draws
+    uniform, _ = _exact_laws(_fixture())
+    assignment = _mass_balanced_bins(uniform, BINS)
+    counts = _binned(np.bincount(draws[:, 0], minlength=N).astype(float),
+                     assignment, BINS)
+    expected = _binned(uniform, assignment, BINS) * R
+    stat = _chi2_stat(counts, expected)
+    crit = _chi2_isf(ALPHA / N_TESTS, BINS - 1)
+    assert stat < crit, (backend, stat, crit)
+
+
+def test_streaming_second_center_exact_d2(stream_draws):
+    """After the extend/retire history, center 1's marginal still equals
+    the exact D^2 law over the live rows (chi-square + binned TV)."""
+    backend, draws = stream_draws
+    _, marg2 = _exact_laws(_fixture())
+    assignment = _mass_balanced_bins(marg2, BINS)
+    counts = _binned(np.bincount(draws[:, 1], minlength=N).astype(float),
+                     assignment, BINS)
+    expected = _binned(marg2, assignment, BINS) * R
+    stat = _chi2_stat(counts, expected)
+    crit = _chi2_isf(ALPHA / N_TESTS, BINS - 1)
+    assert stat < crit, (backend, stat, crit)
+    tv = 0.5 * np.abs(counts / R - expected / R).sum()
+    assert tv < TV_BOUND, (backend, tv)
 
 
 def test_collision_fixture_assumption():

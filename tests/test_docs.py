@@ -101,7 +101,8 @@ def test_core_public_symbols_have_docstrings():
 @pytest.mark.parametrize("modname", [
     "repro.core", "repro.core.plan", "repro.core.registry",
     "repro.core.batch_schedule", "repro.core.engine", "repro.core.tracing",
-    "repro.core.resilience", "repro.serving.frontend",
+    "repro.core.resilience", "repro.core.streaming",
+    "repro.serving.frontend",
     "repro.serving.net", "repro.serving.net.protocol",
     "repro.serving.net.server", "repro.serving.net.client",
     "repro.serving.net.tenancy",
@@ -114,20 +115,23 @@ def test_module_docstrings(modname):
 
 
 def test_plan_engine_registry_methods_documented():
-    from repro.core import ClusterEngine, ClusterPlan, FitResult, FitTicket
+    from repro.core import (
+        ClusterEngine, ClusterPlan, FitResult, FitTicket,
+        StreamingController)
     from repro.core.registry import BackendImpl, SeederSpec
     from repro.serving.frontend import ClusterFrontend
     from repro.serving.net import (
         ClusterClient, ClusterServer, TenantPolicy, TenantScheduler)
     from repro.serving.net.protocol import (
-        ErrorFrame, FrameReader, ResultFrame, SubmitFrame)
+        ErrorFrame, ExtendFrame, FrameReader, ResultFrame, SubmitFrame)
 
     undocumented = []
     for cls in (ClusterPlan, ClusterEngine, FitResult, FitTicket,
                 BackendImpl, SeederSpec, ClusterFrontend,
+                StreamingController,
                 ClusterClient, ClusterServer, TenantPolicy,
-                TenantScheduler, ErrorFrame, FrameReader, ResultFrame,
-                SubmitFrame):
+                TenantScheduler, ErrorFrame, ExtendFrame, FrameReader,
+                ResultFrame, SubmitFrame):
         for name, member in _public_methods(cls):
             fn = member.fget if isinstance(member, property) else member
             if not (getattr(fn, "__doc__", "") or "").strip():

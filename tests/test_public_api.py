@@ -27,6 +27,8 @@ EXPECTED_ALL = sorted([
     "ClusterPlan",
     "ClusterSpec",
     "DeadlineExceededError",
+    "DriftDetector",
+    "DriftPolicy",
     "ExecutionSpec",
     "FaultPlan",
     "FitResult",
@@ -35,6 +37,7 @@ EXPECTED_ALL = sorted([
     "InvalidInputError",
     "KMeans",
     "KMeansConfig",
+    "MiniBatchRefiner",
     "MultiTreeEmbedding",
     "MultiTreeSampler",
     "PreparedData",
@@ -47,6 +50,9 @@ EXPECTED_ALL = sorted([
     "SeederSpec",
     "SeedingResult",
     "ServiceUnavailableError",
+    "StreamState",
+    "StreamingController",
+    "StreamingOps",
     "TRACE_COUNTS",
     "afkmc2",
     "assign",
@@ -70,6 +76,7 @@ EXPECTED_ALL = sorted([
     "rejection_sampling",
     "resolve_seeder",
     "shape_bucket",
+    "split_merge_k",
     "uniform_sampling",
     "validate_points",
 ])
@@ -78,6 +85,13 @@ EXPECTED_ALL = sorted([
 EXPECTED_SIGNATURES = {
     "prepare": "(self, points) -> 'ClusterPlan'",
     "prepare_data": "(self, points) -> 'PreparedData'",
+    "prepare_streaming": "(self, points) -> 'PreparedData'",
+    "extend": "(self, points, *, "
+              "prepared: 'Optional[PreparedData]' = None) "
+              "-> 'PreparedData'",
+    "retire": "(self, indices, *, "
+              "prepared: 'Optional[PreparedData]' = None) "
+              "-> 'PreparedData'",
     "fit": "(self, points=None, *, seed: 'Optional[int]' = None) "
            "-> 'FitResult'",
     "fit_prepared": "(self, prepared: 'PreparedData', *, "
@@ -98,6 +112,12 @@ EXPECTED_ENGINE_SIGNATURES = {
               "deadline: 'Optional[float]' = None, "
               "retry: 'Optional[RetryPolicy]' = None) "
               "-> 'FitTicket'",
+    "submit_extend": "(self, points, *, prepared=None, "
+                     "cluster: 'Optional[ClusterSpec]' = None, "
+                     "seed: 'Optional[int]' = None, tag: 'Any' = None, "
+                     "deadline: 'Optional[float]' = None, "
+                     "retry: 'Optional[RetryPolicy]' = None) "
+                     "-> 'FitTicket'",
     "map_fit": "(self, datasets: 'Sequence[Any]', *, "
                "cluster: 'Optional[ClusterSpec]' = None, "
                "seeds: 'Optional[Sequence[int]]' = None, "
